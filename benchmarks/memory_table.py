@@ -1,0 +1,82 @@
+"""Paper Tables V & VI + §II max-model-size motivation.
+
+Per-device weight/gradient/optimizer bytes for each scheme, on the paper's
+Frontier geometry (64 GB/GCD, 8 GCD/node) and on the TPU v5e target
+(16 GB/chip), plus the maximum trainable model size per scheme — reproducing
+the ZeRO++ 55B vs ZeRO-3 68B observation on 2 nodes (16 GCDs).
+"""
+from __future__ import annotations
+
+from repro.core.partition import (grad_memory_bytes, optimizer_memory_bytes,
+                                  preset, weight_memory_bytes)
+
+GB = 1 << 30
+
+
+def scheme_bytes(scheme: str, psi: int, n_nodes: int, gcds_per_node: int = 8):
+    sizes = {"data": n_nodes, "node": gcds_per_node // 2, "gcd": 2}
+    cfg = preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data",),
+                 l0_axes=("gcd",), axis_sizes=sizes)
+    w = weight_memory_bytes(cfg, psi)
+    g = grad_memory_bytes(cfg, psi) // 2        # paper counts fp16 grads
+    os_ = optimizer_memory_bytes(cfg, psi)
+    return dict(weights=w, grads=g, optimizer=os_, total=w + g + os_)
+
+
+def max_model_size(scheme: str, n_nodes: int, mem_per_gcd: float,
+                   gcds_per_node: int = 8) -> float:
+    """Largest psi (params) whose training state fits (bisective search)."""
+    lo, hi = 1e6, 1e13
+    for _ in range(80):
+        mid = (lo + hi) / 2
+        if scheme_bytes(scheme, int(mid), n_nodes, gcds_per_node)["total"] \
+                <= mem_per_gcd:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def run(print_fn=print):
+    print_fn("\n== Paper Tables V/VI: per-GCD training-state bytes "
+             "(psi=20B params, 48 Frontier nodes) ==")
+    psi = 20_000_000_000
+    hdr = f"{'scheme':10s} {'weights':>10s} {'grads':>10s} {'optimizer':>10s} {'total':>10s}"
+    print_fn(hdr)
+    for scheme in ("zero1", "zero2", "zero3", "zeropp", "zero_topo"):
+        b = scheme_bytes(scheme, psi, 48)
+        print_fn(f"{scheme:10s} " + " ".join(
+            f"{b[k] / GB:9.2f}G" for k in ("weights", "grads", "optimizer",
+                                           "total")))
+
+    print_fn("\n== §II motivation: max model size, 2 Frontier nodes "
+             "(16 GCDs x 64 GB) ==")
+    for scheme in ("zero3", "zeropp", "zero_topo"):
+        m = max_model_size(scheme, 2, 64 * GB)
+        print_fn(f"{scheme:10s} ~{m / 1e9:5.1f}B params")
+    print_fn("(paper reports ~68B for ZeRO-3 vs ~55B for ZeRO++ — same "
+             "ordering and ~20% gap; zero_topo trades further memory for "
+             "constant-latency gathers and is the 36B-class row, Table V)")
+
+    print_fn("\n== TPU v5e adaptation: max model size, 16 GB/chip, 256 chips ==")
+    for scheme in ("zero3", "zeropp", "zero_topo"):
+        sizes = {"data": 16, "node": 8, "gcd": 2}   # 256 chips
+        cfg = preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data",),
+                     l0_axes=("gcd",), axis_sizes=sizes)
+        lo, hi = 1e6, 1e13
+        for _ in range(80):
+            mid = (lo + hi) / 2
+            w = weight_memory_bytes(cfg, int(mid))
+            g = grad_memory_bytes(cfg, int(mid)) // 2
+            o = optimizer_memory_bytes(cfg, int(mid))
+            if w + g + o <= 16 * GB:
+                lo = mid
+            else:
+                hi = mid
+        print_fn(f"{scheme:10s} ~{lo / 1e9:5.1f}B params "
+                 f"(weight-degree {cfg.w_degree})")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark harness entry (deliverable (d)): one benchmark per paper
+table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only comm_volume,memory_table
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ["memory_table", "comm_volume", "scaling_model", "quant_error",
+           "kernel_micro", "convergence"]
+PAPER_ARTIFACT = dict(
+    memory_table="Tables V/VI + §II max-model-size",
+    comm_volume="Tables VII/VIII",
+    scaling_model="Figs 7/8 (TFLOPS per GPU, scaling efficiency)",
+    quant_error="§III-C block-based quantization",
+    kernel_micro="kernel-level roofline",
+    convergence="Figs 9/10 (loss curves, quantized vs exact)",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--skip", default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    names = [n for n in names if n not in args.skip.split(",")]
+
+    import importlib
+    failures = []
+    for name in names:
+        print(f"\n{'=' * 72}\nBENCH {name}  [{PAPER_ARTIFACT[name]}]\n{'=' * 72}",
+              flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            ok = mod.run()
+            print(f"[{name}] {'PASS' if ok else 'CHECK'} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[{name}] FAIL ({time.time() - t0:.1f}s)", flush=True)
+    if failures:
+        print(f"\nFAILED: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Continuous batching demo: a slot-based server streams tokens for more
+requests than it has slots, admitting queued requests as others finish —
+no global flush when one request ends.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core.engine import TrainHparams, ZeroEngine  # noqa: E402
+from repro.launch.mesh import make_test_mesh, scheme_config  # noqa: E402
+from repro.models.registry import build_model, get_arch  # noqa: E402
+from repro.serve.scheduler import ContinuousBatcher, Request  # noqa: E402
+
+
+def main():
+    mesh = make_test_mesh(shape=(2, 2, 2), axes=("data", "node", "gcd"))
+    arch = get_arch("qwen2-0.5b").reduced()
+    model = build_model(arch)
+    cfg = scheme_config("zero_topo", mesh, quant_block=64)
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh, TrainHparams())
+    state = eng.init_state(jax.random.key(0))
+
+    cb = ContinuousBatcher(model, eng, mesh, n_slots=4, max_len=64,
+                           prompt_len=16)
+    rng = np.random.default_rng(0)
+    requests = [Request(rid=i,
+                        prompt=rng.integers(0, arch.vocab, 16).astype(np.int32),
+                        max_new=int(rng.integers(4, 12)))
+                for i in range(10)]
+    print(f"serving {len(requests)} requests on {cb.n_slots} slots "
+          f"(max_new 4..12)")
+    cb.run(state["primaries"], requests)
+    for r in requests:
+        assert r.done and len(r.out) <= r.max_new + 1
+        print(f"  req {r.rid}: {len(r.out):2d} tokens  {r.out[:8]}")
+    print("all requests completed with slot reuse (continuous batching)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""The ZeRO-topo weight path as custom-VJP primitives (paper Fig. 4).
+
+``zero_matmul``:
+  forward : INT8 block-quantized all-gather of the primary shard over the
+            **weight axes** (L0, fastest tier), dequant, matmul. The
+            forward-gathered quantized copy is sliced into the **secondary
+            partition** (ZeRO++: "retains a copy within the node") and saved
+            as the only weight residual.
+  backward: weights are re-materialized by an all-gather of the secondary
+            over the **secondary axes** (intra tier; never crosses the slow
+            tier). dX = g.Wt; the weight gradient is immediately
+            reduce-scattered with INT4 quantization via one all-to-all over
+            the weight axes, so the cotangent has primary-shard layout.
+
+Cross-replica reduction is deliberately *deferred*: primaries are marked
+device-varying (`pvary`) on entry, the engine performs the hierarchical
+stage-2 reduce-scatter and the inter-replica sync after micro-batch
+accumulation (paper §V-B/C).
+
+``zero_gather_q`` is the same machinery for weights consumed by non-matmul
+ops (embedding lookups, scan parameters): quantized gather forward, quantized
+reduce-scatter backward.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import collectives as col
+from .partition import LeafSpec, ZeroConfig, padded_flat_size
+
+
+def _dtype(cfg: ZeroConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pad_flat(x, padded: int):
+    return jnp.pad(x.reshape(-1), (0, padded - x.size))
+
+
+def _gather_full(primary, spec: LeafSpec, cfg: ZeroConfig):
+    """Forward gather -> (w_full(logical shape), sec_q, sec_s)."""
+    w_axes = cfg.axes.weight
+    n = spec.logical_size
+    if cfg.quantize_weights:
+        full_flat, qf, sf = col.quant_all_gather_int8(primary, w_axes, cfg, _dtype(cfg))
+        if cfg.axes.secondary is not None:
+            sec_q, sec_s = col.secondary_slice(qf, sf, cfg.axes.secondary, cfg)
+        else:
+            sec_q = sec_s = None
+    else:
+        full_flat = col.all_gather_flat(primary, w_axes).astype(_dtype(cfg))
+        sec_q = sec_s = None
+    w = lax.slice(full_flat, (0,), (n,)).reshape(spec.shape)
+    return w, sec_q, sec_s
+
+
+def _regather_bwd(primary, sec_q, sec_s, spec: LeafSpec, cfg: ZeroConfig):
+    """Backward weight re-materialization (secondary if present, else primary)."""
+    n = spec.logical_size
+    if sec_q is not None:
+        full_flat = col.gather_secondary(sec_q, sec_s, cfg.axes.secondary, cfg,
+                                         _dtype(cfg))
+    elif cfg.quantize_weights:
+        full_flat, _, _ = col.quant_all_gather_int8(primary, cfg.axes.weight,
+                                                    cfg, _dtype(cfg))
+    else:
+        full_flat = col.all_gather_flat(primary, cfg.axes.weight).astype(_dtype(cfg))
+    return lax.slice(full_flat, (0,), (n,)).reshape(spec.shape)
+
+
+def _grad_to_primary_shard(dw, spec: LeafSpec, cfg: ZeroConfig, primary_dtype):
+    """Stage-1: full dense weight grad -> primary-shard cotangent (INT4 a2a RS)."""
+    padded = padded_flat_size(spec.logical_size, cfg)
+    flat = _pad_flat(dw, padded)
+    shard = col.reduce_scatter_flat(flat, cfg.axes.weight, cfg,
+                                    out_dtype=jnp.float32)
+    return shard.astype(primary_dtype)
+
+
+def make_zero_matmul(spec: LeafSpec, cfg: ZeroConfig):
+    """Returns mm(x, primary) computing x @ W (or x @ W.T via transpose arg)."""
+    assert len(spec.shape) >= 2
+
+    @partial(jax.custom_vjp, nondiff_argnums=(2,))
+    def mm(x, primary, transpose=False):
+        w, _, _ = _gather_full(primary, spec, cfg)
+        return _apply(x, w, transpose)
+
+    def _apply(x, w, transpose):
+        w2 = w.reshape(-1, w.shape[-1])
+        if transpose:
+            w2 = w2.T
+        return jnp.matmul(x.astype(_dtype(cfg)), w2)
+
+    def fwd(x, primary, transpose):
+        w, sec_q, sec_s = _gather_full(primary, spec, cfg)
+        y = _apply(x, w, transpose)
+        if sec_q is None:
+            # no secondary: keep primary handle for re-gather (aliases state)
+            return y, (x, primary, None, None)
+        return y, (x, None, sec_q, sec_s)
+
+    def bwd(transpose, res, g):
+        x, primary, sec_q, sec_s = res
+        w = _regather_bwd(primary, sec_q, sec_s, spec, cfg)
+        w2 = w.reshape(-1, w.shape[-1])
+        if transpose:
+            w2 = w2.T
+        gx = jnp.matmul(g, w2.T).astype(x.dtype)
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+        dw2 = jnp.matmul(x2.T, g2)
+        if transpose:
+            dw2 = dw2.T
+        dw_shard = _grad_to_primary_shard(dw2.reshape(spec.shape), spec, cfg,
+                                          _dtype(cfg))
+        return gx, dw_shard
+
+    mm.defvjp(fwd, bwd)
+    return mm
+
+
+def make_zero_gather_q(spec: LeafSpec, cfg: ZeroConfig):
+    """Returns full(primary) -> dense logical tensor with the quantized path."""
+
+    @jax.custom_vjp
+    def full(primary):
+        w, _, _ = _gather_full(primary, spec, cfg)
+        return w
+
+    def fwd(primary):
+        w, _, _ = _gather_full(primary, spec, cfg)
+        return w, ()
+
+    def bwd(res, g):
+        del res
+        return (_grad_to_primary_shard(g, spec, cfg, _dtype(cfg)),)
+
+    full.defvjp(fwd, bwd)
+    return full
+
+
+def make_plain_gather(spec: LeafSpec, cfg: ZeroConfig):
+    """Small params: FP gather over weight axes; AD gives psum_scatter bwd."""
+    n = spec.logical_size
+
+    def full(primary):
+        flat = col.all_gather_flat(primary, cfg.axes.weight)
+        return lax.slice(flat, (0,), (n,)).reshape(spec.shape).astype(_dtype(cfg))
+
+    return full

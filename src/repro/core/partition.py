@@ -1,0 +1,219 @@
+"""Hierarchical partitioning: sharding degrees, slice assignment, presets.
+
+The paper's design reduces to one rule: each category of training state is
+sharded over a *prefix* of the bandwidth hierarchy,
+
+    weights  ->  W axes               (fastest links;   paper: GCD pair)
+    grads    ->  W + E axes           (intra tier;      paper: node, 8 GCDs)
+    optimizer->  W + E + R axes       (everything;      paper: all GCDs)
+
+with the AMSP dependency rule ``deg(os) >= deg(grad) >= deg(weight)`` holding
+by construction. Flat parameter storage uses a canonical slice hierarchy
+[W major, E, R minor]: the collective tuple order passed to
+all_gather/psum_scatter/all_to_all is always major-to-minor, which makes every
+stage's slice a contiguous refinement of the previous stage's slice (verified
+by tests/test_collectives.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+AxisTuple = tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class ZeroAxes:
+    """Per-category mesh axes, ordered major -> minor within each tuple."""
+    weight: AxisTuple          # L0: primary shard + fwd all-gather
+    extra_grad: AxisTuple      # E: additional gradient sharding (L1 minus L0)
+    replica: AxisTuple         # R: pure data-parallel replication (slowest)
+    secondary: AxisTuple | None = None  # secondary partition axes (ZeRO++).
+    # The secondary is sliced from the forward-gathered *full* quantized
+    # tensor (each member of the secondary group keeps 1/|S| of it), so any
+    # axis set works. None = no secondary partition: backward re-gathers the
+    # primary (paper's Sec-Degree=W row / plain ZeRO-3).
+
+    def __post_init__(self):
+        cats = (self.weight, self.extra_grad, self.replica)
+        flat = [a for c in cats for a in c]
+        assert len(set(flat)) == len(flat), f"axes must be disjoint: {cats}"
+        if self.secondary is not None:
+            for a in self.secondary:
+                assert a in flat, (a, self)
+
+    @property
+    def grad(self) -> AxisTuple:
+        return self.weight + self.extra_grad
+
+    @property
+    def all(self) -> AxisTuple:  # optimizer axes == all participating axes
+        return self.weight + self.extra_grad + self.replica
+
+
+@dataclass(frozen=True)
+class ZeroConfig:
+    axes: ZeroAxes
+    axis_sizes: tuple[tuple[str, int], ...]   # full mesh axis -> size
+    quantize_weights: bool = False      # INT8 block quant on weight all-gather
+    quantize_grads: bool = False        # INT4 a2a-based gradient reduce-scatter
+    quant_block: int = 512
+    cross_replica: str = "allreduce"    # paper: allreduce over R then select;
+    # "reduce_scatter": beyond-paper psum_scatter over R (half the volume)
+    quantize_update_gather: bool = False  # beyond-paper: INT8 update all-gather
+    impl: str = "jnp"                   # kernel impl (jnp | pallas | pallas_interpret)
+    compute_dtype: str = "bfloat16"
+    name: str = "custom"
+
+    def size(self, axes: AxisTuple) -> int:
+        d = dict(self.axis_sizes)
+        return math.prod(d[a] for a in axes) if axes else 1
+
+    @property
+    def w_degree(self) -> int:
+        return self.size(self.axes.weight)
+
+    @property
+    def g_degree(self) -> int:
+        return self.size(self.axes.grad)
+
+    @property
+    def os_degree(self) -> int:
+        return self.size(self.axes.all)
+
+    @property
+    def sec_degree(self) -> int | None:
+        return None if self.axes.secondary is None else self.size(self.axes.secondary)
+
+    def validate_dependency_rule(self) -> None:
+        """AMSP/paper §V: N_os*P_os >= N_g*P_g >= N_w*P_w."""
+        assert self.os_degree >= self.g_degree >= self.w_degree, self
+
+    def block_for(self, logical_size: int) -> int:
+        """Effective quantization block for a leaf: large leaves use the full
+        configured block; small leaves (norm scales, biases) shrink it so the
+        alignment padding (os_degree * block) never dwarfs the leaf."""
+        per_dev = -(-logical_size // self.os_degree)
+        b = 4
+        while b < per_dev and b < self.quant_block:
+            b *= 2
+        return b
+
+    def for_leaf(self, logical_size: int) -> "ZeroConfig":
+        b = self.block_for(logical_size)
+        return self if b == self.quant_block else \
+            dataclasses.replace(self, quant_block=b)
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def padded_flat_size(logical_size: int, cfg: ZeroConfig) -> int:
+    """Pad so every stage's shard is block-aligned.
+
+    padded % (D_total * block) == 0  =>  primary shard % (|E||R|*block) == 0,
+    grad shard % (|R|*block) == 0, optimizer shard % block == 0.
+    """
+    return round_up(max(logical_size, 1),
+                    cfg.os_degree * cfg.block_for(logical_size))
+
+
+# ---------------------------------------------------------------------------
+# Leaf specifications
+# ---------------------------------------------------------------------------
+
+MATMUL = "matmul"    # quantized gather + secondary + quantized grad RS (custom_vjp)
+GATHER_Q = "gather_q"  # quantized gather of full tensor (embeddings) (custom_vjp)
+PLAIN = "plain"      # small params: fp gather over W, AD reduce-scatter
+EXPERT = "expert"    # expert-parallel: sharded by computation, never gathered
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    name: str
+    shape: tuple[int, ...]          # logical (per-layer) shape
+    kind: str = PLAIN
+    stack: int | None = None        # leading stacked-layers dimension
+    init: str = "normal"            # "normal" | "zeros" | "ones" | "ssm_a" | "dt_bias"
+    init_scale: float | None = None  # stddev override (default fan-in)
+    expert_axes: AxisTuple = ()     # EXPERT only: mesh axes sharding dim 0
+
+    @property
+    def logical_size(self) -> int:
+        return math.prod(self.shape)
+
+
+# ---------------------------------------------------------------------------
+# Scheme presets (paper Table IV)
+# ---------------------------------------------------------------------------
+
+def preset(scheme: str, *, intra_axes: AxisTuple, inter_axes: AxisTuple,
+           axis_sizes: dict[str, int], l0_axes: AxisTuple | None = None,
+           **over) -> ZeroConfig:
+    """Build a scheme config for a mesh split into bandwidth tiers.
+
+    intra_axes: the fast tier (paper: within node / TPU: short ICI paths).
+    inter_axes: the slow tier (paper: Slingshot / TPU: long ICI + DCI).
+    l0_axes:    optional fastest sub-tier inside intra (paper: GCD pair).
+    """
+    sizes = tuple(sorted(axis_sizes.items()))
+    every = (l0_axes or ()) + tuple(a for a in intra_axes if a not in (l0_axes or ())) + inter_axes
+    if scheme == "zero3":
+        axes = ZeroAxes(weight=every, extra_grad=(), replica=())
+        cfg = ZeroConfig(axes, sizes, name="zero3", **over)
+    elif scheme == "zeropp":
+        # ZeRO++: weights sharded over all devices, INT8 weight all-gather,
+        # secondary partition within the intra tier (backward gather never
+        # crosses the slow tier), INT4 a2a gradient reduce-scatter.
+        l0 = l0_axes or ()
+        intra_full = l0 + tuple(a for a in intra_axes if a not in l0)
+        axes = ZeroAxes(weight=every, extra_grad=(), replica=(),
+                        secondary=intra_full)
+        cfg = ZeroConfig(axes, sizes, quantize_weights=True, quantize_grads=True,
+                         name="zeropp", **over)
+    elif scheme == "zero_topo":
+        w = l0_axes if l0_axes else intra_axes
+        e = tuple(a for a in intra_axes if a not in w)
+        # secondary spans the intra tier; kept even when it equals the weight
+        # group (paper Table V "Sec-Degree=2": the INT8 copy makes the
+        # backward gather quantized without re-quantizing the primary).
+        sec = w + e
+        axes = ZeroAxes(weight=w, extra_grad=e, replica=inter_axes, secondary=sec)
+        cfg = ZeroConfig(axes, sizes, quantize_weights=True, quantize_grads=True,
+                         name="zero_topo", **over)
+    elif scheme == "zero1":
+        axes = ZeroAxes(weight=(), extra_grad=(), replica=every)
+        cfg = ZeroConfig(axes, sizes, name="zero1", cross_replica="allreduce", **over)
+    elif scheme == "zero2":
+        axes = ZeroAxes(weight=(), extra_grad=every, replica=())
+        cfg = ZeroConfig(axes, sizes, name="zero2", **over)
+    else:
+        raise ValueError(scheme)
+    cfg.validate_dependency_rule()
+    return cfg
+
+
+def sharding_factor_table(cfg: ZeroConfig) -> dict[str, int]:
+    """Paper Table IV row for this config."""
+    return {"weights": cfg.w_degree, "grads": cfg.g_degree,
+            "optimizer": cfg.os_degree,
+            "secondary": cfg.sec_degree or cfg.w_degree}
+
+
+def weight_memory_bytes(cfg: ZeroConfig, psi: int) -> int:
+    """Paper Table V: per-device weight-shard bytes (bf16 primary + INT8 sec)."""
+    primary = 2 * psi // cfg.w_degree
+    sec = 0 if cfg.sec_degree is None else psi // cfg.sec_degree
+    return primary + sec
+
+
+def grad_memory_bytes(cfg: ZeroConfig, psi: int) -> int:
+    """Paper Table VI: per-device gradient accumulation buffer (fp32 here)."""
+    return 4 * psi // cfg.g_degree
+
+
+def optimizer_memory_bytes(cfg: ZeroConfig, psi: int) -> int:
+    """fp32 master + adam m + v, sharded over all devices (K=12)."""
+    return 12 * psi // cfg.os_degree

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused INT8-dequant x matmul (beyond-paper optimization).
+
+The paper dequantizes gathered weights to FP16 in HBM and then runs the
+matmul, paying a full extra read+write of the weight matrix. On TPU the
+dequant is essentially free if fused into the matmul's VMEM pipeline: each
+(bk, bn) int8 weight tile is scaled to f32 *in VMEM* right before hitting the
+MXU, so HBM only ever sees 1 byte/param. This kernel implements
+``x @ dequant(q, scales)`` with K-blocked accumulation.
+
+Tiling: grid (M/bm, N/bn, K/bk); the scale blocking along K must equal the
+kernel's K tile (one scale row per K tile) so scaling is a broadcast.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dequant_matmul_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = q_ref[...].astype(jnp.float32) * s_ref[...]  # (bk, bn) * (1, bn)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "dtype", "interpret"))
+def dequant_matmul_pallas(x: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
+                          *, bm: int = 128, bn: int = 128, bk: int = 128,
+                          dtype=jnp.float32, interpret: bool = False):
+    """x: (M, K); q: (K, N) int8; scales: (K // bk, N) f32 -> (M, N).
+
+    M % bm == K % bk == N % bn == 0 and scales.shape[0] == K // bk.
+    """
+    m, k = x.shape
+    k2, n = q.shape
+    assert k == k2 and scales.shape == (k // bk, n), (x.shape, q.shape, scales.shape)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_dequant_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scales)

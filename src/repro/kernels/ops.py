@@ -1,0 +1,94 @@
+"""Jit'd public wrappers around the quantization kernels.
+
+The engine quantizes *flat 1-D parameter shards* (DeepSpeed-style flattened
+storage); these wrappers own the (pad, reshape-to-blocks, kernel, unreshape)
+plumbing and the implementation dispatch:
+
+  impl="jnp"               pure-jnp oracle (default: inlines into the big
+                           distributed XLA graph; what the CPU dry-run uses)
+  impl="pallas"            compiled Pallas TPU kernel (the deploy target)
+  impl="pallas_interpret"  Pallas kernel body interpreted on CPU (tests)
+
+Set the process-wide default with ``set_default_impl`` (e.g. launcher sets
+"pallas" on TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from . import ref
+from .quant_blockwise import dequantize_int8_pallas, quantize_int8_pallas
+from .quant_int4 import dequantize_int4_pallas, quantize_int4_pallas
+
+DEFAULT_BLOCK = 512
+_DEFAULT_IMPL = "jnp"
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("jnp", "pallas", "pallas_interpret"), impl
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def _blocks(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    assert x.ndim == 1 and x.size % block == 0, (x.shape, block)
+    return x.reshape(-1, block)
+
+
+def quantize_int8(x, block: int = DEFAULT_BLOCK, impl: str | None = None):
+    """1-D x (size % block == 0) -> (int8 same shape, f32 scales (size//block,))."""
+    impl = impl or _DEFAULT_IMPL
+    b = _blocks(x, block)
+    if impl == "jnp":
+        q, s = ref.quantize_int8_ref(b)
+    else:
+        q, s = quantize_int8_pallas(b, interpret=(impl == "pallas_interpret"))
+    return q.reshape(-1), s.reshape(-1)
+
+
+def dequantize_int8(q, scales, block: int = DEFAULT_BLOCK, dtype=jnp.float32,
+                    impl: str | None = None):
+    impl = impl or _DEFAULT_IMPL
+    qb = _blocks(q, block)
+    sb = scales.reshape(-1, 1)
+    if impl == "jnp":
+        out = ref.dequantize_int8_ref(qb, sb, dtype)
+    else:
+        out = dequantize_int8_pallas(qb, sb, dtype,
+                                     interpret=(impl == "pallas_interpret"))
+    return out.reshape(-1)
+
+
+def quantize_int4(x, block: int = DEFAULT_BLOCK, impl: str | None = None):
+    """1-D x -> (uint8 packed (size//2,), f32 scales (size//block,))."""
+    impl = impl or _DEFAULT_IMPL
+    b = _blocks(x, block)
+    if impl == "jnp":
+        q, s = ref.quantize_int4_ref(b)
+    else:
+        q, s = quantize_int4_pallas(b, interpret=(impl == "pallas_interpret"))
+    return q.reshape(-1), s.reshape(-1)
+
+
+def dequantize_int4(packed, scales, block: int = DEFAULT_BLOCK,
+                    dtype=jnp.float32, impl: str | None = None):
+    impl = impl or _DEFAULT_IMPL
+    qb = packed.reshape(-1, block // 2)
+    sb = scales.reshape(-1, 1)
+    if impl == "jnp":
+        out = ref.dequantize_int4_ref(qb, sb, dtype)
+    else:
+        out = dequantize_int4_pallas(qb, sb, dtype,
+                                     interpret=(impl == "pallas_interpret"))
+    return out.reshape(-1)
+
+
+@functools.cache
+def padded_size(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple

@@ -1,0 +1,75 @@
+"""Pallas TPU kernels: INT8 block-based quantize / dequantize.
+
+TPU adaptation of the ZeRO++ CUDA quantization kernels. The GPU version
+assigns one warp per block and uses warp shuffles for the absmax reduction;
+on TPU the natural unit is a VMEM tile processed by the VPU, so we tile the
+``(num_blocks, block_size)`` view into ``(ROWS_PER_TILE, block_size)`` VMEM
+blocks and let each grid step reduce its rows vectorized. ``block_size`` is
+kept a multiple of 128 (lane width) and rows a multiple of 8 (sublanes) so
+tiles are layout-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_QMAX = 127.0
+ROWS_PER_TILE = 8
+
+
+def _quant_int8_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / INT8_QMAX)
+    q = jnp.clip(jnp.round(x / scale), -INT8_QMAX, INT8_QMAX)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_int8_kernel(q_ref, s_ref, o_ref, *, dtype):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s_ref[...]).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_int8_pallas(blocks: jnp.ndarray, *, interpret: bool = False):
+    """(nb, bs) -> ((nb, bs) int8, (nb, 1) f32). nb % 8 == 0, bs % 128 == 0."""
+    nb, bs = blocks.shape
+    rows = min(ROWS_PER_TILE, nb)
+    grid = (nb // rows,)
+    return pl.pallas_call(
+        _quant_int8_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, bs), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, bs), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bs), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def dequantize_int8_pallas(q: jnp.ndarray, scales: jnp.ndarray,
+                           dtype=jnp.float32, *, interpret: bool = False):
+    nb, bs = q.shape
+    rows = min(ROWS_PER_TILE, nb)
+    grid = (nb // rows,)
+    return pl.pallas_call(
+        functools.partial(_dequant_int8_kernel, dtype=dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, bs), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bs), dtype),
+        interpret=interpret,
+    )(q, scales)

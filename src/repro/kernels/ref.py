@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the quantization kernels.
+
+Block-based quantization (Dettmers et al. 2022, as used by ZeRO++): a flat
+tensor is split into contiguous blocks of ``block_size`` elements; each block
+gets an independent symmetric scale ``max(|x|)/qmax`` so outliers only poison
+their own block. These functions are the numerical ground truth the Pallas
+kernels are validated against, and the implementation the distributed engine
+inlines on backends where Pallas is unavailable.
+
+All functions operate on 2-D ``(num_blocks, block_size)`` views; ``ops.py``
+owns the flatten/pad plumbing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_QMAX = 127.0
+# Symmetric signed 4-bit: values in [-7, 7] (avoid -8 so negation is closed).
+INT4_QMAX = 7.0
+
+
+def _scales(blocks: jnp.ndarray, qmax: float) -> jnp.ndarray:
+    absmax = jnp.max(jnp.abs(blocks.astype(jnp.float32)), axis=-1, keepdims=True)
+    # Avoid 0-scale for all-zero blocks; dequant then yields exact zeros.
+    return jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+
+
+def quantize_int8_ref(blocks: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(nb, bs) float -> ((nb, bs) int8, (nb, 1) f32 scales)."""
+    scales = _scales(blocks, INT8_QMAX)
+    q = jnp.clip(jnp.round(blocks.astype(jnp.float32) / scales), -INT8_QMAX, INT8_QMAX)
+    return q.astype(jnp.int8), scales
+
+
+def dequantize_int8_ref(q: jnp.ndarray, scales: jnp.ndarray,
+                        dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scales).astype(dtype)
+
+
+def quantize_int4_ref(blocks: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(nb, bs) float -> ((nb, bs//2) uint8 packed, (nb, 1) f32 scales).
+
+    Two signed nibbles per byte: element 2i in the low nibble, 2i+1 in the
+    high nibble, offset-encoded by +8 so the byte is unsigned.
+    """
+    scales = _scales(blocks, INT4_QMAX)
+    q = jnp.clip(jnp.round(blocks.astype(jnp.float32) / scales), -INT4_QMAX, INT4_QMAX)
+    q = q.astype(jnp.int32) + 8  # [1, 15]
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scales
+
+
+def dequantize_int4_ref(packed: jnp.ndarray, scales: jnp.ndarray,
+                        dtype=jnp.float32) -> jnp.ndarray:
+    p = packed.astype(jnp.int32)
+    lo = (p & 0xF) - 8
+    hi = ((p >> 4) & 0xF) - 8
+    out = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    return (out.astype(jnp.float32) * scales).astype(dtype)
+
+
+def dequant_matmul_ref(x: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
+                       dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for the fused INT8-dequant matmul: x @ dequant(q).
+
+    ``q``: (K, N) int8 quantized along K in blocks; ``scales``: (K//bs, N)
+    per-(block, column) scales (2-D blocking, one scale row per K-block).
+    """
+    kb = q.shape[0] // scales.shape[0]
+    w = q.astype(jnp.float32) * jnp.repeat(scales, kb, axis=0)
+    return (x.astype(jnp.float32) @ w).astype(dtype)

@@ -1,0 +1,93 @@
+"""Pallas TPU selective-scan kernel (Mamba-1 recurrence; beyond-paper).
+
+The jnp reference (models/ssm.py) materializes the discretized
+(B, S, d_inner, d_state) tensors dA and dB·x in HBM — 2·N·itemsize times the
+size of the actual inputs (N=16 state, f32: ~128 bytes/element-step), which
+makes falcon-mamba train_4k the second-most memory-bound baseline in the
+roofline table. The CUDA kernel the paper's ecosystem uses solves this with
+a warp-sequential scan; the TPU adaptation instead keeps the running state
+``h (bd, N)`` in VMEM scratch and walks the time dimension with a
+``fori_loop`` of VPU vector ops, so HBM sees only dt/x/B/C in and y out.
+
+Layout: grid (B, D/bd, S/bs), time innermost so the state scratch carries
+across sequence blocks. dt comes pre-softplus'd + bias'd; A = -exp(A_log)
+is passed dense (D, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref, y_ref,
+                 hout_ref, h_ref, *, bs, s_steps):
+    s_i = pl.program_id(2)
+
+    @pl.when(s_i == 0)
+    def _init():
+        h_ref[...] = h0_ref[0]
+
+    a = a_ref[...].astype(jnp.float32)                 # (bd, N)
+
+    def step(t, _):
+        dt = dt_ref[0, t].astype(jnp.float32)          # (bd,)
+        xv = x_ref[0, t].astype(jnp.float32)           # (bd,)
+        bv = b_ref[0, t].astype(jnp.float32)           # (N,)
+        cv = c_ref[0, t].astype(jnp.float32)           # (N,)
+        da = jnp.exp(dt[:, None] * a)                  # (bd, N)
+        dbx = (dt * xv)[:, None] * bv[None, :]
+        h = da * h_ref[...] + dbx
+        h_ref[...] = h
+        y_ref[0, t] = jnp.sum(h * cv[None, :], axis=-1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bs, step, 0)
+
+    @pl.when(s_i == s_steps - 1)
+    def _done():
+        hout_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bs", "interpret"))
+def selective_scan_pallas(dt, x, b, c, a, h0, *, bd: int = 512, bs: int = 256,
+                          interpret: bool = False):
+    """dt, x: (B, S, D); b, c: (B, S, N); a: (D, N); h0: (B, D, N).
+
+    Returns (y (B, S, D) f32, h_last (B, D, N) f32). D % bd == S % bs == 0.
+    """
+    batch, s, d = dt.shape
+    n = b.shape[-1]
+    bd = min(bd, d)
+    while d % bd:
+        bd //= 2
+    bs = min(bs, s)
+    while s % bs:
+        bs //= 2
+    grid = (batch, d // bd, s // bs)
+    kernel = functools.partial(_scan_kernel, bs=bs, s_steps=s // bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda i, j, k: (i, k, j)),   # dt
+            pl.BlockSpec((1, bs, bd), lambda i, j, k: (i, k, j)),   # x
+            pl.BlockSpec((1, bs, n), lambda i, j, k: (i, k, 0)),    # B
+            pl.BlockSpec((1, bs, n), lambda i, j, k: (i, k, 0)),    # C
+            pl.BlockSpec((bd, n), lambda i, j, k: (j, 0)),          # A
+            pl.BlockSpec((1, bd, n), lambda i, j, k: (i, j, 0)),    # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda i, j, k: (i, k, j)),   # y
+            pl.BlockSpec((1, bd, n), lambda i, j, k: (i, j, 0)),    # h_last
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((batch, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, b, c, a, h0)

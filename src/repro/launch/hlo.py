@@ -1,0 +1,415 @@
+"""Static analysis of compiled HLO: loop-aware FLOPs, HBM-byte and
+collective-byte census.
+
+XLA's ``cost_analysis()`` counts each while-loop body **once**, so for
+scanned-layer models it underestimates FLOPs and bytes by ~n_layers, and it
+reports no collective traffic at all. This module parses the compiled HLO
+text into its computation graph, propagates execution multipliers through
+``calls=`` / ``body=`` edges (while bodies multiply by their
+``known_trip_count``), and aggregates:
+
+  * dot/convolution FLOPs (2 * prod(out) * prod(contracting dims)),
+  * an HBM-traffic estimate: sum of operand + output bytes of every fusion /
+    dot / copy / collective at the top level of each computation (fusions
+    internalize their elementwise chains, mirroring what a TPU would keep in
+    VMEM),
+  * collective wire bytes per op type with ring-algorithm formulas
+    (paper Tables VII/VIII):
+        all-gather          V_out * (d-1)/d
+        reduce-scatter      V_out * (d-1)
+        all-reduce          2 * V * (d-1)/d
+        all-to-all          V * (d-1)/d
+        collective-permute  V
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "c64": 8, "c128": 16,
+    "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\((?:[^()]|\([^)]*\))*\)|\w+\[[\d,]*\]\S*)\s+([\w\-]+)\(")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|true_computation|"
+                      r"false_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def _group_stride(line: str) -> int:
+    """Device-id stride within a replica group (1 = minor-axis/contiguous).
+
+    Used to classify which mesh tier a collective crosses: on the production
+    meshes, stride >= 256 means the group spans the pod (DCI) boundary."""
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip() != ""]
+        if len(ids) >= 2:
+            return abs(ids[1] - ids[0])
+        return 1
+    # iota format: [G,D]<=[dims]T(perm) — groups of D over a transposed grid
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?",
+                  line)
+    if m:
+        dims = [int(x) for x in m.group(3).split(",")]
+        if not m.group(4):
+            return 1                       # contiguous reshape
+        perm = [int(x) for x in m.group(5).split(",")]
+        # the fastest-varying dim within a group is perm[-1] of the iota
+        # grid; its stride in device-id space is the product of dims after it
+        fastest = perm[-1]
+        stride = 1
+        for i in range(fastest + 1, len(dims)):
+            stride *= dims[i]
+        return stride
+    return 1
+
+
+def _group_span(line: str, d: int) -> int:
+    """max(id) - min(id) within one replica group (tier classification:
+    span >= pod size means the collective crosses the DCI boundary)."""
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip() != ""]
+        if ids:
+            return max(ids) - min(ids)
+    return _group_stride(line) * (d - 1)
+
+
+_OPERAND_RE = re.compile(r"\(\s*%?([\w.\-]+)")
+
+
+def _dot_flops(line: str, out_type: str, symtab: dict[str, str]) -> float:
+    """2 * prod(out) * prod(lhs contracting dims).
+
+    Compiled HLO does not repeat operand types at the call site, so the lhs
+    shape is resolved through the module-wide symbol table.
+    """
+    out_elems, _ = _shape_elems_bytes(out_type)
+    call = line.split("(", 1)[1]
+    # operand types inline (lowered StableHLO-ish) or via symtab (compiled)
+    operand_shapes = _SHAPE_RE.findall(call.split("metadata")[0])
+    lhs_dims: list[int] = []
+    if operand_shapes:
+        lhs_dims = [int(x) for x in operand_shapes[0][1].split(",") if x]
+    else:
+        m0 = _OPERAND_RE.search("(" + call)
+        if m0 and m0.group(1) in symtab:
+            shapes = _SHAPE_RE.findall(symtab[m0.group(1)])
+            if shapes:
+                lhs_dims = [int(x) for x in shapes[0][1].split(",") if x]
+    m = re.search(r"lhs_contracting_dims=\{([^}]*)\}", line)
+    k = 1
+    if m and lhs_dims:
+        for i in m.group(1).split(","):
+            if i.strip():
+                k *= lhs_dims[int(i)]
+    return 2.0 * out_elems * k
+
+
+def _operand_bytes(line: str, opcode: str, symtab: dict[str, str],
+                   billing: dict[str, int] | None = None) -> int:
+    """Sum operand sizes of a call: inline types if present, else symtab.
+
+    ``billing`` (fusions): per-operand byte overrides keyed by position —
+    a fusion parameter consumed only through dynamic-slice reads only the
+    slice, not the whole (e.g. layer-stacked) array.
+    """
+    try:
+        call = line.split(opcode + "(", 1)[1]
+        args = call.split(")", 1)[0]
+    except IndexError:
+        return 0
+    inline = _SHAPE_RE.findall(args)
+    if inline and billing is None:
+        return _shape_elems_bytes(args)[1]
+    total = 0
+    for pos, name in enumerate(re.findall(r"%([\w.\-]+)", args)):
+        if billing is not None and pos in billing:
+            total += billing[pos]
+        elif name in symtab:
+            total += _shape_elems_bytes(symtab[name])[1]
+    return total
+
+
+# ops inside a fusion that make it read more input elements than it writes
+_EXPANDING = {"reduce", "reduce-window", "dot", "convolution", "gather",
+              "scatter", "sort", "select-and-scatter"}
+
+
+def _fusion_billing(comp: list["Instr"], out_type: str) -> dict[int, int]:
+    """Byte billing overrides for fusion parameters.
+
+    kLoop fusions compute output elements lazily, so a fusion whose body is a
+    pure elementwise/layout chain (incl. slices) reads at most
+    out_elems * operand_itemsize per operand — NOT the full operand (XLA
+    slices-of-big-arrays would otherwise be billed d times by d consumers).
+    Fusions containing reducing/gathering ops read their operands in full.
+    A parameter consumed only by (dynamic-)slice ops contributes the slice
+    bytes; one consumed only as a dynamic-update-slice buffer contributes
+    the update bytes (in-place write).
+    """
+    local = {i.name: i for i in comp}
+    out_elems, _ = _shape_elems_bytes(out_type)
+    expanding = any(i.opcode in _EXPANDING for i in comp)
+    params: dict[str, tuple[int, str]] = {}     # name -> (index, type)
+    for i in comp:
+        if i.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", i.line)
+            if m:
+                params[i.name] = (int(m.group(1)), i.out_type)
+    uses: dict[str, list[tuple["Instr", int]]] = {p: [] for p in params}
+    for i in comp:
+        if i.opcode == "parameter":
+            continue
+        try:
+            args = i.line.split(i.opcode + "(", 1)[1].split(")", 1)[0]
+        except IndexError:
+            continue
+        for argpos, nm in enumerate(re.findall(r"%([\w.\-]+)", args)):
+            if nm in uses:
+                uses[nm].append((i, argpos))
+    billing: dict[int, int] = {}
+    for pname, ulist in uses.items():
+        idx, ptype = params[pname]
+        pelems, pbytes = _shape_elems_bytes(ptype)
+        if not ulist:
+            billing[idx] = 0
+            continue
+        if all(u.opcode in ("dynamic-slice", "slice") for u, _ in ulist):
+            billing[idx] = sum(
+                _shape_elems_bytes(u.out_type)[1] for u, _ in ulist)
+        elif all(u.opcode == "dynamic-update-slice" and ap == 0
+                 for u, ap in ulist):
+            b = 0
+            for u, _ in ulist:
+                args = u.line.split(u.opcode + "(", 1)[1].split(")", 1)[0]
+                names = re.findall(r"%([\w.\-]+)", args)
+                if len(names) > 1 and names[1] in local:
+                    b += _shape_elems_bytes(local[names[1]].out_type)[1]
+            billing[idx] = b
+        elif not expanding and pelems:
+            itemsize = max(pbytes // pelems, 1)
+            billing[idx] = min(pbytes, out_elems * itemsize)
+    return billing
+
+
+@dataclass
+class Instr:
+    opcode: str
+    out_type: str
+    line: str
+    name: str = ""
+
+
+@dataclass
+class HLOAnalysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    counts: dict = field(default_factory=lambda: defaultdict(float))
+    groups: dict = field(default_factory=dict)   # (op,d,span) -> [wire,count]
+    unknown_loops: int = 0
+
+    def add_group(self, op: str, d: int, span: int, wire: float, m: float):
+        key = f"{op}|{d}|{span}"
+        w, c = self.groups.get(key, (0.0, 0.0))
+        self.groups[key] = (w + wire * m, c + m)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    def summary(self) -> dict:
+        return dict(flops=float(self.flops), hbm_bytes=float(self.hbm_bytes),
+                    wire_bytes={k: float(v) for k, v in self.wire_bytes.items()},
+                    total_wire_bytes=self.total_wire_bytes,
+                    collective_counts={k: float(v) for k, v in self.counts.items()
+                                       if k in COLLECTIVES},
+                    groups={k: [float(w), float(c)]
+                            for k, (w, c) in self.groups.items()},
+                    unknown_loops=self.unknown_loops)
+
+
+# ops whose operand+output traffic we bill as HBM bytes (top-level only;
+# everything else is either fused or negligible bookkeeping)
+_HBM_OPS = {"fusion", "dot", "convolution", "copy", "transpose", "reshape",
+            "dynamic-slice", "dynamic-update-slice", "reduce", "sort",
+            "gather", "scatter", "concatenate", "pad", "broadcast",
+            "slice", "select-and-scatter", "reduce-window", "iota",
+            "convert", "bitcast-convert", "rng-bit-generator"} | set(COLLECTIVES)
+
+
+def parse_hlo(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    entry = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        # computation headers: "%name (params) -> type {" at zero indent
+        if (stripped.endswith("{") and "->" in stripped
+                and not line.startswith(" ")):
+            h = _COMP_HDR_RE.match(stripped)
+            if h:
+                name = h.group(1)
+                cur = comps.setdefault(name, [])
+                if stripped.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.append(Instr(m.group(3), m.group(2), stripped, m.group(1)))
+    return comps
+
+
+def analyze(text: str) -> HLOAnalysis:
+    comps = parse_hlo(text)
+    if "__entry__" not in comps:
+        # fall back: treat whole text as one computation
+        comps["__entry__"] = [i for v in comps.values() for i in v]
+
+    symtab: dict[str, str] = {}
+    for v in comps.values():
+        for ins in v:
+            symtab[ins.name] = ins.out_type
+
+    billing_cache: dict[str, dict[int, int]] = {}
+
+    def fusion_billing(line: str, out_type: str):
+        m = re.search(r"calls=%?([\w.\-]+)", line)
+        if not m or m.group(1) not in comps:
+            return None, None
+        cname = m.group(1)
+        if cname not in billing_cache:
+            billing_cache[cname] = _fusion_billing(comps[cname], out_type)
+        comp = comps[cname]
+        out_override = None
+        for ins in comp:
+            if ins.line.lstrip().startswith("ROOT") and \
+                    ins.opcode == "dynamic-update-slice":
+                args = ins.line.split("dynamic-update-slice(", 1)[1] \
+                    .split(")", 1)[0]
+                names = re.findall(r"%([\w.\-]+)", args)
+                local = {i.name: i for i in comp}
+                if len(names) > 1 and names[1] in local:
+                    out_override = _shape_elems_bytes(
+                        local[names[1]].out_type)[1]
+        return billing_cache[cname], out_override
+
+    out = HLOAnalysis()
+
+    def visit(comp: list[Instr], m: float, depth=0, in_fusion=False):
+        if depth > 50:
+            return
+        for ins in comp:
+            line = ins.line
+            op = ins.opcode
+            base = op.replace("-start", "") if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue
+            # recurse into callees
+            callees = _CALL_RE.findall(line)
+            br = _BRANCHES_RE.search(line)
+            if br:
+                callees += [c.strip().lstrip("%") for c in br.group(1).split(",")]
+            child_m = m
+            if op == "while":
+                t = _TRIP_RE.search(line)
+                if t:
+                    child_m = m * int(t.group(1))
+                else:
+                    out.unknown_loops += 1
+            for cname in callees:
+                if cname in comps:
+                    visit(comps[cname], child_m, depth + 1,
+                          in_fusion or op == "fusion")
+            # aggregate this instruction
+            _, out_b = _shape_elems_bytes(ins.out_type)
+            if in_fusion:
+                # fused ops live in VMEM/registers: count their dot FLOPs
+                # but no HBM traffic and no collectives (can't occur fused).
+                if base in ("dot", "convolution"):
+                    out.flops += _dot_flops(line, ins.out_type, symtab) * m
+                continue
+            if base in COLLECTIVES:
+                v = out_b
+                if base == "collective-permute":
+                    wire = float(v)
+                    d, span = 2, 1
+                else:
+                    d = _group_size(line)
+                    if d <= 1:
+                        continue
+                    wire = {"all-gather": v * (d - 1) / d,
+                            "all-reduce": 2.0 * v * (d - 1) / d,
+                            "reduce-scatter": float(v) * (d - 1),
+                            "all-to-all": v * (d - 1) / d}[base]
+                    span = _group_span(line, d)
+                out.wire_bytes[base] += wire * m
+                out.counts[base] += m
+                out.add_group(base, d, span, wire, m)
+            if base in ("dot", "convolution"):
+                out.flops += _dot_flops(line, ins.out_type, symtab) * m
+            if base in _HBM_OPS:
+                if base in ("slice", "dynamic-slice"):
+                    # reads only the sliced region
+                    out.hbm_bytes += 2 * out_b * m
+                    continue
+                if base == "dynamic-update-slice":
+                    # in-place: write (and read) only the updated region
+                    call = line.split(op + "(", 1)[1].split(")", 1)[0]
+                    names = re.findall(r"%([\w.\-]+)", call)
+                    upd = _shape_elems_bytes(symtab.get(names[1], ""))[1] \
+                        if len(names) > 1 else out_b
+                    out.hbm_bytes += 2 * upd * m
+                    continue
+                billing = None
+                if op == "fusion":
+                    billing, out_override = fusion_billing(line, ins.out_type)
+                    if out_override is not None:
+                        out_b = out_override
+                operand_b = _operand_bytes(line, op, symtab, billing)
+                out.hbm_bytes += (out_b + operand_b) * m
+
+    visit(comps["__entry__"], 1.0)
+    return out

@@ -1,0 +1,69 @@
+"""Mesh construction for the production pod(s) and the paper-faithful
+3-level topo mesh.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before the first jax call).
+
+Axis-to-bandwidth-tier mapping (DESIGN.md §2):
+
+  production mesh (16, 16) ("data", "model"):
+      "model"  — the intra tier (short ICI paths): weight + gradient shards
+      "data"   — the inter tier: optimizer sharding + replica sync
+  multi-pod (2, 16, 16) ("pod", "data", "model"): "pod" is DCI (slowest) and
+      joins the inter tier (deeper optimizer sharding, batch replicated).
+
+  topo mesh (data, repl, node, gcd) = (16, 2, 4, 2): the paper's 3 levels —
+      "gcd" (2)        = the MI250X GCD pair       -> primary weight shards
+      "node"x"gcd" (8) = the Frontier node         -> gradient shards + secondary
+      "data"x"repl"    = inter-node                -> optimizer shards
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_topo_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 2, 4, 2) if multi_pod else (16, 2, 4, 2)
+    axes = (("pod",) if multi_pod else ()) + ("data", "repl", "node", "gcd")
+    return _mk(shape, axes if multi_pod else ("data", "repl", "node", "gcd"))
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("data", "node", "gcd")):
+    """Small fake-device mesh for CPU tests (8 devices)."""
+    return _mk(shape, axes)
+
+
+def zero_tiers(mesh) -> dict[str, tuple[str, ...]]:
+    """Map a mesh's axes onto the (l0, intra, inter) bandwidth tiers."""
+    names = set(mesh.axis_names)
+    if {"node", "gcd"} <= names:
+        intra = ("node", "gcd")
+        l0 = ("gcd",)
+    elif "model" in names:
+        intra = ("model",)
+        l0 = ("model",)
+    else:  # single-axis test meshes
+        intra = (mesh.axis_names[-1],)
+        l0 = intra
+    inter = tuple(a for a in mesh.axis_names if a not in intra)
+    return dict(l0=l0, intra=intra, inter=inter)
+
+
+def scheme_config(scheme: str, mesh, **over):
+    """Build the ZeroConfig preset for `scheme` on `mesh`."""
+    from ..core.partition import preset
+    tiers = zero_tiers(mesh)
+    return preset(scheme, intra_axes=tiers["intra"], inter_axes=tiers["inter"],
+                  l0_axes=tiers["l0"], axis_sizes=dict(mesh.shape), **over)

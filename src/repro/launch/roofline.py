@@ -1,0 +1,109 @@
+"""Three-term roofline model from the compiled dry-run (deliverable (g)).
+
+Target hardware: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s per ICI link. The compiled SPMD module is the *per-device* program,
+so the loop-aware HLO census (``hlo.analyze``) directly yields per-chip
+FLOPs / HBM bytes / collective wire bytes:
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / link_bw
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per training step; the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+DCI_BW = 6.25e9              # B/s per chip across the pod boundary (modeled)
+HOP_LAT = 1e-6               # per ring hop (latency term: count*(d-1)*alpha)
+POD = 256                    # chips per pod: group span >= POD crosses DCI
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_chip: float
+    hlo_flops_per_chip: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = dict(compute=self.compute_s, memory=self.memory_s,
+                     collective=self.collective_s)
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_flops_per_chip / max(self.hlo_flops_per_chip, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        return self.model_flops_per_chip / (self.step_time_s * PEAK_FLOPS) \
+            if self.step_time_s else 0.0
+
+    def summary(self) -> dict:
+        return dict(compute_s=self.compute_s, memory_s=self.memory_s,
+                    collective_s=self.collective_s, bottleneck=self.bottleneck,
+                    step_time_s=self.step_time_s,
+                    model_flops_per_chip=self.model_flops_per_chip,
+                    hlo_flops_per_chip=self.hlo_flops_per_chip,
+                    useful_flop_ratio=self.useful_flop_ratio,
+                    mfu_bound=self.mfu_bound)
+
+
+def model_flops(n_params: int, n_active_params: int, tokens: int,
+                kind: str) -> float:
+    """6·N·D training FLOPs (fwd 2ND + bwd 4ND); 2·N·D for inference."""
+    n = n_active_params or n_params
+    per_tok = 6.0 * n if kind == "train" else 2.0 * n
+    return per_tok * tokens
+
+
+def collective_seconds(hlo_summary: dict) -> float:
+    """Tier-aware: pod-crossing groups at DCI bandwidth, plus the ring
+    hop-latency term — the term the paper's constant-group-size design
+    pins down (collectives of d=2/8 cost ~zero latency at any scale)."""
+    groups = hlo_summary.get("groups")
+    if not groups:
+        return hlo_summary["total_wire_bytes"] / ICI_BW
+    total = 0.0
+    for key, (wire, count) in groups.items():
+        _, d, span = key.split("|")
+        bw = DCI_BW if int(span) >= POD else ICI_BW
+        total += wire / bw + count * (int(d) - 1) * HOP_LAT
+    return total
+
+
+def build(hlo_summary: dict, *, n_chips: int, n_params: int,
+          n_active_params: int, tokens: int, kind: str) -> Roofline:
+    mf = model_flops(n_params, n_active_params, tokens, kind) / n_chips
+    return Roofline(
+        compute_s=hlo_summary["flops"] / PEAK_FLOPS,
+        memory_s=hlo_summary["hbm_bytes"] / HBM_BW,
+        collective_s=collective_seconds(hlo_summary),
+        model_flops_per_chip=mf,
+        hlo_flops_per_chip=hlo_summary["flops"],
+    )
+
+
+def active_params(arch, total_params: int) -> int:
+    """MoE: count only top-k of the expert FFN params as active."""
+    if not arch.moe.n_experts:
+        return total_params
+    e, k = arch.moe.n_experts, arch.moe.top_k
+    expert_per_layer = 3 * arch.d_model * arch.moe.d_ff * e
+    n_moe_layers = sum(1 for p in arch.pattern if "moe" in p)
+    expert_total = expert_per_layer * n_moe_layers
+    return total_params - expert_total + expert_total * k // e

@@ -1,0 +1,74 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --scheme zero_topo --steps 100 --reduced --devices 8
+
+``--reduced`` trains the smoke-scale variant on fake CPU devices (what this
+container can run); on a real TPU pod drop it and pass --mesh prod.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--scheme", default="zero_topo")
+    ap.add_argument("--mesh", default="test")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--quant-block", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-json", default="")
+    args = ap.parse_args()
+
+    if args.mesh == "test" and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.devices}"
+    if args.mesh != "test" and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+    import jax
+    from ..core.engine import TrainHparams, ZeroEngine
+    from ..models.config import ShapeConfig, SHAPES
+    from ..models.registry import build_model, get_arch
+    from ..train.trainer import Trainer
+    from .mesh import make_production_mesh, make_test_mesh, make_topo_mesh, \
+        scheme_config
+
+    mesh = {"test": lambda: make_test_mesh(),
+            "prod": lambda: make_production_mesh(),
+            "topo": lambda: make_topo_mesh()}[args.mesh]()
+    arch = get_arch(args.arch)
+    if args.reduced or args.mesh == "test":
+        arch = arch.reduced()
+        shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    else:
+        shape = SHAPES["train_4k"]
+
+    model = build_model(arch)
+    cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block)
+    hp = TrainHparams(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 2))
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh, hp)
+    print(f"arch={arch.name} scheme={cfg.name} mesh={dict(mesh.shape)} "
+          f"params={eng.param_count():,}")
+    print("per-device state bytes:", eng.memory_report())
+
+    state = eng.init_state(jax.random.key(0))
+    tr = Trainer(model, eng, mesh, shape)
+    state = tr.run(state, args.steps,
+                   ckpt_dir=args.ckpt_dir or None,
+                   ckpt_every=args.ckpt_every)
+    if args.log_json:
+        tr.log.save(args.log_json)
+    print("final loss:", tr.log.losses[-1])
+
+
+if __name__ == "__main__":
+    main()

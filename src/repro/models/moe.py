@@ -1,0 +1,93 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+Baseline (paper-faithful ZeRO): expert weights are ordinary flat ZeRO shards —
+the dense (E, d, ff) tensors are materialized by the hierarchical quantized
+all-gather like any other parameter, and every device computes the dispatch /
+expert-FFN / combine einsums for its own tokens. This is exactly how
+DeepSpeed-ZeRO trains MoE when expert parallelism is off, and it is where the
+paper's intra-tier bandwidth matters most (the expert tensors dominate the
+gather volume).
+
+Expert parallelism (beyond-paper option, see EXPERIMENTS.md §Perf) shards the
+expert dimension over a mesh axis and exchanges token slots with a single
+all-to-all each way — the same 1-hop a2a machinery the paper uses for the
+quantized gradient reduce-scatter.
+
+Dispatch uses the standard capacity-factor formulation (Mesh-TF / GSPMD):
+tokens are processed in chunks so the (T, E, C) one-hot dispatch tensor stays
+bounded at 32k+ sequence lengths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+
+
+def _dispatch_combine(gates, top_k: int, capacity: int):
+    """gates (T, E) softmax probs -> dispatch (T,E,C) bf16, combine (T,E,C) f32,
+    aux load-balance loss terms (f_e, P_e)."""
+    t, e = gates.shape
+    vals, idx = lax.top_k(gates, top_k)                  # (T, k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+
+    dispatch = jnp.zeros((t, e, capacity), jnp.bfloat16)
+    combine = jnp.zeros((t, e, capacity), jnp.float32)
+    fill = jnp.zeros((e,), jnp.float32)
+    for j in range(top_k):
+        oh = jax.nn.one_hot(idx[:, j], e, dtype=jnp.float32)       # (T, E)
+        pos = jnp.cumsum(oh, axis=0) - oh + fill                    # (T, E)
+        fill = fill + oh.sum(axis=0)
+        pos_t = (pos * oh).sum(-1)                                  # (T,)
+        in_cap = (pos_t < capacity)
+        slot = jax.nn.one_hot(pos_t, capacity, dtype=jnp.float32)   # (T, C)
+        d_j = (oh[:, :, None] * slot[:, None, :]) * in_cap[:, None, None]
+        dispatch = dispatch + d_j.astype(jnp.bfloat16)
+        combine = combine + d_j * vals[:, j][:, None, None]
+
+    # Switch-style load balance: E * sum_e f_e * P_e (f from top-1 choices)
+    top1 = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
+    f_e = top1.mean(axis=0)
+    p_e = gates.mean(axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+    return dispatch, combine, aux
+
+
+def moe_ffn(view, prefix: str, cfg: ArchConfig, x):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    Leaves: f"{prefix}router" (d, E); f"{prefix}w_gate"/"w_up" (E, d, ff);
+    f"{prefix}w_down" (E, ff, d) — dense-materialized via the ZeRO gather.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    router = view.get(prefix + "router")                  # (d, E)
+
+    from .layers import _best_chunk
+    xt = x.reshape(b * s, d)
+    t_total = b * s
+    chunk = _best_chunk(t_total, m.token_chunk)
+    n_chunks = t_total // chunk
+    capacity = max(int(m.capacity_factor * m.top_k * chunk / m.n_experts), 4)
+
+    def body(carry, xc):
+        gates = jax.nn.softmax(
+            (xc.astype(jnp.float32) @ router.astype(jnp.float32)), axis=-1)
+        disp, comb, aux = _dispatch_combine(gates, m.top_k, capacity)
+        e_in = jnp.einsum("tec,td->ecd", disp.astype(jnp.bfloat16),
+                          xc.astype(jnp.bfloat16))
+        e_out = view.expert_ffn(prefix, e_in)
+        yc = jnp.einsum("tec,ecd->td", comb.astype(jnp.float32),
+                        e_out.astype(jnp.float32))
+        return carry + aux, yc.astype(x.dtype)
+
+    if n_chunks == 1:
+        aux, y = body(jnp.zeros((), jnp.float32), xt)
+    else:
+        body_ck = jax.checkpoint(body, prevent_cse=False)
+        aux, y = lax.scan(body_ck, jnp.zeros((), jnp.float32),
+                          xt.reshape(n_chunks, chunk, d))
+        y = y.reshape(t_total, d)
+    return y.reshape(b, s, d), aux * m.aux_coef / n_chunks

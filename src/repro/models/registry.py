@@ -1,0 +1,221 @@
+"""Architecture registry: ArchConfig -> ModelDef (specs + step functions +
+abstract input/cache specs for the dry-run).
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct
+``ShapeDtypeStruct`` stand-ins for every model input, shardable, no device
+allocation. The frontend carve-out lives here: VLM patch embeddings and audio
+frame embeddings are *inputs* of the right shape, produced by a stub pipeline
+instead of a ViT / conv codec.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.partition import LeafSpec
+from .config import SHAPES, ArchConfig, ShapeConfig, shape_supported
+from .transformer import LM, kind_meta
+
+ARCHS: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(fn: Callable[[], ArchConfig]):
+    cfg = fn()
+    ARCHS[cfg.name] = fn
+    return fn
+
+
+def get_arch(name: str) -> ArchConfig:
+    if not ARCHS:
+        load_all_configs()
+    return ARCHS[name]()
+
+
+def list_archs() -> list[str]:
+    if not ARCHS:
+        load_all_configs()
+    return sorted(ARCHS)
+
+
+def load_all_configs():
+    """Import every repro.configs.<arch> module (they self-register)."""
+    import importlib
+    import pkgutil
+
+    from .. import configs as pkg
+    for m in pkgutil.iter_modules(pkg.__path__):
+        importlib.import_module(f"repro.configs.{m.name}")
+
+
+# ---------------------------------------------------------------------------
+# Batch partitioning helpers
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, global_batch: int,
+               candidates: tuple[str, ...] | None = None) -> tuple[str, ...]:
+    """Largest major->minor prefix of mesh axes whose product divides batch."""
+    axes = candidates if candidates is not None else tuple(mesh.axis_names)
+    out: list[str] = []
+    prod = 1
+    for a in axes:
+        n = mesh.shape[a]
+        if global_batch % (prod * n) == 0:
+            out.append(a)
+            prod *= n
+        else:
+            break
+    return tuple(out)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes used for batch sharding of serve shapes (everything but model tiers)."""
+    return tuple(a for a in mesh.axis_names if a not in ("model", "node", "gcd"))
+
+
+def model_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("model", "node", "gcd"))
+
+
+# ---------------------------------------------------------------------------
+# ModelDef
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModelDef:
+    arch: ArchConfig
+    lm: LM
+
+    def leaf_specs(self) -> dict[str, LeafSpec]:
+        return self.lm.leaf_specs()
+
+    # ---- step functions (run inside shard_map; device-local views) ----
+
+    def loss_fn(self):
+        return lambda view, batch: self.lm.loss(view, batch)
+
+    def prefill_fn(self, seq_axes, axis_sizes, seq_parallel: bool = False):
+        return lambda view, batch: self.lm.prefill(
+            view, batch, seq_axes=seq_axes, axis_sizes=axis_sizes,
+            seq_parallel=seq_parallel)
+
+    def decode_fn(self, seq_axes, axis_sizes):
+        return lambda view, caches, batch: self.lm.decode(
+            view, caches, batch, seq_axes=seq_axes, axis_sizes=axis_sizes)
+
+    # ---- abstract inputs -------------------------------------------------
+
+    def _extra_inputs(self, b: int, s_text_hint: int) -> dict[str, tuple]:
+        cfg = self.arch
+        out = {}
+        if cfg.n_patches:
+            out["patches"] = ((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_layers:
+            out["frames"] = ((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+        return out
+
+    def train_batch_shapes(self, shape: ShapeConfig) -> dict[str, tuple]:
+        cfg = self.arch
+        b, s = shape.global_batch, shape.seq_len
+        s_text = s - cfg.n_patches if cfg.n_patches else s
+        out = {"tokens": ((b, s_text + 1), jnp.int32)}
+        out.update(self._extra_inputs(b, s_text))
+        return out
+
+    def prefill_batch_shapes(self, shape: ShapeConfig) -> dict[str, tuple]:
+        cfg = self.arch
+        b, s = shape.global_batch, shape.seq_len
+        s_text = s - cfg.n_patches if cfg.n_patches else s
+        out = {"tokens": ((b, s_text), jnp.int32)}
+        out.update(self._extra_inputs(b, s_text))
+        return out
+
+    def decode_batch_shapes(self, shape: ShapeConfig) -> dict[str, tuple]:
+        return {"token": ((shape.global_batch,), jnp.int32)}
+
+    def batch_pspecs(self, shapes: dict[str, tuple], baxes: tuple[str, ...]):
+        ba = baxes if baxes else None
+        return {k: P(ba, *([None] * (len(sh) - 1)))
+                for k, (sh, _) in shapes.items()}
+
+    def batch_sds(self, shapes: dict[str, tuple], mesh: Mesh,
+                  baxes: tuple[str, ...]):
+        specs = self.batch_pspecs(shapes, baxes)
+        return {k: jax.ShapeDtypeStruct(sh, dt,
+                                        sharding=NamedSharding(mesh, specs[k]))
+                for k, (sh, dt) in shapes.items()}
+
+    # ---- cache specs ------------------------------------------------------
+
+    def cache_shapes(self, shape: ShapeConfig) -> dict[str, Any]:
+        """Global cache shapes+dtypes+seq-shardable flags per kind."""
+        cfg = self.arch
+        b, s = shape.global_batch, shape.seq_len
+        h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hdim
+        out: dict[str, Any] = {}
+        for kind, count in cfg.kind_counts().items():
+            m = kind_meta(kind, cfg)
+            entry: dict[str, Any] = {}
+            if m.mixer == "attn":
+                if m.window:
+                    w = m.window   # ring size is always the window (slot = pos % W)
+                    entry["k"] = ((count, b, w, kv, hd), jnp.bfloat16, False)
+                    entry["v"] = ((count, b, w, kv, hd), jnp.bfloat16, False)
+                else:
+                    entry["k"] = ((count, b, s, kv, hd), jnp.bfloat16, True)
+                    entry["v"] = ((count, b, s, kv, hd), jnp.bfloat16, True)
+            elif m.mixer == "mla":
+                ml = cfg.mla
+                entry["lat"] = ((count, b, s, ml.kv_lora + ml.qk_rope),
+                                jnp.bfloat16, True)
+            else:  # mamba
+                c = cfg.ssm
+                entry["h"] = ((count, b, cfg.d_inner, c.d_state),
+                              jnp.float32, False)
+                entry["conv"] = ((count, b, c.d_conv - 1, cfg.d_inner),
+                                 jnp.float32, False)
+            if m.cross:
+                entry["kx"] = ((count, b, cfg.n_frames, h, hd), jnp.bfloat16,
+                               False)
+                entry["vx"] = ((count, b, cfg.n_frames, h, hd), jnp.bfloat16,
+                               False)
+            out[kind] = entry
+        return out
+
+    def cache_pspecs(self, shape: ShapeConfig, baxes, seq_axes):
+        shapes = self.cache_shapes(shape)
+        out = {}
+        for kind, entry in shapes.items():
+            out[kind] = {}
+            for name, (sh, dt, seq_shard) in entry.items():
+                spec = [None, baxes if baxes else None] + [None] * (len(sh) - 2)
+                if seq_shard and seq_axes:
+                    spec[2] = seq_axes
+                out[kind][name] = P(*spec)
+        out["pos"] = P()
+        return out
+
+    def cache_sds(self, shape: ShapeConfig, mesh: Mesh, baxes, seq_axes):
+        shapes = self.cache_shapes(shape)
+        specs = self.cache_pspecs(shape, baxes, seq_axes)
+        out: dict[str, Any] = {}
+        for kind, entry in shapes.items():
+            out[kind] = {
+                name: jax.ShapeDtypeStruct(
+                    sh, dt, sharding=NamedSharding(mesh, specs[kind][name]))
+                for name, (sh, dt, _) in entry.items()}
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32,
+                                          sharding=NamedSharding(mesh, P()))
+        return out
+
+
+def build_model(arch: ArchConfig) -> ModelDef:
+    return ModelDef(arch, LM(arch))
+
+
+def supported_shapes(arch: ArchConfig) -> list[str]:
+    return [s for s in SHAPES if shape_supported(arch, SHAPES[s])]

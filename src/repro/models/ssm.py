@@ -1,0 +1,165 @@
+"""Mamba-1 selective-state-space mixer (falcon-mamba, jamba).
+
+The selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t is a linear
+recurrence; we evaluate it as an outer ``lax.scan`` over sequence chunks
+(carrying the (B, d_inner, d_state) state) with a ``lax.associative_scan``
+inside each chunk. The chunk body is rematerialized, so training memory is
+O(S/chunk) states instead of O(S) — the standard TPU adaptation of the CUDA
+selective-scan kernel (sequential warp-level scan has no TPU analogue; the
+associative formulation maps onto the VPU instead).
+
+Decode is O(1): one state update per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+
+# scan implementation: "jnp" (chunked associative scan; what CPU dry-runs
+# lower) | "pallas" (TPU deploy target) | "pallas_interpret" (CPU validation)
+_SCAN_IMPL = "jnp"
+
+
+def set_scan_impl(impl: str) -> None:
+    global _SCAN_IMPL
+    assert impl in ("jnp", "pallas", "pallas_interpret"), impl
+    _SCAN_IMPL = impl
+
+
+def _ssm_params(view, prefix, cfg: ArchConfig):
+    a_log = view.get(prefix + "A_log").astype(jnp.float32)     # (din, n)
+    d_skip = view.get(prefix + "D").astype(jnp.float32)        # (din,)
+    dt_bias = view.get(prefix + "dt_bias").astype(jnp.float32)  # (din,)
+    return a_log, d_skip, dt_bias
+
+
+def _conv_train(x, w, b, d_conv: int):
+    """Causal depthwise conv: x (B,S,din), w (din,K), b (din,)."""
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(d_conv):
+        shift = d_conv - 1 - k
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs.astype(jnp.float32) * w[:, k].astype(jnp.float32)
+    return out + b.astype(jnp.float32)
+
+
+def _inner_scan(da, dbx, h0):
+    """da, dbx: (B, Q, din, n); h0 (B, din, n). Returns (h_all, h_last)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    ca, cb = lax.associative_scan(combine, (da, dbx), axis=1)
+    h_all = ca * h0[:, None] + cb
+    return h_all, h_all[:, -1]
+
+
+def mamba_mixer(view, prefix: str, cfg: ArchConfig, x):
+    """Full-sequence mixer. x (B,S,d) -> (y (B,S,d), (h_last, conv_tail))."""
+    s = cfg.ssm
+    din, n, dtr = cfg.d_inner, s.d_state, cfg.dt_rank
+    b, seq, _ = x.shape
+
+    xz = view.mm(prefix + "w_in", x)                           # (B,S,2*din)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    conv_w = view.get(prefix + "conv_w")                        # (din, K)
+    conv_b = view.get(prefix + "conv_b")
+    x_c = jax.nn.silu(_conv_train(x_in, conv_w, conv_b, s.d_conv))
+    x_c = x_c.astype(x.dtype)
+
+    xdb = view.mm(prefix + "w_xproj", x_c)                      # (B,S,dtr+2n)
+    dt_r = xdb[..., :dtr]
+    b_ssm = xdb[..., dtr:dtr + n].astype(jnp.float32)           # (B,S,n)
+    c_ssm = xdb[..., dtr + n:].astype(jnp.float32)
+    dt_full = view.mm(prefix + "w_dt", dt_r)                    # (B,S,din)
+    a_log, d_skip, dt_bias = _ssm_params(view, prefix, cfg)
+    dt = jax.nn.softplus(dt_full.astype(jnp.float32) + dt_bias)  # (B,S,din)
+    a = -jnp.exp(a_log)                                          # (din,n)
+
+    if _SCAN_IMPL != "jnp":
+        from ..kernels.selective_scan import selective_scan_pallas
+        h0 = jnp.zeros((b, din, n), jnp.float32)
+        y, h_last = selective_scan_pallas(
+            dt, x_c.astype(jnp.float32), b_ssm, c_ssm, a, h0,
+            interpret=(_SCAN_IMPL == "pallas_interpret"))
+        y = y + d_skip * x_c.astype(jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        out = view.mm(prefix + "w_out", y)
+        conv_tail = x_in[:, -(s.d_conv - 1):].astype(jnp.float32) \
+            if seq >= s.d_conv - 1 else jnp.pad(
+                x_in.astype(jnp.float32),
+                ((0, 0), (s.d_conv - 1 - seq, 0), (0, 0)))
+        return out, (h_last, conv_tail)
+
+    from .layers import _best_chunk
+    chunk = _best_chunk(seq, s.chunk)
+    nc = seq // chunk
+
+    def chunk_body(h, inp):
+        dt_c, b_c, c_c, x_cc = inp      # (B,Q,din) (B,Q,n) (B,Q,n) (B,Q,din)
+        da = jnp.exp(dt_c[..., None] * a)                       # (B,Q,din,n)
+        dbx = (dt_c * x_cc.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+        h_all, h_last = _inner_scan(da, dbx, h)
+        y = jnp.einsum("bqdn,bqn->bqd", h_all, c_c)             # (B,Q,din)
+        return h_last, y
+
+    def split(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    h0 = jnp.zeros((b, din, n), jnp.float32)
+    body = jax.checkpoint(chunk_body, prevent_cse=False)
+    h_last, ys = lax.scan(body, h0, (split(dt), split(b_ssm), split(c_ssm),
+                                     split(x_c)))
+    y = ys.swapaxes(0, 1).reshape(b, seq, din)
+    y = y + d_skip * x_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = view.mm(prefix + "w_out", y)
+    conv_tail = x_in[:, -(s.d_conv - 1):].astype(jnp.float32) if seq >= s.d_conv - 1 \
+        else jnp.pad(x_in.astype(jnp.float32),
+                     ((0, 0), (s.d_conv - 1 - seq, 0), (0, 0)))
+    return out, (h_last, conv_tail)
+
+
+def mamba_decode(view, prefix: str, cfg: ArchConfig, x_tok, state):
+    """Single-token step. x_tok (B,1,d); state = (h (B,din,n) f32,
+    conv_tail (B, K-1, din) f32). Returns (y (B,1,d), new state)."""
+    s = cfg.ssm
+    din, n, dtr = cfg.d_inner, s.d_state, cfg.dt_rank
+    h, conv_tail = state
+    b = x_tok.shape[0]
+
+    xz = view.mm(prefix + "w_in", x_tok)                        # (B,1,2din)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    conv_w = view.get(prefix + "conv_w").astype(jnp.float32)    # (din,K)
+    conv_b = view.get(prefix + "conv_b").astype(jnp.float32)
+    window = jnp.concatenate([conv_tail, x_in.astype(jnp.float32)], axis=1)
+    x_c = jax.nn.silu(jnp.einsum("bkd,dk->bd", window, conv_w) + conv_b)
+    new_tail = window[:, 1:]
+
+    xdb = view.mm(prefix + "w_xproj", x_c[:, None].astype(x_tok.dtype))
+    dt_r = xdb[..., :dtr]
+    b_ssm = xdb[0:, 0, dtr:dtr + n].astype(jnp.float32)          # (B,n)
+    c_ssm = xdb[0:, 0, dtr + n:].astype(jnp.float32)
+    dt_full = view.mm(prefix + "w_dt", dt_r)[:, 0]               # (B,din)
+    a_log, d_skip, dt_bias = _ssm_params(view, prefix, cfg)
+    dt = jax.nn.softplus(dt_full.astype(jnp.float32) + dt_bias)
+    a = -jnp.exp(a_log)
+    da = jnp.exp(dt[..., None] * a)                              # (B,din,n)
+    dbx = (dt * x_c)[..., None] * b_ssm[:, None, :]
+    h_new = da * h + dbx
+    y = jnp.einsum("bdn,bn->bd", h_new, c_ssm) + d_skip * x_c
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = view.mm(prefix + "w_out", y[:, None].astype(x_tok.dtype))
+    return out, (h_new, new_tail)
+
+
+def mamba_state_spec(cfg: ArchConfig, batch: int):
+    s = cfg.ssm
+    return (
+        jax.ShapeDtypeStruct((batch, cfg.d_inner, s.d_state), jnp.float32),
+        jax.ShapeDtypeStruct((batch, s.d_conv - 1, cfg.d_inner), jnp.float32),
+    )

@@ -1,0 +1,744 @@
+"""Composable decoder (+ optional encoder) language models.
+
+A model is a sequence of *blocks*; each block kind = a mixer (attention /
+MLA / Mamba) plus an FFN (dense MLP / MoE / none). Layers of the same kind
+are stored as one stacked leaf group and executed with ``lax.scan`` (uniform
+models) or a Python loop over the pattern (gemma3's 5:1 local:global, jamba's
+mamba/attention interleave). Every weight access goes through the ZeRO
+``ParamView`` — the per-layer quantized all-gather therefore happens inside
+the scan body, reproducing ZeRO-3's per-module communication schedule.
+
+Caches: full-attention KV and MLA latent caches are *sequence-sharded* over
+the mesh's model axes with exact distributed flash-decode; sliding-window
+layers use replicated ring buffers; SSM layers carry O(1) state.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.partition import GATHER_Q, MATMUL, PLAIN, LeafSpec
+from . import layers as L
+from .config import ArchConfig, ShapeConfig
+from .moe import moe_ffn
+from .ssm import mamba_decode, mamba_mixer
+
+
+# ---------------------------------------------------------------------------
+# Block kinds
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KindMeta:
+    mixer: str                    # attn | mla | mamba
+    ffn: str                      # mlp | moe | none
+    window: int = 0               # sliding-window size (0 = full)
+    theta: float = 10_000.0
+    rope: bool = True
+    causal: bool = True
+    cross: bool = False           # + cross-attention (whisper decoder)
+    parallel: bool = False        # parallel residual (GPT-NeoX)
+
+
+def kind_meta(kind: str, cfg: ArchConfig) -> KindMeta:
+    t, tg = cfg.rope_theta, cfg.rope_theta_global
+    table = {
+        "attn": KindMeta("attn", "mlp", window=cfg.sliding_window, theta=t),
+        "attn_local": KindMeta("attn", "mlp", window=cfg.sliding_window, theta=t),
+        "attn_global": KindMeta("attn", "mlp", window=0, theta=tg),
+        "moe": KindMeta("attn", "moe", window=cfg.sliding_window, theta=t),
+        "mla": KindMeta("mla", "mlp", theta=t),
+        "neox": KindMeta("attn", "mlp", theta=t, parallel=True),
+        "mamba": KindMeta("mamba", "none"),
+        "mamba_mlp": KindMeta("mamba", "mlp"),
+        "mamba_moe": KindMeta("mamba", "moe"),
+        "attn_mlp": KindMeta("attn", "mlp", rope=False),
+        "attn_moe": KindMeta("attn", "moe", rope=False),
+        "enc": KindMeta("attn", "mlp", rope=False, causal=False),
+        "dec": KindMeta("attn", "mlp", rope=False, cross=True),
+    }
+    return table[kind]
+
+
+def _norm_specs(name: str, d: int, cfg: ArchConfig) -> dict[str, LeafSpec]:
+    out = {name: LeafSpec(name, (d,), PLAIN, init="ones")}
+    if cfg.norm == "ln":
+        out[name + "_b"] = LeafSpec(name + "_b", (d,), PLAIN, init="zeros")
+    return out
+
+
+def block_specs(kind: str, cfg: ArchConfig) -> dict[str, LeafSpec]:
+    """Per-layer leaf specs for one block kind (stack applied by the model)."""
+    m = kind_meta(kind, cfg)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hdim
+    s: dict[str, LeafSpec] = {}
+
+    def mat(name, shape):
+        s[name] = LeafSpec(name, shape, MATMUL)
+
+    if m.mixer == "attn":
+        s.update(_norm_specs("ln1", d, cfg))
+        mat("wq", (d, h * hd))
+        mat("wk", (d, kv * hd))
+        mat("wv", (d, kv * hd))
+        mat("wo", (h * hd, d))
+        if cfg.qkv_bias:
+            for b, width in (("bq", h * hd), ("bk", kv * hd), ("bv", kv * hd)):
+                s[b] = LeafSpec(b, (width,), PLAIN, init="zeros")
+    elif m.mixer == "mla":
+        ml = cfg.mla
+        s.update(_norm_specs("ln1", d, cfg))
+        mat("w_dq", (d, ml.q_lora))
+        s["q_norm"] = LeafSpec("q_norm", (ml.q_lora,), PLAIN, init="ones")
+        mat("w_uq", (ml.q_lora, h * (ml.qk_nope + ml.qk_rope)))
+        mat("w_dkv", (d, ml.kv_lora + ml.qk_rope))
+        s["kv_norm"] = LeafSpec("kv_norm", (ml.kv_lora,), PLAIN, init="ones")
+        mat("w_ukv", (ml.kv_lora, h * (ml.qk_nope + ml.v_head)))
+        mat("wo", (h * ml.v_head, d))
+    elif m.mixer == "mamba":
+        c = cfg.ssm
+        din, dtr = cfg.d_inner, cfg.dt_rank
+        s.update(_norm_specs("ln1", d, cfg))
+        mat("w_in", (d, 2 * din))
+        s["conv_w"] = LeafSpec("conv_w", (din, c.d_conv), PLAIN, init_scale=0.5)
+        s["conv_b"] = LeafSpec("conv_b", (din,), PLAIN, init="zeros")
+        mat("w_xproj", (din, dtr + 2 * c.d_state))
+        mat("w_dt", (dtr, din))
+        s["dt_bias"] = LeafSpec("dt_bias", (din,), PLAIN, init="dt_bias")
+        s["A_log"] = LeafSpec("A_log", (din, c.d_state), PLAIN, init="ssm_a")
+        s["D"] = LeafSpec("D", (din,), PLAIN, init="ones")
+        mat("w_out", (din, d))
+
+    if m.cross:
+        s.update(_norm_specs("ln_x", d, cfg))
+        mat("wq_x", (d, h * hd))
+        mat("wk_x", (d, h * hd))
+        mat("wv_x", (d, h * hd))
+        mat("wo_x", (h * hd, d))
+
+    if m.ffn == "mlp":
+        s.update(_norm_specs("ln2", d, cfg))
+        ff = cfg.d_ff
+        if cfg.act.endswith("_glu"):
+            mat("w_gate", (d, ff))
+            mat("w_up", (d, ff))
+            mat("w_down", (ff, d))
+        else:
+            mat("w_in", (d, ff))
+            mat("w_out_ff", (ff, d))
+            if cfg.norm == "ln":
+                s["b_in"] = LeafSpec("b_in", (ff,), PLAIN, init="zeros")
+                s["b_out"] = LeafSpec("b_out", (d,), PLAIN, init="zeros")
+    elif m.ffn == "moe":
+        s.update(_norm_specs("ln2", d, cfg))
+        e, ff = cfg.moe.n_experts, cfg.moe.d_ff
+        s["router"] = LeafSpec("router", (d, e), PLAIN, init_scale=0.02)
+        s["w_gate"] = LeafSpec("w_gate", (e, d, ff), GATHER_Q)
+        s["w_up"] = LeafSpec("w_up", (e, d, ff), GATHER_Q)
+        s["w_down"] = LeafSpec("w_down", (e, ff, d), GATHER_Q)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Ctx:
+    positions: Any                      # (S_loc,) int32 global positions
+    seq_axes: tuple[str, ...] = ()      # cache sequence-sharding axes
+    axis_sizes: Any = None              # dict axis -> size (for offsets)
+    enc_out: Any = None                 # (B, F, d) encoder output
+    want_cache: bool = False
+    seq_parallel: bool = False          # activations sharded over seq_axes;
+    # attention gathers K/V over seq_axes (gather-KV sequence parallelism)
+    q_offset: int = 0                   # global position of local chunk 0
+
+
+@dataclass(frozen=True)
+class DecCtx:
+    pos: Any                            # scalar int32: position being written
+    seq_axes: tuple[str, ...] = ()
+    axis_sizes: Any = None
+    enc_out: Any = None
+
+
+def _norm(v, p, name, x, cfg: ArchConfig):
+    if cfg.norm == "ln":
+        return L.layer_norm(x, v.get(p + name), v.get(p + name + "_b"))
+    return L.rms_norm(x, v.get(p + name))
+
+
+def _seq_shard(x, ctx) -> Any:
+    """Slice this device's seq chunk out of a locally-full (B, S, ...) tensor."""
+    if not ctx.seq_axes:
+        return x
+    n = math.prod(ctx.axis_sizes[a] for a in ctx.seq_axes)
+    s_loc = x.shape[1] // n
+    off = L.seq_offset(ctx.seq_axes, ctx.axis_sizes, s_loc)
+    return lax.dynamic_slice_in_dim(x, off, s_loc, axis=1)
+
+
+def _to_ring(k, window: int):
+    """(B, S, kv, hd) -> ring (B, W, kv, hd) holding positions p at slot p%W."""
+    b, s, kv, hd = k.shape
+    w = window
+    if s < w:
+        pad = jnp.zeros((b, w - s, kv, hd), k.dtype)
+        return jnp.concatenate([k, pad], axis=1)  # slots 0..s-1 filled
+    pos = jnp.arange(s - w, s)
+    ring = jnp.zeros((b, w, kv, hd), k.dtype)
+    return ring.at[:, pos % w].set(k[:, s - w:])
+
+
+# ---------------------------------------------------------------------------
+# Mixers — full sequence
+# ---------------------------------------------------------------------------
+
+def _attn_fwd(v, p, cfg, m: KindMeta, x, ctx: Ctx):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hdim
+    q = v.mm(p + "wq", x).reshape(b, s, h, hd)
+    k = v.mm(p + "wk", x).reshape(b, s, kv, hd)
+    val = v.mm(p + "wv", x).reshape(b, s, kv, hd)
+    if cfg.qkv_bias:
+        q = q + v.get(p + "bq").reshape(h, hd)
+        k = k + v.get(p + "bk").reshape(kv, hd)
+        val = val + v.get(p + "bv").reshape(kv, hd)
+    if m.rope:
+        cos, sin = L.rope_freqs(ctx.positions, hd, m.theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    if ctx.seq_parallel:
+        # gather-KV sequence parallelism: q stays local (S/n positions),
+        # K/V (already rope'd at their global positions) gathered once
+        k_full = lax.all_gather(k, ctx.seq_axes, axis=1, tiled=True)
+        v_full = lax.all_gather(val, ctx.seq_axes, axis=1, tiled=True)
+        o = L.flash_attention(q, k_full, v_full, causal=m.causal,
+                              window=m.window, q_offset=ctx.q_offset)
+    else:
+        o = L.flash_attention(q, k, val, causal=m.causal, window=m.window)
+    out = v.mm(p + "wo", o.reshape(b, s, h * hd))
+    cache = None
+    if ctx.want_cache:
+        if m.window:
+            src_k = k_full if ctx.seq_parallel else k
+            src_v = v_full if ctx.seq_parallel else val
+            cache = {"k": _to_ring(src_k, m.window),
+                     "v": _to_ring(src_v, m.window)}
+        elif ctx.seq_parallel:
+            cache = {"k": k, "v": val}        # already this device's chunk
+        else:
+            cache = {"k": _seq_shard(k, ctx), "v": _seq_shard(val, ctx)}
+    return out, cache
+
+
+def _cross_fwd(v, p, cfg, x, ctx: Ctx):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hdim
+    enc = ctx.enc_out
+    f = enc.shape[1]
+    q = v.mm(p + "wq_x", x).reshape(b, s, h, hd)
+    k = v.mm(p + "wk_x", enc).reshape(b, f, h, hd)
+    val = v.mm(p + "wv_x", enc).reshape(b, f, h, hd)
+    o = L.flash_attention(q, k, val, causal=False)
+    out = v.mm(p + "wo_x", o.reshape(b, s, h * hd))
+    cache = {"kx": k, "vx": val} if ctx.want_cache else None
+    return out, cache
+
+
+def _mla_fwd(v, p, cfg, m: KindMeta, x, ctx: Ctx):
+    ml = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope, vh = ml.qk_nope, ml.qk_rope, ml.v_head
+    q_lat = L.rms_norm(v.mm(p + "w_dq", x), v.get(p + "q_norm"))
+    q = v.mm(p + "w_uq", q_lat).reshape(b, s, h, nope + rope)
+    kv_full = v.mm(p + "w_dkv", x)                       # (B,S,kv_lora+rope)
+    kv_lat = L.rms_norm(kv_full[..., :ml.kv_lora], v.get(p + "kv_norm"))
+    k_rope = kv_full[..., ml.kv_lora:]                   # (B,S,rope) shared
+    cos, sin = L.rope_freqs(ctx.positions, rope, m.theta)
+    q_rope = L.apply_rope(q[..., nope:], cos, sin)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)  # (B,S,1,rope)
+    q_full = jnp.concatenate([q[..., :nope], q_rope], axis=-1)
+    if ctx.seq_parallel:
+        # MLA's signature win: gather the *compressed latent* over the seq
+        # shards ((kv_lora+rope) per position, ~18x smaller than K+V for
+        # minicpm3), then decompress locally for the local-q flash pass.
+        lat_loc = jnp.concatenate([kv_lat, k_rope[:, :, 0, :]], axis=-1)
+        lat_all = lax.all_gather(lat_loc, ctx.seq_axes, axis=1, tiled=True)
+        s_all = lat_all.shape[1]
+        kv_up = v.mm(p + "w_ukv",
+                     lat_all[..., :ml.kv_lora]).reshape(b, s_all, h,
+                                                        nope + vh)
+        k_nope, val = kv_up[..., :nope], kv_up[..., nope:]
+        k_rope_all = lat_all[:, :, None, ml.kv_lora:]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_all, (b, s_all, h, rope))],
+            axis=-1)
+        o = L.flash_attention(q_full, k_full, val, causal=True,
+                              q_offset=ctx.q_offset)
+    else:
+        kv_up = v.mm(p + "w_ukv", kv_lat).reshape(b, s, h, nope + vh)
+        k_nope, val = kv_up[..., :nope], kv_up[..., nope:]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope))], axis=-1)
+        o = L.flash_attention(q_full, k_full, val, causal=True)
+    out = v.mm(p + "wo", o.reshape(b, s, h * vh))
+    cache = None
+    if ctx.want_cache:
+        lat = jnp.concatenate([kv_lat, k_rope[:, :, 0, :]], axis=-1)
+        cache = {"lat": lat if ctx.seq_parallel else _seq_shard(lat, ctx)}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Mixers — decode
+# ---------------------------------------------------------------------------
+
+def _attn_decode(v, p, cfg, m: KindMeta, x, cache, dc: DecCtx):
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hdim
+    q = v.mm(p + "wq", x).reshape(b, 1, h, hd)
+    k = v.mm(p + "wk", x).reshape(b, 1, kv, hd)
+    val = v.mm(p + "wv", x).reshape(b, 1, kv, hd)
+    if cfg.qkv_bias:
+        q = q + v.get(p + "bq").reshape(h, hd)
+        k = k + v.get(p + "bk").reshape(kv, hd)
+        val = val + v.get(p + "bv").reshape(kv, hd)
+    if m.rope:
+        posv = L._row_positions(dc.pos, b)[:, None]     # (B,1)
+        cos, sin = L.rope_freqs(posv, hd, m.theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    q1, k1, v1 = q[:, 0], k, val
+    if m.window:
+        w = cache["k"].shape[1]
+        slot = dc.pos % w
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), slot, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), slot, axis=1)
+        o = L.ring_decode(q1, ck, cv, dc.pos, m.window)
+    else:
+        ck = L.sharded_cache_write(cache["k"], k1, dc.pos,
+                                   seq_axes=dc.seq_axes, axis_sizes=dc.axis_sizes)
+        cv = L.sharded_cache_write(cache["v"], v1, dc.pos,
+                                   seq_axes=dc.seq_axes, axis_sizes=dc.axis_sizes)
+        off = L.seq_offset(dc.seq_axes, dc.axis_sizes, ck.shape[1]) \
+            if dc.seq_axes else 0
+        o = L.flash_decode(q1, ck, cv, dc.pos, seq_axes=dc.seq_axes,
+                           seq_offset=off)
+    out = v.mm(p + "wo", o.reshape(b, 1, h * hd))
+    return out, {"k": ck, "v": cv}
+
+
+def _cross_decode(v, p, cfg, x, cache, dc: DecCtx):
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.hdim
+    q = v.mm(p + "wq_x", x).reshape(b, h, hd)
+    o = L.flash_decode(q, cache["kx"], cache["vx"],
+                       jnp.asarray(cache["kx"].shape[1] - 1))
+    return v.mm(p + "wo_x", o.reshape(b, 1, h * hd)), cache
+
+
+def _mla_decode(v, p, cfg, m: KindMeta, x, cache, dc: DecCtx):
+    """Absorbed MLA decode over the compressed latent cache."""
+    ml = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rope, vh = ml.qk_nope, ml.qk_rope, ml.v_head
+    q_lat = L.rms_norm(v.mm(p + "w_dq", x), v.get(p + "q_norm"))
+    q = v.mm(p + "w_uq", q_lat).reshape(b, 1, h, nope + rope)
+    posv = L._row_positions(dc.pos, b)[:, None]         # (B,1)
+    cos, sin = L.rope_freqs(posv, rope, m.theta)
+    q_rope = L.apply_rope(q[..., nope:], cos, sin)[:, 0]      # (B,h,rope)
+    q_nope = q[:, 0, :, :nope]
+    kv_full = v.mm(p + "w_dkv", x)                            # (B,1,kv_lora+rope)
+    kv_lat = L.rms_norm(kv_full[..., :ml.kv_lora], v.get(p + "kv_norm"))
+    k_rope_new = L.apply_rope(kv_full[:, :, None, ml.kv_lora:], cos, sin)[:, :, 0]
+    lat_new = jnp.concatenate([kv_lat, k_rope_new], axis=-1)  # (B,1,lora+rope)
+    clat = _lat_write(cache["lat"], lat_new, dc)
+    # absorbed scores: q_abs (B,h,kv_lora) via W_ukv's key half
+    w_ukv = v.get(p + "w_ukv").reshape(ml.kv_lora, h, nope + vh)
+    w_k = w_ukv[..., :nope]                                   # (lora,h,nope)
+    w_v = w_ukv[..., nope:]                                   # (lora,h,vh)
+    q_abs = jnp.einsum("bhn,chn->bhc", q_nope.astype(jnp.float32),
+                       w_k.astype(jnp.float32))
+    lat_c = clat[..., :ml.kv_lora].astype(jnp.float32)        # (B,S,lora)
+    rope_c = clat[..., ml.kv_lora:].astype(jnp.float32)       # (B,S,rope)
+    s_loc = clat.shape[1]
+    off = L.seq_offset(dc.seq_axes, dc.axis_sizes, s_loc) if dc.seq_axes else 0
+    kpos = off + jnp.arange(s_loc)
+    valid = kpos[None, :] <= L._row_positions(dc.pos, b)[:, None]   # (B,S)
+    scores = (jnp.einsum("bhc,bsc->bhs", q_abs, lat_c)
+              + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32), rope_c))
+    scores = scores / math.sqrt(nope + rope)
+    scores = jnp.where(valid[:, None, :], scores, L.NEG_INF)
+    m_loc = jnp.max(scores, axis=-1)
+    m_g = lax.pmax(m_loc, dc.seq_axes) if dc.seq_axes else m_loc
+    pr = jnp.exp(scores - m_g[..., None])
+    ctx_lat = jnp.einsum("bhs,bsc->bhc", pr, lat_c)
+    den = pr.sum(-1)
+    if dc.seq_axes:
+        ctx_lat = lax.psum(ctx_lat, dc.seq_axes)
+        den = lax.psum(den, dc.seq_axes)
+    ctx_lat = ctx_lat / jnp.maximum(den[..., None], 1e-30)
+    o = jnp.einsum("bhc,chv->bhv", ctx_lat, w_v.astype(jnp.float32))
+    out = v.mm(p + "wo", o.reshape(b, 1, h * vh).astype(x.dtype))
+    return out, {"lat": clat}
+
+
+def _lat_write(lat, new, dc: DecCtx):
+    """Write (B,1,C) latent row at global pos (scalar or per-row) into the
+    seq-sharded (B,S,C) latent cache."""
+    b, s_loc, _ = lat.shape
+    p = jnp.asarray(dc.pos, jnp.int32)
+    if dc.seq_axes:
+        idx = L._linear_index(dc.seq_axes, dc.axis_sizes)
+        local = p - idx * s_loc
+    else:
+        local = p
+    if p.ndim == 0:
+        inb = (local >= 0) & (local < s_loc)
+        upd = lax.dynamic_update_slice_in_dim(lat, new.astype(lat.dtype),
+                                              jnp.clip(local, 0, s_loc - 1),
+                                              axis=1)
+        return jnp.where(inb, upd, lat)
+    oh = jnp.arange(s_loc)[None, :] == local.reshape(b)[:, None]
+    return jnp.where(oh[:, :, None], new.astype(lat.dtype), lat)
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+def _ffn(v, p, cfg, m: KindMeta, x):
+    if m.ffn == "none":
+        return None, jnp.zeros((), jnp.float32)
+    h = _norm(v, p, "ln2", x, cfg)
+    if m.ffn == "moe":
+        y, aux = moe_ffn(v, p, cfg, h)
+        return y, aux
+    if cfg.act.endswith("_glu"):
+        act = jax.nn.silu if cfg.act.startswith("silu") else jax.nn.gelu
+        y = v.mm(p + "w_down", act(v.mm(p + "w_gate", h)) * v.mm(p + "w_up", h))
+    else:
+        z = v.mm(p + "w_in", h)
+        if cfg.norm == "ln":
+            z = z + v.get(p + "b_in")
+        y = v.mm(p + "w_out_ff", jax.nn.gelu(z))
+        if cfg.norm == "ln":
+            y = y + v.get(p + "b_out")
+    return y, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Block forward / decode
+# ---------------------------------------------------------------------------
+
+def block_fwd(kind: str, v, cfg: ArchConfig, x, ctx: Ctx):
+    """Returns (x, aux_loss, cache_entry | None)."""
+    m = kind_meta(kind, cfg)
+    p = kind + "."
+    cache: dict[str, Any] = {}
+
+    h = _norm(v, p, "ln1", x, cfg)
+    if m.mixer == "attn":
+        o, c = _attn_fwd(v, p, cfg, m, h, ctx)
+    elif m.mixer == "mla":
+        o, c = _mla_fwd(v, p, cfg, m, h, ctx)
+    else:
+        o, st = mamba_mixer(v, p, cfg, h)
+        c = {"h": st[0], "conv": st[1]} if ctx.want_cache else None
+    if c:
+        cache.update(c)
+
+    if m.parallel:
+        y, aux = _ffn(v, p, cfg, m, x)
+        x = x + o + (y if y is not None else 0.0)
+    else:
+        x = x + o
+        if m.cross:
+            xo, cc = _cross_fwd(v, p, cfg, _norm(v, p, "ln_x", x, cfg), ctx)
+            x = x + xo
+            if cc:
+                cache.update(cc)
+        y, aux = _ffn(v, p, cfg, m, x)
+        if y is not None:
+            x = x + y
+    return x, aux, (cache or None)
+
+
+def block_decode(kind: str, v, cfg: ArchConfig, x, cache, dc: DecCtx):
+    """x (B,1,d); cache = this layer's entry. Returns (x, new_cache)."""
+    m = kind_meta(kind, cfg)
+    p = kind + "."
+    h = _norm(v, p, "ln1", x, cfg)
+    new_cache = dict(cache)
+    if m.mixer == "attn":
+        o, upd = _attn_decode(v, p, cfg, m, h, cache, dc)
+        new_cache.update(upd)
+    elif m.mixer == "mla":
+        o, upd = _mla_decode(v, p, cfg, m, h, cache, dc)
+        new_cache.update(upd)
+    else:
+        o, st = mamba_decode(v, p, cfg, h, (cache["h"], cache["conv"]))
+        new_cache.update({"h": st[0], "conv": st[1]})
+
+    if m.parallel:
+        y, _ = _ffn(v, p, cfg, m, x)
+        x = x + o + (y if y is not None else 0.0)
+    else:
+        x = x + o
+        if m.cross:
+            xo, _ = _cross_decode(v, p, cfg, _norm(v, p, "ln_x", x, cfg),
+                                  cache, dc)
+            x = x + xo
+        y, _ = _ffn(v, p, cfg, m, x)
+        if y is not None:
+            x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions, d: int):
+    half = d // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class LM:
+    """Decoder-only LM (dense/MoE/SSM/hybrid/VLM) or encoder-decoder (audio)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.kinds = list(dict.fromkeys(cfg.pattern))
+        self.counts = cfg.kind_counts()
+
+    # -- specs ---------------------------------------------------------------
+
+    def leaf_specs(self) -> dict[str, LeafSpec]:
+        cfg = self.cfg
+        out: dict[str, LeafSpec] = {
+            "embed": LeafSpec("embed", (cfg.vocab, cfg.d_model), MATMUL,
+                              init_scale=0.02),
+        }
+        out.update(_norm_specs("final_norm", cfg.d_model, cfg))
+        if not cfg.tie_embeddings:
+            out["lm_head"] = LeafSpec("lm_head", (cfg.vocab, cfg.d_model),
+                                      MATMUL, init_scale=0.02)
+        for kind in self.kinds:
+            for n, spec in block_specs(kind, cfg).items():
+                name = f"{kind}.{n}"
+                out[name] = replace(spec, name=name, stack=self.counts[kind])
+        if cfg.enc_layers:
+            for n, spec in block_specs("enc", cfg).items():
+                name = f"enc.{n}"
+                out[name] = replace(spec, name=name, stack=cfg.enc_layers)
+            for k, v in _norm_specs("enc_norm", cfg.d_model, cfg).items():
+                out[k] = v
+        return out
+
+    def _block_names(self, kind: str) -> list[str]:
+        return [f"{kind}.{n}" for n in block_specs(kind, self.cfg)]
+
+    # -- embeddings ------------------------------------------------------------
+
+    def _embed(self, view, tokens):
+        x = view.embed_lookup("embed", tokens)
+        if self.cfg.embed_scale:
+            x = x * math.sqrt(self.cfg.d_model)
+        return x
+
+    def _head_weight(self, view):
+        return view.get("embed") if self.cfg.tie_embeddings \
+            else view.get("lm_head")
+
+    def _encode(self, view, frames, ctx: Ctx):
+        """Whisper-style encoder over precomputed frame embeddings."""
+        cfg = self.cfg
+        pos = jnp.arange(frames.shape[1])
+        x = frames + _sinusoid(pos, cfg.d_model).astype(frames.dtype)
+        ectx = replace(ctx, positions=pos, want_cache=False, enc_out=None)
+
+        names = self._block_names("enc")
+        stacked = view.stacked(names)
+
+        def body(c, lp):
+            x2, _, _ = block_fwd("enc", view.sub(lp), cfg, c, ectx)
+            return x2, None
+
+        x, _ = lax.scan(jax.checkpoint(body, prevent_cse=False), x, stacked)
+        return _norm(view, "", "enc_norm", x, cfg)
+
+    # -- stack execution ---------------------------------------------------------
+
+    def _run(self, view, x, ctx: Ctx):
+        """Full-sequence pass. Returns (x, aux, caches_by_kind | None)."""
+        cfg = self.cfg
+        aux0 = jnp.zeros((), jnp.float32)
+        caches: dict[str, Any] = {}
+        if cfg.uniform:
+            kind = cfg.pattern[0]
+            stacked = view.stacked(self._block_names(kind))
+
+            def body(c, lp):
+                xx, aa = c
+                x2, aux, cache = block_fwd(kind, view.sub(lp), cfg, xx, ctx)
+                return (x2, aa + aux), cache
+
+            (x, aux), kc = lax.scan(jax.checkpoint(body, prevent_cse=False),
+                                    (x, aux0), stacked)
+            if ctx.want_cache:
+                caches[kind] = kc
+        else:
+            aux = aux0
+            stacks = {k: view.stacked(self._block_names(k)) for k in self.kinds}
+            idx = {k: 0 for k in self.kinds}
+            percache: dict[str, list] = {k: [] for k in self.kinds}
+            for kind in cfg.pattern:
+                i = idx[kind]
+                idx[kind] += 1
+                lp = jax.tree.map(lambda a: a[i], stacks[kind])
+
+                def one(x_, lp_=lp, kind_=kind):
+                    return block_fwd(kind_, view.sub(lp_), cfg, x_, ctx)
+
+                x, a, cache = jax.checkpoint(one, prevent_cse=False)(x)
+                aux = aux + a
+                if ctx.want_cache:
+                    percache[kind].append(cache)
+            if ctx.want_cache:
+                for k, lst in percache.items():
+                    caches[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *lst)
+        return x, aux, (caches if ctx.want_cache else None)
+
+    def _run_decode(self, view, x, caches, dc: DecCtx):
+        cfg = self.cfg
+        new: dict[str, Any] = {}
+        if cfg.uniform:
+            kind = cfg.pattern[0]
+            stacked = view.stacked(self._block_names(kind))
+
+            def body(c, inp):
+                lp, cl = inp
+                x2, nc = block_decode(kind, view.sub(lp), cfg, c, cl, dc)
+                return x2, nc
+
+            x, nk = lax.scan(body, x, (stacked, caches[kind]))
+            new[kind] = nk
+        else:
+            stacks = {k: view.stacked(self._block_names(k)) for k in self.kinds}
+            idx = {k: 0 for k in self.kinds}
+            updated: dict[str, list] = {k: [] for k in self.kinds}
+            for kind in cfg.pattern:
+                i = idx[kind]
+                idx[kind] += 1
+                lp = jax.tree.map(lambda a: a[i], stacks[kind])
+                cl = jax.tree.map(lambda a: a[i], caches[kind])
+                x, nc = block_decode(kind, view.sub(lp), cfg, x, cl, dc)
+                updated[kind].append(nc)
+            for k, lst in updated.items():
+                new[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *lst)
+        return x, new
+
+    # -- public entry points --------------------------------------------------
+
+    def loss(self, view, batch):
+        """batch: tokens (B, St+1) [+ patches (B,P,d) | frames (B,F,d)]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        x = self._embed(view, inputs)
+        n_prefix = 0
+        ctx = Ctx(positions=jnp.arange(x.shape[1]))
+        if cfg.n_patches:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            n_prefix = cfg.n_patches
+            ctx = Ctx(positions=jnp.arange(x.shape[1]))
+        if cfg.enc_layers:
+            enc = self._encode(view, batch["frames"].astype(x.dtype), ctx)
+            ctx = replace(ctx, enc_out=enc)
+        x, aux, _ = self._run(view, x, ctx)
+        x = _norm(view, "", "final_norm", x, cfg)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        w = self._head_weight(view)
+        loss_sum, ntok = L.chunked_cross_entropy(
+            x, w, labels, jnp.ones_like(labels, jnp.float32))
+        return loss_sum + aux * ntok, ntok
+
+    def sp_eligible(self) -> bool:
+        """Gather-KV sequence parallelism needs every mixer to be attention
+        (SSM scans have a serial cross-chunk dependency; see DESIGN.md)."""
+        return all(kind_meta(k, self.cfg).mixer in ("attn", "mla")
+                   for k in self.cfg.pattern)
+
+    def prefill(self, view, batch, *, seq_axes=(), axis_sizes=None,
+                seq_parallel: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(view, tokens)
+        ctx = Ctx(positions=jnp.arange(x.shape[1]), seq_axes=seq_axes,
+                  axis_sizes=axis_sizes, want_cache=True)
+        if cfg.n_patches:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            ctx = replace(ctx, positions=jnp.arange(x.shape[1]))
+        if cfg.enc_layers:
+            enc = self._encode(view, batch["frames"].astype(x.dtype), ctx)
+            ctx = replace(ctx, enc_out=enc)
+
+        s_total = x.shape[1]
+        n_sp = math.prod(axis_sizes[a] for a in seq_axes) if seq_axes else 1
+        seq_parallel = (seq_parallel and self.sp_eligible() and n_sp > 1
+                        and s_total % n_sp == 0)
+        if seq_parallel:
+            s_loc = s_total // n_sp
+            off = L.seq_offset(seq_axes, axis_sizes, s_loc)
+            x = lax.dynamic_slice_in_dim(x, off, s_loc, axis=1)
+            # q_offset is traced (device-dependent) — the jnp flash path
+            # masks with traced positions; the Pallas path requires a static
+            # offset and falls back automatically (layers.flash_attention).
+            ctx = replace(ctx, positions=off + jnp.arange(s_loc),
+                          seq_parallel=True, q_offset=off)
+        x, _, caches = self._run(view, x, ctx)
+        x = _norm(view, "", "final_norm", x, cfg)
+        if seq_parallel:
+            idx = L._linear_index(seq_axes, axis_sizes)
+            x_last = jnp.where(idx == n_sp - 1, x[:, -1:], 0)
+            x_last = lax.psum(x_last.astype(jnp.float32),
+                              seq_axes).astype(x.dtype)
+        else:
+            x_last = x[:, -1:]
+        logits = self._head_logits(view, x_last)
+        caches["pos"] = jnp.asarray(s_total, jnp.int32)
+        return logits, caches
+
+    def _head_logits(self, view, x_last):
+        name = "embed" if self.cfg.tie_embeddings else "lm_head"
+        return view.mm(name, x_last, transpose=True)[:, 0].astype(jnp.float32)
+
+    def decode(self, view, caches, batch, *, seq_axes=(), axis_sizes=None):
+        """One token. batch: {"token": (B,) int32, ["row_pos": (B,) int32]}.
+
+        ``row_pos`` (continuous batching) overrides the shared cache position
+        with per-row write/attend positions. Returns (logits, caches)."""
+        cfg = self.cfg
+        pos = batch.get("row_pos", caches["pos"])
+        x = self._embed(view, batch["token"][:, None])
+        dc = DecCtx(pos=pos, seq_axes=seq_axes, axis_sizes=axis_sizes)
+        layer_caches = {k: v for k, v in caches.items() if k != "pos"}
+        x, new = self._run_decode(view, x, layer_caches, dc)
+        x = _norm(view, "", "final_norm", x, cfg)
+        logits = self._head_logits(view, x)
+        new["pos"] = (jnp.max(pos) if jnp.ndim(pos) else pos) \
+            .astype(jnp.int32) + 1
+        return logits, new

@@ -1,0 +1,41 @@
+"""Sharded AdamW: the pure per-shard update used by ZeroEngine.
+
+Operates on optimizer-shard-layout flat tensors — every device updates only
+the slice of the master parameters matching its optimizer shard (paper §V-C),
+so the optimizer itself needs no communication.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class AdamWOut(NamedTuple):
+    master: jnp.ndarray
+    m: jnp.ndarray
+    v: jnp.ndarray
+
+
+def adamw_update(master, m, v, grad, *, step, lr, beta1=0.9, beta2=0.95,
+                 eps=1e-8, weight_decay=0.0) -> AdamWOut:
+    """One decoupled-weight-decay Adam step on a flat fp32 shard.
+
+    ``step`` is the 1-based step index (bias correction)."""
+    g = grad.astype(jnp.float32)
+    m = beta1 * m + (1 - beta1) * g
+    v = beta2 * v + (1 - beta2) * jnp.square(g)
+    t = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    mh = m / (1 - beta1 ** t)
+    vh = v / (1 - beta2 ** t)
+    upd = mh / (jnp.sqrt(vh) + eps)
+    new_master = master * (1 - lr * weight_decay) - lr * upd
+    return AdamWOut(new_master, m, v)
+
+
+def cosine_lr(step, *, base_lr, warmup_steps, total_steps, min_frac=0.1):
+    warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * cos

@@ -1,0 +1,113 @@
+"""Serving runtime: batched prefill + single-token decode steps.
+
+Decode shapes lower ``serve_step`` — one new token against a KV cache of
+``seq_len``. Full-attention / MLA caches are **sequence-sharded** over the
+mesh's model-tier axes and attended with exact distributed flash-decode
+(partial softmax per shard + pmax/psum combine); sliding-window layers keep
+replicated ring buffers; SSM layers carry O(1) recurrent state.
+
+Weights are served from the same ZeRO primary shards as training (the
+per-layer quantized all-gather) — FSDP-style inference. A tensor-parallel
+serving path is a possible beyond-paper extension; see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.engine import ParamView, ZeroEngine
+from ..models.config import ShapeConfig
+from ..models.registry import ModelDef, batch_axes, data_axes, model_axes
+
+
+@dataclass
+class ServeConfig:
+    seq_axes: tuple[str, ...]          # cache sequence-sharding axes
+    batch_axes_: tuple[str, ...]       # cache/batch batch-sharding axes
+
+
+def make_serve_config(mesh: Mesh, global_batch: int) -> ServeConfig:
+    baxes = batch_axes(mesh, global_batch, candidates=data_axes(mesh))
+    return ServeConfig(seq_axes=model_axes(mesh), batch_axes_=baxes)
+
+
+class ServeEngine:
+    def __init__(self, model: ModelDef, engine: ZeroEngine, mesh: Mesh,
+                 shape: ShapeConfig, sc: ServeConfig | None = None):
+        self.model = model
+        self.engine = engine
+        self.mesh = mesh
+        self.shape = shape
+        self.sc = sc or make_serve_config(mesh, shape.global_batch)
+        self.axis_sizes = dict(mesh.shape)
+
+    # -- prefill ---------------------------------------------------------------
+
+    def make_prefill(self, seq_parallel: bool = False):
+        m, eng, sc = self.model, self.engine, self.sc
+        shapes = m.prefill_batch_shapes(self.shape)
+        bspecs = m.batch_pspecs(shapes, sc.batch_axes_)
+        cspecs = m.cache_pspecs(self.shape, sc.batch_axes_, sc.seq_axes)
+        prim_specs = eng.state_in_specs()["primaries"]
+        fn = m.prefill_fn(sc.seq_axes, self.axis_sizes, seq_parallel)
+
+        def local(primaries, batch):
+            view = ParamView(eng.fns, primaries)
+            return fn(view, batch)
+
+        ba = sc.batch_axes_ if sc.batch_axes_ else None
+        sm = jax.shard_map(local, mesh=self.mesh,
+                           in_specs=(prim_specs, bspecs),
+                           out_specs=(P(ba), cspecs), check_vma=False)
+        return jax.jit(sm)
+
+    def prefill_inputs_sds(self):
+        shapes = self.model.prefill_batch_shapes(self.shape)
+        return self.model.batch_sds(shapes, self.mesh, self.sc.batch_axes_)
+
+    # -- decode ------------------------------------------------------------------
+
+    def make_decode(self, per_row_pos: bool = False):
+        m, eng, sc = self.model, self.engine, self.sc
+        shapes = m.decode_batch_shapes(self.shape)
+        if per_row_pos:
+            shapes["row_pos"] = ((self.shape.global_batch,), jnp.int32)
+        bspecs = m.batch_pspecs(shapes, sc.batch_axes_)
+        cspecs = m.cache_pspecs(self.shape, sc.batch_axes_, sc.seq_axes)
+        prim_specs = eng.state_in_specs()["primaries"]
+        fn = m.decode_fn(sc.seq_axes, self.axis_sizes)
+
+        def local(primaries, caches, batch):
+            view = ParamView(eng.fns, primaries)
+            return fn(view, caches, batch)
+
+        ba = sc.batch_axes_ if sc.batch_axes_ else None
+        sm = jax.shard_map(local, mesh=self.mesh,
+                           in_specs=(prim_specs, cspecs, bspecs),
+                           out_specs=(P(ba), cspecs), check_vma=False)
+        return jax.jit(sm, donate_argnums=(1,))
+
+    def decode_inputs_sds(self):
+        m, sc = self.model, self.sc
+        shapes = m.decode_batch_shapes(self.shape)
+        batch = m.batch_sds(shapes, self.mesh, sc.batch_axes_)
+        caches = m.cache_sds(self.shape, self.mesh, sc.batch_axes_, sc.seq_axes)
+        return caches, batch
+
+    # -- driver: generate n tokens greedily ---------------------------------------
+
+    def generate(self, state, prompt_batch, n_tokens: int):
+        """Greedy generation driver (CPU-testable): prefill then decode loop."""
+        prefill = self.make_prefill()
+        decode = self.make_decode()
+        logits, caches = prefill(state["primaries"], prompt_batch)
+        toks = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]
+        for _ in range(n_tokens - 1):
+            logits, caches = decode(state["primaries"], caches,
+                                    {"token": toks[-1]})
+            toks.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        return jnp.stack(toks, axis=1)

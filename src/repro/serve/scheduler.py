@@ -1,0 +1,174 @@
+"""Continuous batching: a slot-based request scheduler over the decode step.
+
+vLLM-style serving shape at miniature scale: the server owns a fixed-B KV
+cache; incoming requests are prefilled into free slots (single-row prefill,
+cache row spliced in with one donated update), all active slots decode in
+lock-step, and finished rows (EOS or max-length) free their slot for the
+next queued request — no global pipeline flush when one request ends.
+
+Per-row positions: the engine-level cache keeps one scalar `pos`, which a
+mixed-age batch can't share, so the scheduler tracks per-slot positions and
+(a) left-pads nothing — each prefill writes absolute positions 0..p-1 into
+its row, and (b) passes decode steps the *maximum* position while masking
+logits of inactive slots. Rows decode with their own causal masks because
+cache validity is position-based (flash_decode masks `kpos <= pos` per row
+via per-row `pos` — see `row_pos` plumbed through `batch`).
+
+This module is CPU-runnable end-to-end (examples/continuous_batching.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ShapeConfig
+from .engine import ServeEngine
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new: int
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _splice(caches_dst, caches_src, slot: int):
+    """Copy batch row 0 of caches_src into row `slot` of caches_dst."""
+    def one(dst, src):
+        if dst.ndim == 0:
+            return dst
+        # batch dim is axis 1 for (L, B, ...) entries
+        row = jax.lax.dynamic_slice_in_dim(src, 0, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(dst, row.astype(dst.dtype),
+                                                   slot, axis=1)
+
+    out = {}
+    for kind, entry in caches_dst.items():
+        if kind == "pos":
+            out[kind] = jnp.maximum(caches_dst["pos"], caches_src["pos"])
+            continue
+        out[kind] = jax.tree.map(one, entry, caches_src[kind])
+    return out
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over ServeEngine steps."""
+
+    def __init__(self, model, engine, mesh, *, n_slots: int, max_len: int,
+                 prompt_len: int, eos_token: int = -1):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prompt_len = prompt_len
+        self.eos = eos_token
+        self.serve = ServeEngine(model, engine, mesh,
+                                 ShapeConfig("cb", max_len, n_slots, "decode"))
+        self.serve1 = ServeEngine(model, engine, mesh,
+                                  ShapeConfig("cb1", prompt_len, 1, "decode"))
+        self._prefill1 = self.serve1.make_prefill()
+        self._decode = self.serve.make_decode(per_row_pos=True)
+        self.slots: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+        self.caches = None
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+
+    # -- api -----------------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _init_caches(self, primaries):
+        import jax.numpy as jnp
+        sds = self.serve.decode_inputs_sds()[0]
+
+        def zero(s):
+            return jnp.zeros(s.shape, s.dtype)
+
+        self.caches = jax.tree.map(zero, sds)
+
+    def _admit(self, primaries):
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = np.asarray(req.prompt, np.int32)[: self.prompt_len]
+            if len(prompt) < self.prompt_len:   # bucket-pad short prompts
+                prompt = np.pad(prompt, (self.prompt_len - len(prompt),),
+                                mode="edge")
+            logits, c1 = self._prefill1(primaries,
+                                        {"tokens": jnp.asarray(prompt[None])})
+            # grow the single-row cache to the slot layout and splice
+            c1 = _grow_seq(c1, self.model, self.max_len)
+            self.caches = _splice(self.caches, c1, slot)
+            tok = int(jnp.argmax(logits[0]))
+            req.out.append(tok)
+            self.slots[slot] = req
+            self.last_tok[slot] = tok
+            self.pos[slot] = self.prompt_len
+
+    def step(self, primaries) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        if self.caches is None:
+            self._init_caches(primaries)
+        self._admit(primaries)
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        # every row decodes at its own position (per-row rope, masks and
+        # cache writes); inactive rows write harmlessly at their stale pos
+        logits, self.caches = self._decode(
+            primaries, self.caches,
+            {"token": jnp.asarray(self.last_tok),
+             "row_pos": jnp.asarray(self.pos)})
+        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.out.append(tok)
+            self.last_tok[i] = tok
+            self.pos[i] += 1
+            if tok == self.eos or len(req.out) >= req.max_new \
+                    or int(self.pos[i]) >= self.max_len - 1:
+                req.done = True
+                self.slots[i] = None
+        return len(active)
+
+    def run(self, primaries, requests: list[Request], max_steps: int = 10_000):
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (any(self.slots) or self.queue) and steps < max_steps:
+            self.step(primaries)
+            steps += 1
+        return requests
+
+
+def _grow_seq(caches, model, new_len: int):
+    """Zero-pad position-indexed cache seq dims to the server's max_len."""
+    from ..models.transformer import kind_meta
+    arch = model.arch
+    out = {}
+    for kind, entry in caches.items():
+        if kind == "pos":
+            out[kind] = entry
+            continue
+        m = kind_meta(kind, arch)
+        grown = {}
+        for k, v in entry.items():
+            seq_keys = (m.mixer == "attn" and not m.window and k in ("k", "v")) \
+                or (m.mixer == "mla" and k == "lat")
+            if seq_keys and v.shape[2] < new_len:
+                pad = [(0, 0)] * v.ndim
+                pad[2] = (0, new_len - v.shape[2])
+                grown[k] = jnp.pad(v, pad)
+            else:
+                grown[k] = v
+        out[kind] = grown
+    return out

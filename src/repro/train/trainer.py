@@ -1,0 +1,89 @@
+"""Training loop: data -> sharded batches -> engine train_step -> logs/ckpt.
+
+The loop is deliberately thin — all distribution logic lives in
+``ZeroEngine.make_train_step`` — but it is the piece a real run launches:
+deterministic data, periodic eval, checkpointing, throughput accounting and
+a modeled-TFLOPS report (6·N·D / step-time; on CPU wall-time is meaningless,
+on TPU this is the paper's TFLOPS-per-GPU metric).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from ..core.engine import TrainHparams, ZeroEngine
+from ..data.pipeline import BatchSpec, SyntheticTokens, spec_for
+from ..models.config import ArchConfig, ShapeConfig
+from ..models.registry import ModelDef, batch_axes
+from . import checkpoint
+
+
+@dataclass
+class TrainLog:
+    steps: list[int] = field(default_factory=list)
+    losses: list[float] = field(default_factory=list)
+    grad_norms: list[float] = field(default_factory=list)
+    step_times: list[float] = field(default_factory=list)
+
+    def record(self, step, metrics, dt):
+        self.steps.append(int(step))
+        self.losses.append(float(metrics["loss"]))
+        self.grad_norms.append(float(metrics["grad_norm"]))
+        self.step_times.append(dt)
+
+    def save(self, path):
+        Path(path).write_text(json.dumps(self.__dict__))
+
+
+class Trainer:
+    def __init__(self, model: ModelDef, engine: ZeroEngine, mesh,
+                 shape: ShapeConfig, *, seed: int = 0,
+                 data=None):
+        self.model = model
+        self.engine = engine
+        self.mesh = mesh
+        self.shape = shape
+        self.baxes = batch_axes(
+            mesh, shape.global_batch,
+            candidates=tuple(a for a in mesh.axis_names if a != "pod"))
+        shapes = model.train_batch_shapes(shape)
+        self.bspecs = model.batch_pspecs(shapes, self.baxes)
+        self.step_fn = engine.make_train_step(model.loss_fn(), self.bspecs)
+        self.data = data or SyntheticTokens(spec_for(model.arch, shape),
+                                            seed=seed)
+        self.log = TrainLog()
+
+    def _shard_batch(self, np_batch):
+        return {
+            k: jax.device_put(v, NamedSharding(self.mesh, self.bspecs[k]))
+            for k, v in np_batch.items()}
+
+    def run(self, state, n_steps: int, *, log_every: int = 10,
+            ckpt_dir: str | None = None, ckpt_every: int = 0,
+            print_fn=print):
+        n_params = self.engine.param_count()
+        tokens_per_step = self.shape.global_batch * self.shape.seq_len
+        it = iter(self.data)
+        for i in range(n_steps):
+            batch = self._shard_batch(next(it))
+            t0 = time.time()
+            state, metrics = self.step_fn(state, batch)
+            metrics = jax.tree.map(lambda x: x.block_until_ready(), metrics)
+            dt = time.time() - t0
+            self.log.record(state["step"], metrics, dt)
+            if log_every and i % log_every == 0:
+                tflops = 6.0 * n_params * tokens_per_step / dt / 1e12
+                print_fn(f"step {int(state['step']):5d} "
+                         f"loss {float(metrics['loss']):.4f} "
+                         f"gnorm {float(metrics['grad_norm']):.3f} "
+                         f"lr {float(metrics['lr']):.2e} "
+                         f"{dt:.2f}s/step  model-TFLOPS(total) {tflops:.2f}")
+            if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+                checkpoint.save(state, ckpt_dir, int(state["step"]))
+        return state

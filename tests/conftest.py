@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: XLA_FLAGS is deliberately NOT set here — in-process
+tests see the real single CPU device; distributed semantics are exercised by
+subprocess scenarios (test_distributed.py) that set their own device count."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    """Degree-1 three-tier mesh: all sharding degrees 1, full code path."""
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+
+
+def tiny_cfg(mesh, scheme="zero_topo", quant_block=64, **over):
+    from repro.launch.mesh import scheme_config
+    return scheme_config(scheme, mesh, quant_block=quant_block, **over)

@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, learnable structure, pack/load round-trip."""
+import numpy as np
+
+from repro.data.pipeline import (BatchSpec, PackedDataset, SyntheticTokens,
+                                 pack_documents)
+
+
+def test_synthetic_deterministic():
+    spec = BatchSpec(global_batch=4, seq_len=32, vocab=997)
+    a = SyntheticTokens(spec, seed=3).batch(7)
+    b = SyntheticTokens(spec, seed=3).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticTokens(spec, seed=4).batch(7)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_synthetic_learnable_structure():
+    spec = BatchSpec(global_batch=2, seq_len=64, vocab=101)
+    t = SyntheticTokens(spec).batch(0)["tokens"]
+    idx = np.arange(1, 65)
+    m = (idx % 4) != 0
+    succ = (t[:, :-1] * 31 + 7) % 101
+    np.testing.assert_array_equal(t[:, 1:][:, m], succ[:, m])
+    assert (t >= 0).all() and (t < 101).all()
+
+
+def test_synthetic_modalities():
+    spec = BatchSpec(2, 16, 50, n_patches=4, n_frames=8, d_model=32)
+    b = SyntheticTokens(spec).batch(0)
+    assert b["patches"].shape == (2, 4, 32)
+    assert b["frames"].shape == (2, 8, 32)
+
+
+def test_pack_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 1000, size=rng.integers(5, 200)) for _ in range(50)]
+    path = tmp_path / "corpus.bin"
+    n_rows = pack_documents(docs, path, row_len=64, eod_token=0)
+    ds = PackedDataset(path)
+    assert ds.n_rows == n_rows and ds.row_len == 64
+    total = sum(len(d) + 1 for d in docs)
+    assert n_rows == total // 64
+    # contents preserved in order
+    flat = np.concatenate([np.concatenate([d, [0]]) for d in docs])
+    np.testing.assert_array_equal(ds.data.reshape(-1),
+                                  flat[: n_rows * 64].astype(np.uint32))
+    # deterministic batches, right shape
+    b1 = ds.batch(3, 4, seed=1)
+    b2 = ds.batch(3, 4, seed=1)
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.shape == (4, 64) and b1.dtype == np.int32

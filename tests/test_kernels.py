@@ -1,0 +1,149 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+shape/dtype sweeps + hypothesis property tests (deliverable (c))."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.quant_blockwise import (dequantize_int8_pallas,
+                                           quantize_int8_pallas)
+from repro.kernels.quant_int4 import (dequantize_int4_pallas,
+                                      quantize_int4_pallas)
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+
+SHAPES = [(8, 128), (8, 256), (16, 128), (32, 512), (64, 1024)]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16]
+
+
+def _rand(shape, dtype, seed=0):
+    x = jax.random.normal(jax.random.key(seed), shape, jnp.float32) * 3.0
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_int8_pallas_matches_ref(shape, dtype):
+    x = _rand(shape, dtype)
+    q_p, s_p = quantize_int8_pallas(x, interpret=True)
+    q_r, s_r = ref.quantize_int8_ref(x)
+    # interpret-mode fma ordering can flip round-to-nearest ties by 1 LSB
+    # for half dtypes; f32 must match exactly
+    diff = np.abs(np.asarray(q_p, np.int32) - np.asarray(q_r, np.int32))
+    assert diff.max() <= (0 if dtype == jnp.float32 else 1)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-6)
+    d_p = dequantize_int8_pallas(q_p, s_p, jnp.float32, interpret=True)
+    d_r = ref.dequantize_int8_ref(q_r, s_r, jnp.float32)
+    tol = 0.0 if dtype == jnp.float32 else float(np.asarray(s_r).max())
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_r), rtol=1e-6,
+                               atol=tol + 1e-7)
+
+
+@pytest.mark.parametrize("shape", [(8, 256), (16, 512), (32, 1024)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_int4_pallas_matches_ref(shape, dtype):
+    x = _rand(shape, dtype, seed=1)
+    q_p, s_p = quantize_int4_pallas(x, interpret=True)
+    q_r, s_r = ref.quantize_int4_ref(x)
+    lo_p, hi_p = np.asarray(q_p, np.int32) & 0xF, np.asarray(q_p, np.int32) >> 4
+    lo_r, hi_r = np.asarray(q_r, np.int32) & 0xF, np.asarray(q_r, np.int32) >> 4
+    tol = 0 if dtype == jnp.float32 else 1
+    assert np.abs(lo_p - lo_r).max() <= tol
+    assert np.abs(hi_p - hi_r).max() <= tol
+    d_p = dequantize_int4_pallas(q_p, s_p, jnp.float32, interpret=True)
+    d_r = ref.dequantize_int4_ref(q_r, s_r, jnp.float32)
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_r),
+                               atol=float(np.asarray(s_r).max()) * (tol + 1e-6))
+
+
+@pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 128, 256),
+                                 (128, 256, 384)])
+def test_dequant_matmul_pallas(mkn):
+    m, k, n = mkn
+    x = _rand((m, k), jnp.float32, 2)
+    w = _rand((k, n), jnp.float32, 3)
+    # block-quantize w along K in bk=128 blocks, per column
+    wb = np.asarray(w).reshape(k // 128, 128, n)
+    absmax = np.abs(wb).max(axis=1)
+    scales = np.where(absmax == 0, 1.0, absmax / 127.0).astype(np.float32)
+    q = np.clip(np.round(wb / scales[:, None, :]), -127, 127).astype(np.int8)
+    q = q.reshape(k, n)
+    out = dequant_matmul_pallas(x, jnp.asarray(q), jnp.asarray(scales),
+                                interpret=True)
+    expect = ref.dequant_matmul_ref(x, jnp.asarray(q), jnp.asarray(scales))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops-level (flat API, padding plumbing)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+@pytest.mark.parametrize("n,block", [(1024, 128), (4096, 512), (512, 512)])
+def test_ops_int8_roundtrip_error_bound(impl, n, block):
+    x = jax.random.normal(jax.random.key(5), (n,)) * 2.0
+    q, s = ops.quantize_int8(x, block, impl=impl)
+    d = ops.dequantize_int8(q, s, block, jnp.float32, impl=impl)
+    blocks = np.asarray(x).reshape(-1, block)
+    bound = np.abs(blocks).max(axis=1, keepdims=True) / 127.0 * 0.5 + 1e-7
+    err = np.abs(np.asarray(d).reshape(-1, block) - blocks)
+    assert (err <= bound + 1e-6).all()
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_ops_int4_roundtrip_error_bound(impl):
+    n, block = 2048, 256
+    x = jax.random.normal(jax.random.key(6), (n,))
+    q, s = ops.quantize_int4(x, block, impl=impl)
+    assert q.shape == (n // 2,) and q.dtype == jnp.uint8
+    d = ops.dequantize_int4(q, s, block, jnp.float32, impl=impl)
+    blocks = np.asarray(x).reshape(-1, block)
+    bound = np.abs(blocks).max(axis=1, keepdims=True) / 7.0 * 0.5 + 1e-7
+    err = np.abs(np.asarray(d).reshape(-1, block) - blocks)
+    assert (err <= bound + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([64, 128, 512]))
+def test_prop_int8_scales_positive_and_bounded(nb, seed, block):
+    x = jax.random.normal(jax.random.key(seed), (nb, block)) * 10
+    q, s = ref.quantize_int8_ref(x)
+    assert (np.asarray(s) > 0).all()
+    assert (np.abs(np.asarray(q)) <= 127).all()
+    # all-zero blocks dequantize to exact zeros
+    z, sz = ref.quantize_int8_ref(jnp.zeros((2, block)))
+    assert (np.asarray(ref.dequantize_int8_ref(z, sz)) == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_prop_int4_pack_bijection(seed):
+    """pack(unpack(q)) == q for all valid nibble pairs."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(-7, 8, size=(4, 256)).astype(np.float32)
+    q, s = ref.quantize_int4_ref(jnp.asarray(vals))  # scale==1 blocks
+    d = ref.dequantize_int4_ref(q, s)
+    # since |vals| <= 7 and absmax<=7 -> scale = absmax/7 <= 1; round-trip
+    # re-quantizing gives identical packed bytes
+    q2, s2 = ref.quantize_int4_ref(d)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([128, 256]))
+def test_prop_quant_idempotent(seed, block):
+    """Dequantized tensors are fixed points of quantize∘dequantize."""
+    x = jax.random.normal(jax.random.key(seed), (4, block))
+    q, s = ref.quantize_int8_ref(x)
+    d = ref.dequantize_int8_ref(q, s)
+    q2, s2 = ref.quantize_int8_ref(d)
+    d2 = ref.dequantize_int8_ref(q2, s2)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d2),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,111 @@
+"""Partitioning math: scheme presets, the AMSP dependency rule, paper
+Tables IV/V/VI formulas, padding/block invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (ZeroAxes, ZeroConfig, grad_memory_bytes,
+                                  optimizer_memory_bytes, padded_flat_size,
+                                  preset, sharding_factor_table,
+                                  weight_memory_bytes)
+
+SIZES = {"data": 4, "repl": 2, "node": 4, "gcd": 2}
+
+
+def _preset(scheme, **over):
+    return preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data", "repl"),
+                  l0_axes=("gcd",), axis_sizes=SIZES, **over)
+
+
+def test_sharding_factor_table_matches_paper_table_iv():
+    # paper Table IV: zero1 (1,1,NP); zero2 (1,NP,NP); zero3 (NP,NP,NP);
+    # ours (2, P_g, NP)
+    total = math.prod(SIZES.values())
+    assert sharding_factor_table(_preset("zero1")) == dict(
+        weights=1, grads=1, optimizer=total, secondary=1)
+    assert sharding_factor_table(_preset("zero2")) == dict(
+        weights=1, grads=total, optimizer=total, secondary=1)
+    assert sharding_factor_table(_preset("zero3")) == dict(
+        weights=total, grads=total, optimizer=total, secondary=total)
+    topo = sharding_factor_table(_preset("zero_topo"))
+    assert topo == dict(weights=2, grads=8, optimizer=total, secondary=8)
+
+
+def test_zeropp_preset():
+    cfg = _preset("zeropp")
+    assert cfg.w_degree == math.prod(SIZES.values())
+    assert cfg.sec_degree == 8           # intra tier
+    assert cfg.quantize_weights and cfg.quantize_grads
+
+
+@pytest.mark.parametrize("scheme", ["zero1", "zero2", "zero3", "zeropp",
+                                    "zero_topo"])
+def test_dependency_rule_all_presets(scheme):
+    _preset(scheme).validate_dependency_rule()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from(["zero1", "zero2", "zero3", "zeropp", "zero_topo"]),
+       st.integers(1, 10_000_000))
+def test_prop_padding_alignment(scheme, n):
+    cfg = _preset(scheme)
+    padded = padded_flat_size(n, cfg)
+    b = cfg.block_for(n)
+    assert padded >= n
+    assert padded % (cfg.os_degree * b) == 0
+    # every stage's shard is whole blocks
+    assert (padded // cfg.w_degree) % b == 0
+    assert (padded // cfg.g_degree) % b == 0
+    # padding waste is bounded for small leaves (adaptive block)
+    assert padded <= max(2 * n, 2 * cfg.os_degree * 4)
+
+
+def test_memory_tables_match_paper():
+    psi = 10_000_000
+    z3 = _preset("zero3")
+    zpp = _preset("zeropp")
+    topo = _preset("zero_topo")
+    n = math.prod(SIZES.values())
+    # Table V
+    assert weight_memory_bytes(z3, psi) == 2 * psi // n
+    assert weight_memory_bytes(zpp, psi) == 2 * psi // n + psi // 8
+    assert weight_memory_bytes(topo, psi) == 2 * psi // 2 + psi // 8
+    # Table VI (fp32 accumulation here; paper uses fp16 -> factor 2)
+    assert grad_memory_bytes(topo, psi) == 4 * psi // 8
+    assert grad_memory_bytes(z3, psi) == 4 * psi // n
+    # optimizer: K=12 everywhere
+    for cfg in (z3, zpp, topo):
+        assert optimizer_memory_bytes(cfg, psi) == 12 * psi // n
+
+
+def test_memory_constant_in_scale_for_topo():
+    """Paper: 'our memory occupation remains fixed regardless of workers'."""
+    small = preset("zero_topo", intra_axes=("node", "gcd"),
+                   inter_axes=("data",), l0_axes=("gcd",),
+                   axis_sizes={"data": 2, "node": 4, "gcd": 2})
+    big = preset("zero_topo", intra_axes=("node", "gcd"),
+                 inter_axes=("data",), l0_axes=("gcd",),
+                 axis_sizes={"data": 64, "node": 4, "gcd": 2})
+    psi = 1 << 20
+    assert weight_memory_bytes(small, psi) == weight_memory_bytes(big, psi)
+    assert grad_memory_bytes(small, psi) == grad_memory_bytes(big, psi)
+    # optimizer memory *does* shrink with scale (by design)
+    assert optimizer_memory_bytes(big, psi) < optimizer_memory_bytes(small, psi)
+
+
+def test_axes_disjointness_enforced():
+    with pytest.raises(AssertionError):
+        ZeroAxes(weight=("a",), extra_grad=("a",), replica=())
+
+
+def test_block_for_small_leaves():
+    cfg = _preset("zero_topo", quant_block=2048)
+    assert cfg.block_for(10) == 4
+    assert cfg.block_for(10_000_000) == 2048
+    # monotone
+    prev = 0
+    for n in [1, 100, 10_000, 1_000_000, 100_000_000]:
+        b = cfg.block_for(n)
+        assert b >= prev
+        prev = b

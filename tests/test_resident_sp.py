@@ -1,0 +1,92 @@
+"""Beyond-paper serving paths on a degree-1 mesh: resident tensor-parallel
+weights and sequence-parallel prefill must reproduce the ZeRO-serving
+results exactly (full 8-device checks live in test_distributed.py)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import TrainHparams, ZeroEngine
+from repro.launch.mesh import make_test_mesh, scheme_config
+from repro.models.config import ShapeConfig
+from repro.models.registry import build_model, get_arch
+from repro.serve.engine import ServeEngine
+from repro.serve.resident import ResidentServeEngine, build_resident
+
+AX = ("data", "node", "gcd")
+
+
+def _setup(name):
+    import dataclasses
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=AX)
+    arch = get_arch(name).reduced()
+    model = build_model(arch)
+    cfg = scheme_config("zero_topo", mesh, quant_block=64,
+                        compute_dtype="float32")
+    # compare exact-vs-exact: the ZeRO path would otherwise differ by its
+    # INT8 weight-gather quantization, not by the resident layout
+    cfg = dataclasses.replace(cfg, quantize_weights=False,
+                              quantize_grads=False)
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh, TrainHparams())
+    state = eng.init_state(jax.random.key(0))
+    return mesh, arch, model, eng, state
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "mixtral-8x7b",
+                                  "minicpm3-4b", "falcon-mamba-7b"])
+def test_resident_matches_zero_serving(name):
+    """Prefill + teacher-forced decode logits agree (token-level argmax can
+    flip on near-ties at random init, so compare the distributions)."""
+    mesh, arch, model, eng, state = _setup(name)
+    rng = np.random.default_rng(0)
+    b = 2
+    batch = {"tokens": jnp.asarray(rng.integers(0, arch.vocab, (b, 16)),
+                                   jnp.int32)}
+    shape = ShapeConfig("t", 16, b, "decode")
+    se = ServeEngine(model, eng, mesh, shape)
+    layout, resident = build_resident(eng, state, mesh, ("node", "gcd"),
+                                      dtype=jnp.float32)
+    rse = ResidentServeEngine(model, eng, mesh, shape)
+
+    l0, c0 = se.make_prefill()(state["primaries"], batch)
+    l1, c1 = rse.make_prefill()(resident, batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=1e-4, atol=1e-4)
+    forced = rng.integers(0, arch.vocab, (3, b)).astype(np.int32)
+    d0 = se.make_decode()
+    d1 = rse.make_decode()
+    for t in forced:
+        l0, c0 = d0(state["primaries"], c0, {"token": jnp.asarray(t)})
+        l1, c1 = d1(resident, c1, {"token": jnp.asarray(t)})
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_resident_memory_budget():
+    """Resident layout must hold 2*psi/TP bytes of matmul weights/device."""
+    mesh, arch, model, eng, state = _setup("qwen2-0.5b")
+    layout, resident = build_resident(eng, state, mesh, ("node", "gcd"))
+    total = sum(np.prod(v.shape) * v.dtype.itemsize
+                for v in jax.tree.leaves(resident))
+    # degree-1 mesh: resident ~= full bf16 model + replicated fp32 smalls
+    assert total < 2.6 * eng.param_count()
+
+
+def test_sp_prefill_single_device_noop():
+    """seq_parallel on a degree-1 mesh must be a no-op (falls back)."""
+    mesh, arch, model, eng, state = _setup("deepseek-7b")
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(rng.integers(0, arch.vocab, (2, 32)),
+                                   jnp.int32)}
+    shape = ShapeConfig("t", 32, 2, "prefill")
+    se = ServeEngine(model, eng, mesh, shape)
+    l0, c0 = se.make_prefill(seq_parallel=False)(state["primaries"], batch)
+    l1, c1 = se.make_prefill(seq_parallel=True)(state["primaries"], batch)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-6)
+
+
+def test_sp_eligibility():
+    assert build_model(get_arch("minicpm3-4b")).lm.sp_eligible()
+    assert build_model(get_arch("gemma3-1b")).lm.sp_eligible()
+    assert not build_model(get_arch("falcon-mamba-7b")).lm.sp_eligible()
+    assert not build_model(get_arch("jamba-v0.1-52b")).lm.sp_eligible()

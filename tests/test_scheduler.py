@@ -1,0 +1,84 @@
+"""Continuous batching: per-row positions must reproduce the single-request
+path exactly, and slots must recycle across more requests than slots."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import TrainHparams, ZeroEngine
+from repro.launch.mesh import make_test_mesh, scheme_config
+from repro.models.config import ShapeConfig
+from repro.models.registry import build_model, get_arch
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+AX = ("data", "node", "gcd")
+
+
+def _setup(name="qwen2-0.5b"):
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=AX)
+    arch = get_arch(name).reduced()
+    model = build_model(arch)
+    cfg = scheme_config("zero_topo", mesh, quant_block=64,
+                        compute_dtype="float32")
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh, TrainHparams())
+    state = eng.init_state(jax.random.key(0))
+    return mesh, arch, model, eng, state
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "minicpm3-4b",
+                                  "falcon-mamba-7b"])
+def test_batcher_matches_sequential(name):
+    """Tokens produced under continuous batching == one-request-at-a-time."""
+    mesh, arch, model, eng, state = _setup(name)
+    rng = np.random.default_rng(0)
+    plen, max_len = 8, 24
+    prompts = [rng.integers(0, arch.vocab, plen).astype(np.int32)
+               for _ in range(3)]
+
+    # sequential reference: prefill at prompt length, grow the cache to the
+    # server's max_len, scalar-pos decode (one request at a time)
+    from repro.serve.scheduler import _grow_seq
+    ref = []
+    se_p = ServeEngine(model, eng, mesh, ShapeConfig("p", plen, 1, "decode"))
+    se_d = ServeEngine(model, eng, mesh, ShapeConfig("d", max_len, 1,
+                                                     "decode"))
+    prefill = se_p.make_prefill()
+    decode = se_d.make_decode()
+    for p in prompts:
+        logits, c = prefill(state["primaries"], {"tokens": jnp.asarray(p[None])})
+        c = _grow_seq(c, model, max_len)
+        toks = [int(jnp.argmax(logits[0]))]
+        for _ in range(5):
+            logits, c = decode(state["primaries"], c,
+                               {"token": jnp.asarray([toks[-1]], jnp.int32)})
+            toks.append(int(jnp.argmax(logits[0])))
+        ref.append(np.asarray(toks, np.int32))
+
+    # continuous batching with 2 slots over 3 requests
+    cb = ContinuousBatcher(model, eng, mesh, n_slots=2, max_len=max_len,
+                           prompt_len=plen)
+    reqs = [Request(rid=i, prompt=p, max_new=6)
+            for i, p in enumerate(prompts)]
+    cb.run(state["primaries"], reqs)
+    for r, expect in zip(reqs, ref):
+        assert r.done
+        got = np.asarray(r.out[:6])
+        # batched (B=2) and single-row gemms reduce in different orders, so
+        # argmax can flip on near-ties at random init; require the prefix
+        # token to match exactly and >=2/3 of the stream overall
+        assert got[0] == expect[0], (r.rid, got, expect)
+        match = (got == expect).mean()
+        assert match >= 0.66, (r.rid, got, expect, match)
+
+
+def test_slot_reuse():
+    mesh, arch, model, eng, state = _setup()
+    rng = np.random.default_rng(1)
+    cb = ContinuousBatcher(model, eng, mesh, n_slots=2, max_len=32,
+                           prompt_len=8)
+    reqs = [Request(rid=i, prompt=rng.integers(0, arch.vocab, 8).astype(np.int32),
+                    max_new=3 + i % 3) for i in range(5)]
+    cb.run(state["primaries"], reqs)
+    assert all(r.done for r in reqs)
+    assert all(1 <= len(r.out) <= r.max_new + 1 for r in reqs)

@@ -1,0 +1,73 @@
+"""Pallas selective-scan kernel vs the jnp associative-scan oracle:
+shape sweeps + property tests (decay bounds)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.selective_scan import selective_scan_pallas
+from repro.models.ssm import _inner_scan
+
+
+def _ref(dt, x, bm, cm, a, h0):
+    da = jnp.exp(dt[..., None] * a)
+    dbx = (dt * x)[..., None] * bm[:, :, None, :]
+    h_all, h_last = _inner_scan(da, dbx, h0)
+    return jnp.einsum("bsdn,bsn->bsd", h_all, cm), h_last
+
+
+def _inputs(b, s, d, n, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 6)
+    dt = jax.random.uniform(ks[0], (b, s, d), minval=0.01, maxval=0.2)
+    x = jax.random.normal(ks[1], (b, s, d))
+    bm = jax.random.normal(ks[2], (b, s, n)) * 0.3
+    cm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    a = -jnp.exp(jax.random.normal(ks[4], (d, n)) * 0.3)
+    h0 = jax.random.normal(ks[5], (b, d, n)) * 0.1
+    return dt, x, bm, cm, a, h0
+
+
+@pytest.mark.parametrize("b,s,d,n,bd,bs", [
+    (1, 32, 8, 4, 8, 8), (2, 64, 16, 4, 8, 16), (2, 128, 16, 16, 16, 32),
+    (1, 64, 32, 8, 32, 64),
+])
+def test_matches_reference(b, s, d, n, bd, bs):
+    args = _inputs(b, s, d, n)
+    y, hl = selective_scan_pallas(*args, bd=bd, bs=bs, interpret=True)
+    y_ref, h_ref = _ref(*args)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    dt, x, bm, cm, a, h0 = _inputs(1, 32, 8, 4, seed=1)
+    y, hl = selective_scan_pallas(dt.astype(dtype), x.astype(dtype),
+                                  bm.astype(dtype), cm.astype(dtype),
+                                  a, h0, bd=8, bs=8, interpret=True)
+    y_ref, _ = _ref(dt.astype(dtype).astype(jnp.float32),
+                    x.astype(dtype).astype(jnp.float32),
+                    bm.astype(dtype).astype(jnp.float32),
+                    cm.astype(dtype).astype(jnp.float32), a, h0)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_prop_state_bounded(seed):
+    """With a < 0 and bounded inputs, the state stays bounded (stability)."""
+    dt, x, bm, cm, a, h0 = _inputs(1, 64, 8, 4, seed=seed % 1000)
+    y, hl = selective_scan_pallas(dt, x, bm, cm, a, h0, bd=8, bs=16,
+                                  interpret=True)
+    assert np.isfinite(np.asarray(y)).all()
+    # |h| <= |h0| * prod(decay) + sum |dbx| and decay < 1
+    da_max = float(jnp.max(jnp.exp(dt[..., None] * a)))
+    assert da_max <= 1.0 + 1e-6
+    bound = float(jnp.max(jnp.abs(h0))) + 64 * float(
+        jnp.max(jnp.abs((dt * x)[..., None] * bm[:, :, None, :])))
+    assert float(jnp.max(jnp.abs(hl))) <= bound + 1e-4

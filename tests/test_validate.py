@@ -1,0 +1,56 @@
+"""Measured-vs-analytic comm volume (paper Tables VII/VIII) — uses the
+dry-run records if present (the full sweep writes them), else skips."""
+from pathlib import Path
+
+import pytest
+
+from repro.launch.validate import analytic
+
+
+def test_analytic_model_scheme_ratios():
+    """The analytic model must encode the paper's headline ratios."""
+    from repro.core.partition import preset
+    sizes = {"data": 16, "model": 16}
+
+    class Eng:  # minimal stand-in: only padded_param_count is used
+        def __init__(self):
+            self._n = 20_000_000_000
+
+        def padded_param_count(self):
+            return self._n
+
+    def vol(scheme):
+        cfg = preset(scheme, intra_axes=("model",), inter_axes=("data",),
+                     l0_axes=("model",), axis_sizes=sizes)
+        return analytic(Eng(), cfg)
+
+    v3, vp = vol("zero3"), vol("zeropp")
+    # INT8 weight gathers halve the volume (Table VII)
+    assert abs(vp["weight_gathers"] / v3["weight_gathers"] - 0.5) < 0.01
+    # INT4 a2a RS = 1/8 of the fp32 RS volume (paper: 1/4 of fp16)
+    assert abs(vp["grad_rs"] / v3["grad_rs"] - 0.125) < 0.01
+
+
+@pytest.mark.parametrize("scheme", ["zero3", "zeropp", "zero_topo"])
+def test_measured_within_window(scheme):
+    rec = Path(f"experiments/dryrun/gpt-neox-20b__train_4k__prod__{scheme}.json")
+    if not rec.exists():
+        pytest.skip("dry-run records not present (run launch.dryrun first)")
+    import json
+    import math
+    data = json.loads(rec.read_text())
+    measured = data["census"]["total_wire_bytes"]
+    # reproduce the analytic total without building the 512-device engine:
+    # padded psi from the record's n_params (padding ~ +1%)
+    from repro.core.partition import preset
+    psi = data["n_params"] * 1.01
+    cfg = preset(scheme, intra_axes=("model",), inter_axes=("data",),
+                 l0_axes=("model",), axis_sizes={"data": 16, "model": 16})
+
+    class Eng:
+        def padded_param_count(self):
+            return psi
+
+    a = analytic(Eng(), cfg)
+    ratio = measured / a["total"]
+    assert 0.5 < ratio < 2.0, (scheme, ratio, a, measured)
