@@ -17,11 +17,19 @@ TPU = dict(l0=50e9, intra=50e9, inter=50e9 / 4)    # ICI hops vs DCI-ish
 
 
 def analytic_volumes(scheme: str, psi: int, n_nodes: int,
-                     gcds_per_node: int = 8) -> dict:
-    """Bytes per device per step for each phase (paper Tables VII/VIII)."""
+                     gcds_per_node: int = 8, overlap: bool = False) -> dict:
+    """Bytes per device per step for each phase (paper Tables VII/VIII).
+
+    ``overlap`` selects the double-buffered gather schedule (DESIGN.md §3).
+    It is schedule-only: the overlapped layer loop issues exactly one gather
+    per leaf per layer (prologue + per-step issue + epilogue consume), so
+    every volume below is identical for both settings — the returned dict
+    just records which schedule was asked for. kernel_micro's census probe
+    validates this on compiled HLO.
+    """
     sizes = {"data": n_nodes, "node": gcds_per_node // 2, "gcd": 2}
     cfg = preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data",),
-                 l0_axes=("gcd",), axis_sizes=sizes)
+                 l0_axes=("gcd",), axis_sizes=sizes, overlap=overlap)
     w_bytes = psi / cfg.w_degree * (1 if cfg.quantize_weights else 2)
     dw = cfg.w_degree
     ds = cfg.sec_degree or dw
@@ -45,6 +53,7 @@ def analytic_volumes(scheme: str, psi: int, n_nodes: int,
     return dict(fwd_allgather=fwd, bwd_allgather=bwd, grad_rs=grs,
                 cross_replica=crs, update_gather=upd,
                 total=fwd + bwd + grs + crs + upd,
+                schedule="double-buffered" if overlap else "serial",
                 degrees=dict(w=dw, sec=ds, g=dg, os=dos))
 
 
@@ -71,6 +80,19 @@ def run(print_fn=print):
              f"{vt['degrees']}")
     print_fn(f"  topo grad RS volume = 0.25x zero3 (INT4): "
              f"{vt['grad_rs'] / v3['grad_rs']:.3f}")
+
+    print_fn("\n== overlap schedule (DESIGN.md \u00a73): volume-invariance ==")
+    for scheme in ("zero3", "zeropp", "zero_topo"):
+        off = analytic_volumes(scheme, psi, n_nodes, overlap=False)
+        on = analytic_volumes(scheme, psi, n_nodes, overlap=True)
+        assert all(off[k] == on[k] for k in
+                   ("fwd_allgather", "bwd_allgather", "grad_rs",
+                    "cross_replica", "update_gather", "total")), (off, on)
+        print_fn(f"  {scheme:10s} total {off['total'] / GB:6.1f}G "
+                 f"({off['schedule']}) == {on['total'] / GB:6.1f}G "
+                 f"({on['schedule']})  -> identical; overlap moves the "
+                 "per-layer gather off the critical path, it sends no "
+                 "extra bytes")
 
     # cross-check against compiled dry-run census when available
     d = Path("experiments/dryrun")

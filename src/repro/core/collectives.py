@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import pvary as _compat_pvary
 from ..kernels import ops
 from .partition import ZeroConfig
 
@@ -25,9 +26,7 @@ AxisTuple = tuple[str, ...]
 
 def pvary(x, axes: AxisTuple):
     """Mark x as device-varying over `axes` (defers cross-replica psums)."""
-    if not axes:
-        return x
-    return lax.pvary(x, tuple(axes))
+    return _compat_pvary(x, axes)
 
 
 def unvary(x, axes: AxisTuple):
@@ -66,6 +65,36 @@ def quant_all_gather_int8(shard, axes: AxisTuple, cfg: ZeroConfig,
 
 def dequant_gathered(qf, sf, axes_idx_len, cfg: ZeroConfig, out_dtype=jnp.bfloat16):
     return ops.dequantize_int8(qf, sf, cfg.quant_block, out_dtype, impl=cfg.impl)
+
+
+# -- gather-issue / gather-wait split (prefetch/overlap, DESIGN.md §3) -------
+#
+# ``quant_all_gather_int8`` fuses quantize -> gather -> dequant into the
+# consuming block, which puts the collective on the critical path of the
+# layer that uses the weights.  The split primitives below let the engine
+# *issue* layer i+1's gather while layer i computes: ``gather_issue_int8``
+# ends at the collective (its result has no data dependency on the current
+# layer's math, so XLA's latency-hiding scheduler can run it concurrently)
+# and ``gather_wait_int8`` performs the local dequant at consume time.
+# issue+wait is op-for-op the fused path, so results are bitwise identical.
+
+def gather_issue_int8(shard, axes: AxisTuple, cfg: ZeroConfig):
+    """Quantize + all-gather a flat shard, *without* dequantizing.
+
+    Returns the gathered (q, scales) pair — the 2-slot prefetch buffer
+    format. Same wire traffic as ``quant_all_gather_int8``.
+    """
+    q, s = ops.quantize_int8(shard, cfg.quant_block, impl=cfg.impl)
+    if axes:
+        q = lax.all_gather(q, tuple(axes), tiled=True)
+        s = lax.all_gather(s, tuple(axes), tiled=True)
+    return q, s
+
+
+def gather_wait_int8(qf, sf, cfg: ZeroConfig, out_dtype=jnp.bfloat16):
+    """Local dequant of a prefetched (q, scales) buffer (no communication)."""
+    return ops.dequantize_int8(qf, sf, cfg.quant_block, out_dtype,
+                               impl=cfg.impl)
 
 
 def a2a_quant_reduce_scatter(x, axes: AxisTuple, cfg: ZeroConfig,

@@ -43,10 +43,14 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from . import collectives as col
-from .linear import make_plain_gather, make_zero_gather_q, make_zero_matmul
+from .linear import (make_gather_issue, make_plain_gather, make_zero_gather_q,
+                     make_zero_gather_q_pre, make_zero_matmul,
+                     make_zero_matmul_pre)
 from .partition import (EXPERT, GATHER_Q, MATMUL, PLAIN, LeafSpec, ZeroConfig,
                         padded_flat_size)
+from .prefetch import issue_buffers, prefetchable_names
 
 
 # ---------------------------------------------------------------------------
@@ -58,6 +62,9 @@ class _LeafFns:
     spec: LeafSpec
     mm: Callable | None
     full: Callable
+    issue: Callable | None = None      # prefetch: primary -> gathered buffer
+    mm_pre: Callable | None = None     # matmul consuming a prefetched buffer
+    full_pre: Callable | None = None   # dense tensor from a prefetched buffer
 
 
 class ParamView:
@@ -69,19 +76,45 @@ class ParamView:
     params). For stacked leaves, ``stacked(names)`` returns the raw stacked
     primaries to feed ``lax.scan`` and ``sub(layer_slice)`` rebinds the view
     inside the scan body.
+
+    With ``overlap=True`` (ZeroConfig.overlap), ``scan_layers``/``loop_layers``
+    rotate a 2-slot prefetch buffer through the layer loop (prefetch.py):
+    views bound inside the loop carry the current layer's pre-gathered
+    quantized weights in ``bufs`` and consume them via the ``*_pre`` VJPs
+    instead of gathering inline.
     """
 
-    def __init__(self, fns: dict[str, _LeafFns], primaries: dict[str, Any]):
+    # class-level defaults so subclasses with their own __init__
+    # (serve.resident.ResidentView, which also has no _fns) inherit the
+    # non-overlap behavior without any getattr probing
+    _fns: dict[str, "_LeafFns"] | None = None
+    _bufs: dict[str, Any] | None = None
+    _overlap: bool = False
+
+    def __init__(self, fns: dict[str, _LeafFns], primaries: dict[str, Any],
+                 bufs: dict[str, Any] | None = None, overlap: bool = False):
         self._fns = fns
         self._p = primaries
+        self._bufs = bufs
+        self._overlap = overlap
+
+    def _buf(self, name: str):
+        return None if self._bufs is None else self._bufs.get(name)
 
     def mm(self, name: str, x, transpose: bool = False):
         fn = self._fns[name]
         assert fn.mm is not None, f"{name} is not a matmul leaf"
+        buf = self._buf(name)
+        if buf is not None and fn.mm_pre is not None:
+            return fn.mm_pre(x, self._p[name], buf, transpose)
         return fn.mm(x, self._p[name], transpose)
 
     def get(self, name: str):
-        return self._fns[name].full(self._p[name])
+        fn = self._fns[name]
+        buf = self._buf(name)
+        if buf is not None and fn.full_pre is not None:
+            return fn.full_pre(self._p[name], buf)
+        return fn.full(self._p[name])
 
     def embed_lookup(self, name: str, ids):
         """Token-embedding gather. Overridable (resident TP shards rows)."""
@@ -109,30 +142,112 @@ class ParamView:
     def stacked(self, names) -> dict[str, Any]:
         return {n: self._p[n] for n in names}
 
-    def sub(self, primaries: dict[str, Any]) -> "ParamView":
-        return ParamView(self._fns, primaries)
+    def sub(self, primaries: dict[str, Any],
+            bufs: dict[str, Any] | None = None) -> "ParamView":
+        return ParamView(self._fns, primaries, bufs=bufs,
+                         overlap=self._overlap)
 
     def scan_layers(self, body, carry, names, *, remat: bool = True,
-                    unroll: int = 1):
-        """lax.scan over stacked leaves `names`; body(view, carry) -> carry."""
-        stacked = self.stacked(names)
+                    unroll: int = 1, with_ys: bool = False,
+                    overlap: bool | None = None):
+        """lax.scan over stacked leaves `names`.
 
-        def f(c, layer_p):
-            v = self.sub(layer_p)
-            return body(v, c), None
+        body(view, carry) -> carry, or (carry, y) when ``with_ys`` (per-layer
+        outputs are stacked like lax.scan's ys). ``overlap=None`` inherits the
+        view's setting (ZeroConfig.overlap via the engine).
+
+        Overlapped schedule (prefetch.py): a prologue issues layer 0's
+        gathers, each scan step consumes the carried buffer for layer i while
+        issuing layer i+1's, and the last layer runs as an epilogue — so the
+        gather count stays exactly one per leaf per layer (comm volume
+        unchanged; only the schedule moves).
+        """
+        stacked = self.stacked(names)
+        if overlap is None:
+            overlap = self._overlap
+        fns = self._fns
+        pf = prefetchable_names(fns, names) if overlap and fns else ()
+        if not pf:
+            def f(c, layer_p):
+                out = body(self.sub(layer_p), c)
+                return out if with_ys else (out, None)
+
+            if remat:
+                f = jax.checkpoint(f, prevent_cse=False)
+            c, ys = lax.scan(f, carry, stacked, unroll=unroll)
+            return (c, ys) if with_ys else c
+
+        buf0 = issue_buffers(fns, {n: stacked[n][0] for n in pf}, pf)
+
+        def f(c, xs):
+            cur, nxt = xs
+            inner, buf = c
+            buf_next = issue_buffers(fns, nxt, pf)
+            out = body(self.sub(cur, bufs=buf), inner)
+            inner, y = out if with_ys else (out, None)
+            return (inner, buf_next), y
+
+        def last(c):
+            inner, buf = c
+            out = body(self.sub({n: stacked[n][-1] for n in names},
+                                bufs=buf), inner)
+            return out if with_ys else (out, None)
 
         if remat:
             f = jax.checkpoint(f, prevent_cse=False)
-        c, _ = lax.scan(f, carry, stacked, unroll=unroll)
-        return c
+            last = jax.checkpoint(last, prevent_cse=False)
+        cur = {n: stacked[n][:-1] for n in names}
+        nxt = {n: stacked[n][1:] for n in pf}
+        c2, ys = lax.scan(f, (carry, buf0), (cur, nxt), unroll=unroll)
+        carry, y_last = last(c2)
+        if not with_ys:
+            return carry
+        if y_last is not None:
+            ys = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b[None]], axis=0),
+                ys, y_last)
+        return carry, ys
 
-    def loop_layers(self, body, carry, pattern: dict[str, Any]):
-        """Python loop for heterogeneous blocks.
+    def loop_layers(self, body, carry, steps, *, remat: bool = True,
+                    overlap: bool | None = None):
+        """Python loop for heterogeneous block patterns.
 
-        pattern: list of (kind, index_within_kind); stacked leaves are named
-        f"{kind}/{leaf}" and indexed on dim 0.
+        steps: sequence of ``(tag, layer_primaries)`` pairs — one entry per
+        layer in pattern order, ``layer_primaries`` already indexed out of the
+        per-kind stacks. body(view, carry, tag) -> (carry, y).
+        Returns (carry, [y per layer]).
+
+        With overlap, layer j+1's gathers are issued alongside layer j's
+        compute — including across block-kind boundaries (gemma3's 5:1
+        local:global interleave, jamba's mamba/attn mix).
         """
-        raise NotImplementedError  # models use scan_layers / explicit loops
+        if overlap is None:
+            overlap = self._overlap
+        fns = self._fns
+        overlap = overlap and fns is not None
+        bufs_next = None
+        if overlap and len(steps):
+            _, lp0 = steps[0]
+            bufs_next = issue_buffers(fns, lp0,
+                                      prefetchable_names(fns, lp0))
+        ys = []
+        for j, (tag, lp) in enumerate(steps):
+            bufs, bufs_next = bufs_next, None
+            if overlap and j + 1 < len(steps):
+                _, lpn = steps[j + 1]
+                bufs_next = issue_buffers(fns, lpn,
+                                          prefetchable_names(fns, lpn))
+            # plain two-arg sub() for subclasses that don't know about bufs
+            v = self.sub(lp, bufs=bufs) if bufs is not None else self.sub(lp)
+
+            def one(c, v=v, tag=tag):
+                return body(v, c, tag)
+
+            if remat:
+                one = jax.checkpoint(one, prevent_cse=False)
+            carry, y = one(carry)
+            ys.append(y)
+        return carry, ys
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +269,8 @@ class TrainHparams:
     total_steps: int = 1000
     min_lr_frac: float = 0.1
     n_microbatch: int = 1
+    overlap: bool | None = None   # None = follow ZeroConfig.overlap; a bool
+    # here overrides the scheme config (launch/train.py --overlap plumbs this)
 
 
 class ZeroEngine:
@@ -161,6 +278,10 @@ class ZeroEngine:
 
     def __init__(self, specs: dict[str, LeafSpec], cfg: ZeroConfig, mesh: Mesh,
                  hp: TrainHparams | None = None):
+        if hp is not None and hp.overlap is not None \
+                and hp.overlap != cfg.overlap:
+            import dataclasses
+            cfg = dataclasses.replace(cfg, overlap=hp.overlap)
         cfg.validate_dependency_rule()
         for a, size in cfg.axis_sizes:
             assert a in mesh.axis_names and mesh.shape[a] == size, \
@@ -190,9 +311,14 @@ class ZeroEngine:
             else self.cfg.for_leaf(ls.logical_size)
         if spec.kind == MATMUL:
             return _LeafFns(spec, make_zero_matmul(ls, cfg),
-                            make_zero_gather_q(ls, cfg))
+                            make_zero_gather_q(ls, cfg),
+                            issue=make_gather_issue(ls, cfg),
+                            mm_pre=make_zero_matmul_pre(ls, cfg),
+                            full_pre=make_zero_gather_q_pre(ls, cfg))
         if spec.kind == GATHER_Q:
-            return _LeafFns(spec, None, make_zero_gather_q(ls, cfg))
+            return _LeafFns(spec, None, make_zero_gather_q(ls, cfg),
+                            issue=make_gather_issue(ls, cfg),
+                            full_pre=make_zero_gather_q_pre(ls, cfg))
         if spec.kind == PLAIN:
             return _LeafFns(spec, None, make_plain_gather(ls, cfg))
         raise ValueError(spec.kind)
@@ -340,7 +466,7 @@ class ZeroEngine:
             primaries = state["primaries"]
 
             def mb_loss(prims, mb):
-                view = ParamView(self.fns, prims)
+                view = ParamView(self.fns, prims, overlap=cfg.overlap)
                 loss_sum, tok = loss_fn(view, mb)
                 gtok = lax.psum(tok.astype(jnp.float32), cfg.axes.all)
                 return loss_sum.astype(jnp.float32) / jnp.maximum(gtok, 1.0), gtok
@@ -423,7 +549,7 @@ class ZeroEngine:
                            tokens=gtok if n_mb == 1 else jnp.zeros(()))
             return new_state, metrics
 
-        sm = jax.shard_map(
+        sm = shard_map(
             local_step, mesh=mesh,
             in_specs=(state_specs, batch_specs),
             out_specs=(state_specs, {k: P() for k in
@@ -437,13 +563,14 @@ class ZeroEngine:
         state_specs = self.state_in_specs()
 
         def local_eval(state, batch):
-            view = ParamView(self.fns, state["primaries"])
+            view = ParamView(self.fns, state["primaries"],
+                             overlap=self.cfg.overlap)
             loss_sum, tok = loss_fn(view, batch)
             gtok = lax.psum(tok.astype(jnp.float32), self.cfg.axes.all)
             loss = lax.psum(loss_sum.astype(jnp.float32), self.cfg.axes.all)
             return loss / jnp.maximum(gtok, 1.0)
 
-        sm = jax.shard_map(local_eval, mesh=self.mesh,
+        sm = shard_map(local_eval, mesh=self.mesh,
                            in_specs=(state_specs, batch_specs),
                            out_specs=P(), check_vma=False)
         return jax.jit(sm)
@@ -453,10 +580,10 @@ class ZeroEngine:
         prim_specs = self.state_in_specs()["primaries"]
 
         def local(primaries, *args):
-            view = ParamView(self.fns, primaries)
+            view = ParamView(self.fns, primaries, overlap=self.cfg.overlap)
             return fn(view, *args)
 
-        sm = jax.shard_map(local, mesh=self.mesh,
+        sm = shard_map(local, mesh=self.mesh,
                            in_specs=(prim_specs,) + tuple(in_specs),
                            out_specs=out_specs, check_vma=False)
         return jax.jit(sm)

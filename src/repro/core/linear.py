@@ -28,6 +28,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from . import collectives as col
@@ -82,6 +83,36 @@ def _grad_to_primary_shard(dw, spec: LeafSpec, cfg: ZeroConfig, primary_dtype):
     return shard.astype(primary_dtype)
 
 
+def _mm_apply(x, w, transpose, cfg: ZeroConfig):
+    w2 = w.reshape(-1, w.shape[-1])
+    if transpose:
+        w2 = w2.T
+    return jnp.matmul(x.astype(_dtype(cfg)), w2)
+
+
+def _mm_bwd(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
+    """Shared matmul backward for the inline and prefetched VJPs.
+
+    Single implementation on purpose: overlap on/off must stay
+    bitwise-identical (test_overlap.py), so there is exactly one copy of the
+    re-gather / dX / dW math to keep in sync.
+    """
+    x, primary, sec_q, sec_s = res
+    w = _regather_bwd(primary, sec_q, sec_s, spec, cfg)
+    w2 = w.reshape(-1, w.shape[-1])
+    if transpose:
+        w2 = w2.T
+    gx = jnp.matmul(g, w2.T).astype(x.dtype)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    dw2 = jnp.matmul(x2.T, g2)
+    if transpose:
+        dw2 = dw2.T
+    dw_shard = _grad_to_primary_shard(dw2.reshape(spec.shape), spec, cfg,
+                                      _dtype(cfg))
+    return gx, dw_shard
+
+
 def make_zero_matmul(spec: LeafSpec, cfg: ZeroConfig):
     """Returns mm(x, primary) computing x @ W (or x @ W.T via transpose arg)."""
     assert len(spec.shape) >= 2
@@ -89,37 +120,18 @@ def make_zero_matmul(spec: LeafSpec, cfg: ZeroConfig):
     @partial(jax.custom_vjp, nondiff_argnums=(2,))
     def mm(x, primary, transpose=False):
         w, _, _ = _gather_full(primary, spec, cfg)
-        return _apply(x, w, transpose)
-
-    def _apply(x, w, transpose):
-        w2 = w.reshape(-1, w.shape[-1])
-        if transpose:
-            w2 = w2.T
-        return jnp.matmul(x.astype(_dtype(cfg)), w2)
+        return _mm_apply(x, w, transpose, cfg)
 
     def fwd(x, primary, transpose):
         w, sec_q, sec_s = _gather_full(primary, spec, cfg)
-        y = _apply(x, w, transpose)
+        y = _mm_apply(x, w, transpose, cfg)
         if sec_q is None:
             # no secondary: keep primary handle for re-gather (aliases state)
             return y, (x, primary, None, None)
         return y, (x, None, sec_q, sec_s)
 
     def bwd(transpose, res, g):
-        x, primary, sec_q, sec_s = res
-        w = _regather_bwd(primary, sec_q, sec_s, spec, cfg)
-        w2 = w.reshape(-1, w.shape[-1])
-        if transpose:
-            w2 = w2.T
-        gx = jnp.matmul(g, w2.T).astype(x.dtype)
-        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-        dw2 = jnp.matmul(x2.T, g2)
-        if transpose:
-            dw2 = dw2.T
-        dw_shard = _grad_to_primary_shard(dw2.reshape(spec.shape), spec, cfg,
-                                          _dtype(cfg))
-        return gx, dw_shard
+        return _mm_bwd(res, g, transpose, spec, cfg)
 
     mm.defvjp(fwd, bwd)
     return mm
@@ -140,6 +152,104 @@ def make_zero_gather_q(spec: LeafSpec, cfg: ZeroConfig):
     def bwd(res, g):
         del res
         return (_grad_to_primary_shard(g, spec, cfg, _dtype(cfg)),)
+
+    full.defvjp(fwd, bwd)
+    return full
+
+
+# ---------------------------------------------------------------------------
+# Prefetch/overlap variants (DESIGN.md §3)
+#
+# The engine's double-buffered scheduler issues layer i+1's weight gather
+# while layer i computes.  The functions below are the two halves: ``issue``
+# runs quantize+gather (ends at the collective, no dequant), and the ``*_pre``
+# custom-VJP primitives consume the prefetched buffer instead of gathering
+# inline.  The VJPs are identical to the inline ones — the true weight
+# gradient still flows to ``primary`` (straight-through, like the inline
+# path), and the buffer gets an exact-zero cotangent (float0 for the INT8
+# payload) so nothing leaks back through the scan carry.
+# ---------------------------------------------------------------------------
+
+def make_gather_issue(spec: LeafSpec, cfg: ZeroConfig):
+    """Prefetch half: primary shard -> gathered buffer (tuple pytree)."""
+
+    def issue(primary):
+        if cfg.quantize_weights:
+            return col.gather_issue_int8(primary, cfg.axes.weight, cfg)
+        return (col.all_gather_flat(primary, cfg.axes.weight),)
+
+    return issue
+
+
+def _consume_buf(buf, spec: LeafSpec, cfg: ZeroConfig):
+    """Wait half: prefetched buffer -> (w(logical shape), sec_q, sec_s).
+
+    Op-for-op the tail of ``_gather_full``, so forward results are bitwise
+    identical to the inline gather.
+    """
+    n = spec.logical_size
+    if cfg.quantize_weights:
+        qf, sf = buf
+        full_flat = col.gather_wait_int8(qf, sf, cfg, _dtype(cfg))
+        if cfg.axes.secondary is not None:
+            sec_q, sec_s = col.secondary_slice(qf, sf, cfg.axes.secondary, cfg)
+        else:
+            sec_q = sec_s = None
+    else:
+        full_flat = buf[0].astype(_dtype(cfg))
+        sec_q = sec_s = None
+    w = lax.slice(full_flat, (0,), (n,)).reshape(spec.shape)
+    return w, sec_q, sec_s
+
+
+def _buf_zero_cotangent(spec: LeafSpec, cfg: ZeroConfig):
+    """Exact-zero cotangent matching the issue() buffer structure."""
+    padded = padded_flat_size(spec.logical_size, cfg)
+    if cfg.quantize_weights:
+        return (np.zeros((padded,), jax.dtypes.float0),
+                jnp.zeros((padded // cfg.quant_block,), jnp.float32))
+    return (jnp.zeros((padded,), _dtype(cfg)),)
+
+
+def make_zero_matmul_pre(spec: LeafSpec, cfg: ZeroConfig):
+    """mm(x, primary, buf) consuming a prefetched gather buffer."""
+    assert len(spec.shape) >= 2
+
+    @partial(jax.custom_vjp, nondiff_argnums=(3,))
+    def mm(x, primary, buf, transpose=False):
+        w, _, _ = _consume_buf(buf, spec, cfg)
+        return _mm_apply(x, w, transpose, cfg)
+
+    def fwd(x, primary, buf, transpose):
+        w, sec_q, sec_s = _consume_buf(buf, spec, cfg)
+        y = _mm_apply(x, w, transpose, cfg)
+        if sec_q is None:
+            return y, (x, primary, None, None)
+        return y, (x, None, sec_q, sec_s)
+
+    def bwd(transpose, res, g):
+        gx, dw_shard = _mm_bwd(res, g, transpose, spec, cfg)
+        return gx, dw_shard, _buf_zero_cotangent(spec, cfg)
+
+    mm.defvjp(fwd, bwd)
+    return mm
+
+
+def make_zero_gather_q_pre(spec: LeafSpec, cfg: ZeroConfig):
+    """full(primary, buf) -> dense logical tensor from a prefetched buffer."""
+
+    @jax.custom_vjp
+    def full(primary, buf):
+        w, _, _ = _consume_buf(buf, spec, cfg)
+        return w
+
+    def fwd(primary, buf):
+        return full(primary, buf), ()
+
+    def bwd(res, g):
+        del res
+        return (_grad_to_primary_shard(g, spec, cfg, _dtype(cfg)),
+                _buf_zero_cotangent(spec, cfg))
 
     full.defvjp(fwd, bwd)
     return full

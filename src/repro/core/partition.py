@@ -62,6 +62,9 @@ class ZeroConfig:
     cross_replica: str = "allreduce"    # paper: allreduce over R then select;
     # "reduce_scatter": beyond-paper psum_scatter over R (half the volume)
     quantize_update_gather: bool = False  # beyond-paper: INT8 update all-gather
+    overlap: bool = False               # double-buffered prefetch of layer i+1's
+    # weight all-gather during layer i's compute (DESIGN.md §3). Schedule-only:
+    # per-step comm volume and forward numerics are unchanged (test_overlap.py).
     impl: str = "jnp"                   # kernel impl (jnp | pallas | pallas_interpret)
     compute_dtype: str = "bfloat16"
     name: str = "custom"

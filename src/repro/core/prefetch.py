@@ -1,0 +1,54 @@
+"""Double-buffered prefetch/overlap scheduler for the per-layer weight
+gathers (DESIGN.md §3; ZeRO++ §IV "communication overlap", Dash et al. 2023).
+
+The baseline engine issues each layer's INT8 quantized all-gather *inside*
+the ``lax.scan`` body, serially with that layer's matmuls: the collective
+sits on the critical path once per layer per pass.  This module provides the
+helpers for the overlapped schedule, in which a 2-slot buffer of
+gathered-quantized weights rotates through the layer loop:
+
+    slot A: layer i's buffer, being consumed by layer i's compute
+    slot B: layer i+1's buffer, whose quantize+all-gather is already in
+            flight (``collectives.gather_issue_int8``) — it has no data
+            dependency on layer i's math, so XLA's latency-hiding scheduler
+            overlaps the collective with the matmuls.
+
+``ParamView.scan_layers`` threads the buffer through the scan carry (prologue
+issues layer 0, each step issues layer i+1 and consumes slot A, and the last
+layer runs as an epilogue outside the scan), so the total gather count — and
+hence comm volume — is exactly the baseline's L per leaf per pass.
+``ParamView.loop_layers`` applies the same rotation across a heterogeneous
+Python-unrolled pattern (gemma3 local:global, jamba mamba/attn interleave),
+prefetching across block-kind boundaries.
+
+Buffers are ``lax.stop_gradient``'d at issue time: the consuming ``*_pre``
+custom VJPs route the true weight gradient to the primary shard
+(straight-through, identical to the inline path), so no cotangent — and in
+particular no transposed collective — flows back through the rotation.
+
+Memory note: forward, overlap holds at most two layers' quantized buffers
+live (the "2 slots").  Under ``remat=True`` the scan checkpoint saves its
+carry per step, which includes the rotating buffer — an extra ~psi INT8
+bytes across the backward pass.  See DESIGN.md §3 for the trade-off table.
+"""
+from __future__ import annotations
+
+from jax import lax
+
+
+def prefetchable_names(fns, names) -> tuple[str, ...]:
+    """Leaves with an issue() half (MATMUL / GATHER_Q); PLAIN leaves are
+    norm-scale sized and keep their (negligible) inline gather."""
+    return tuple(n for n in names if fns[n].issue is not None)
+
+
+def issue_buffers(fns, primaries, names):
+    """Issue the gathers for one layer's prefetchable leaves.
+
+    Returns {name: buffer pytree}. stop_gradient on the *input* keeps the
+    whole issue chain (quantize kernel + collective) primal-only: no tangent
+    ever enters it (the Pallas quantize has no JVP rule) and no cotangent —
+    in particular no transposed collective — flows back through the scan
+    carry (see module docstring).
+    """
+    return {n: fns[n].issue(lax.stop_gradient(primaries[n])) for n in names}

@@ -19,13 +19,7 @@ Axis-to-bandwidth-tier mapping (DESIGN.md §2):
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
-
-def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+from ..compat import make_mesh as _mk
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -21,6 +21,9 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant-block", type=int, default=128)
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered prefetch of the per-layer weight "
+                         "all-gather (DESIGN.md §3)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -52,12 +55,14 @@ def main():
         shape = SHAPES["train_4k"]
 
     model = build_model(arch)
-    cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block)
+    cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block,
+                        overlap=args.overlap)
     hp = TrainHparams(lr=args.lr, total_steps=args.steps,
-                      warmup_steps=max(args.steps // 20, 2))
+                      warmup_steps=max(args.steps // 20, 2),
+                      overlap=args.overlap)
     eng = ZeroEngine(model.leaf_specs(), cfg, mesh, hp)
     print(f"arch={arch.name} scheme={cfg.name} mesh={dict(mesh.shape)} "
-          f"params={eng.param_count():,}")
+          f"params={eng.param_count():,} overlap={eng.cfg.overlap}")
     print("per-device state bytes:", eng.memory_report())
 
     state = eng.init_state(jax.random.key(0))

@@ -570,53 +570,89 @@ class LM:
         ectx = replace(ctx, positions=pos, want_cache=False, enc_out=None)
 
         names = self._block_names("enc")
+
+        def body(v, c):
+            x2, _, _ = block_fwd("enc", v, cfg, c, ectx)
+            return x2
+
+        if hasattr(view, "scan_layers"):
+            return _norm(view, "", "enc_norm",
+                         view.scan_layers(body, x, names), cfg)
         stacked = view.stacked(names)
 
-        def body(c, lp):
-            x2, _, _ = block_fwd("enc", view.sub(lp), cfg, c, ectx)
-            return x2, None
+        def f(c, lp):
+            return body(view.sub(lp), c), None
 
-        x, _ = lax.scan(jax.checkpoint(body, prevent_cse=False), x, stacked)
+        x, _ = lax.scan(jax.checkpoint(f, prevent_cse=False), x, stacked)
         return _norm(view, "", "enc_norm", x, cfg)
 
     # -- stack execution ---------------------------------------------------------
 
     def _run(self, view, x, ctx: Ctx):
-        """Full-sequence pass. Returns (x, aux, caches_by_kind | None)."""
+        """Full-sequence pass. Returns (x, aux, caches_by_kind | None).
+
+        The layer loops route through ``view.scan_layers``/``loop_layers``
+        (the ZeRO ParamView protocol) so the engine's double-buffered
+        gather prefetch (core/prefetch.py) can rotate its buffers through
+        them; plain views without those methods fall back to the inline
+        scan/loop with identical semantics.
+        """
         cfg = self.cfg
         aux0 = jnp.zeros((), jnp.float32)
         caches: dict[str, Any] = {}
         if cfg.uniform:
             kind = cfg.pattern[0]
-            stacked = view.stacked(self._block_names(kind))
+            names = self._block_names(kind)
 
-            def body(c, lp):
+            def body(v, c):
                 xx, aa = c
-                x2, aux, cache = block_fwd(kind, view.sub(lp), cfg, xx, ctx)
+                x2, aux, cache = block_fwd(kind, v, cfg, xx, ctx)
                 return (x2, aa + aux), cache
 
-            (x, aux), kc = lax.scan(jax.checkpoint(body, prevent_cse=False),
-                                    (x, aux0), stacked)
+            if hasattr(view, "scan_layers"):
+                (x, aux), kc = view.scan_layers(body, (x, aux0), names,
+                                                with_ys=True)
+            else:
+                stacked = view.stacked(names)
+
+                def f(c, lp):
+                    return body(view.sub(lp), c)
+
+                (x, aux), kc = lax.scan(
+                    jax.checkpoint(f, prevent_cse=False), (x, aux0), stacked)
             if ctx.want_cache:
                 caches[kind] = kc
         else:
-            aux = aux0
             stacks = {k: view.stacked(self._block_names(k)) for k in self.kinds}
             idx = {k: 0 for k in self.kinds}
-            percache: dict[str, list] = {k: [] for k in self.kinds}
+            steps = []
             for kind in cfg.pattern:
                 i = idx[kind]
                 idx[kind] += 1
-                lp = jax.tree.map(lambda a: a[i], stacks[kind])
+                steps.append((kind,
+                              jax.tree.map(lambda a, i=i: a[i], stacks[kind])))
 
-                def one(x_, lp_=lp, kind_=kind):
-                    return block_fwd(kind_, view.sub(lp_), cfg, x_, ctx)
+            def body(v, c, kind):
+                xx, aa = c
+                x2, aux, cache = block_fwd(kind, v, cfg, xx, ctx)
+                return (x2, aa + aux), cache
 
-                x, a, cache = jax.checkpoint(one, prevent_cse=False)(x)
-                aux = aux + a
-                if ctx.want_cache:
-                    percache[kind].append(cache)
+            if hasattr(view, "loop_layers"):
+                (x, aux), ys = view.loop_layers(body, (x, aux0), steps)
+            else:
+                aux = aux0
+                ys = []
+                for kind, lp in steps:
+                    def one(c, lp_=lp, kind_=kind):
+                        return body(view.sub(lp_), c, kind_)
+
+                    (x, aux), cache = jax.checkpoint(
+                        one, prevent_cse=False)((x, aux))
+                    ys.append(cache)
             if ctx.want_cache:
+                percache: dict[str, list] = {k: [] for k in self.kinds}
+                for kind, cache in zip(cfg.pattern, ys):
+                    percache[kind].append(cache)
                 for k, lst in percache.items():
                     caches[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *lst)
         return x, aux, (caches if ctx.want_cache else None)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.engine import ParamView, ZeroEngine
 from ..models.config import ShapeConfig
 from ..models.registry import ModelDef, batch_axes, data_axes, model_axes
@@ -56,11 +57,13 @@ class ServeEngine:
         fn = m.prefill_fn(sc.seq_axes, self.axis_sizes, seq_parallel)
 
         def local(primaries, batch):
+            # serving keeps the inline (non-overlap) gather regardless of
+            # ZeroConfig.overlap — see DESIGN.md §3
             view = ParamView(eng.fns, primaries)
             return fn(view, batch)
 
         ba = sc.batch_axes_ if sc.batch_axes_ else None
-        sm = jax.shard_map(local, mesh=self.mesh,
+        sm = shard_map(local, mesh=self.mesh,
                            in_specs=(prim_specs, bspecs),
                            out_specs=(P(ba), cspecs), check_vma=False)
         return jax.jit(sm)
@@ -86,7 +89,7 @@ class ServeEngine:
             return fn(view, caches, batch)
 
         ba = sc.batch_axes_ if sc.batch_axes_ else None
-        sm = jax.shard_map(local, mesh=self.mesh,
+        sm = shard_map(local, mesh=self.mesh,
                            in_specs=(prim_specs, cspecs, bspecs),
                            out_specs=(P(ba), cspecs), check_vma=False)
         return jax.jit(sm, donate_argnums=(1,))

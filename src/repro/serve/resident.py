@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.engine import ParamView, ZeroEngine
 from ..core.partition import GATHER_Q, MATMUL, LeafSpec
 from ..models.config import ShapeConfig
@@ -237,7 +238,7 @@ class ResidentServeEngine:
             view = ResidentView(self.layout, params)
             return fn(view, *args)
 
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             local, mesh=self.mesh, in_specs=(specs,) + tuple(extra_in),
             out_specs=extra_out, check_vma=False))
 

@@ -30,6 +30,7 @@ class TrainLog:
     losses: list[float] = field(default_factory=list)
     grad_norms: list[float] = field(default_factory=list)
     step_times: list[float] = field(default_factory=list)
+    meta: dict = field(default_factory=dict)   # scheme/overlap/mesh, for A/Bs
 
     def record(self, step, metrics, dt):
         self.steps.append(int(step))
@@ -57,7 +58,9 @@ class Trainer:
         self.step_fn = engine.make_train_step(model.loss_fn(), self.bspecs)
         self.data = data or SyntheticTokens(spec_for(model.arch, shape),
                                             seed=seed)
-        self.log = TrainLog()
+        self.log = TrainLog(meta=dict(
+            arch=model.arch.name, scheme=engine.cfg.name,
+            overlap=engine.cfg.overlap, mesh=dict(mesh.shape)))
 
     def _shard_batch(self, np_batch):
         return {

@@ -19,6 +19,8 @@ import jax.numpy as jnp  # noqa: E402
 from jax import lax  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import shard_map  # noqa: E402
+
 AX = ("data", "node", "gcd")
 
 
@@ -42,7 +44,7 @@ def collectives():
 
     def metric(fn, x):
         """Run fn(local_shard) -> scalar metric; return per-device maxima."""
-        sm = jax.shard_map(lambda s: fn(s.reshape(-1))[None],
+        sm = shard_map(lambda s: fn(s.reshape(-1))[None],
                            mesh=mesh, in_specs=P(AX), out_specs=P(AX),
                            check_vma=False)
         return np.asarray(jax.jit(sm)(x))
@@ -110,6 +112,95 @@ def collectives():
 
     assert metric(update_gather_err, w).max() == 0.0
     print("SCENARIO_OK collectives")
+
+
+# ---------------------------------------------------------------------------
+
+def collectives_split():
+    """The gather-issue/gather-wait split primitives (prefetch/overlap path)
+    are bitwise the fused quant_all_gather_int8, the secondary partition
+    sliced from a prefetched buffer rebuilds the identical full tensor, and
+    the quantized reduce_scatter_flat tracks the plain one within the
+    block-quantization bound."""
+    from jax import lax as jlax
+    from repro.core import collectives as col
+    mesh = _mesh()
+    cfg = _cfg("zero_topo", mesh)
+
+    def metric(fn, x):
+        sm = shard_map(lambda s: fn(s.reshape(-1))[None],
+                       mesh=mesh, in_specs=P(AX), out_specs=P(AX),
+                       check_vma=False)
+        return np.asarray(jax.jit(sm)(x))
+
+    x = jax.random.normal(jax.random.key(0), (8 * 64 * 4,))
+
+    def split_vs_fused(shard):
+        full, qf, sf = col.quant_all_gather_int8(shard, AX, cfg)
+        qf2, sf2 = col.gather_issue_int8(shard, AX, cfg)
+        full2 = col.gather_wait_int8(qf2, sf2, cfg)
+        sq, ss = col.secondary_slice(qf2, sf2, ("node", "gcd"), cfg)
+        rebuilt = col.gather_secondary(sq, ss, ("node", "gcd"), cfg)
+        return jnp.stack([
+            jnp.max(jnp.abs(full.astype(jnp.float32)
+                            - full2.astype(jnp.float32))),
+            jnp.max(jnp.abs(qf - qf2).astype(jnp.float32)),
+            jnp.max(jnp.abs(sf - sf2)),
+            jnp.max(jnp.abs(rebuilt.astype(jnp.float32)
+                            - full.astype(jnp.float32))),
+        ])
+
+    assert metric(split_vs_fused, x).max() == 0.0
+
+    y = jax.random.normal(jax.random.key(1), (2048 * 8,))
+
+    def rs_quant_vs_plain(shard):
+        exact = col.reduce_scatter_flat(shard, AX, cfg, quantized=False)
+        quant = col.reduce_scatter_flat(shard, AX, cfg, quantized=True)
+        # INT4 path: one quantize round-trip per summand, 8 summands
+        gmax = jlax.pmax(jnp.max(jnp.abs(shard)), AX)
+        bound = 8 * (gmax / 14.0 + 1e-6)
+        return jnp.max(jnp.abs(quant - exact)) / bound
+
+    assert metric(rs_quant_vs_plain, y).max() <= 1.0
+    print("SCENARIO_OK collectives_split")
+
+
+def overlap_equivalence():
+    """ZeroConfig.overlap (double-buffered gather prefetch) is bitwise
+    equivalent to the serial schedule on the 8-device test mesh: scan path
+    (uniform qwen2, stacked leaves + remat) for zero3/zeropp/zero_topo and
+    the heterogeneous loop path (gemma3 local:global pattern)."""
+    from repro.core.engine import TrainHparams, ZeroEngine
+    from repro.models.registry import build_model, get_arch
+
+    jax.config.update("jax_default_matmul_precision", "float32")
+    mesh = _mesh()
+    rng = np.random.default_rng(0)
+    cases = [("qwen2-0.5b", s) for s in ("zero3", "zeropp", "zero_topo")]
+    cases.append(("gemma3-1b", "zero_topo"))
+    for name, scheme in cases:
+        arch = get_arch(name).reduced(n_layers=4, d_model=128, vocab=256) \
+            if name == "qwen2-0.5b" else get_arch(name).reduced()
+        model = build_model(arch)
+        batch_np = rng.integers(0, arch.vocab, (8, 33), dtype=np.int32)
+        out = {}
+        for overlap in (False, True):
+            cfg = _cfg(scheme, mesh, compute_dtype="float32", overlap=overlap)
+            eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                             TrainHparams(lr=1e-3, total_steps=8,
+                                          warmup_steps=0))
+            state = eng.init_state(jax.random.key(0))
+            step = eng.make_train_step(model.loss_fn(), {"tokens": P(AX)})
+            batch = {"tokens": jax.device_put(
+                jnp.asarray(batch_np), NamedSharding(mesh, P(AX)))}
+            ls = []
+            for _ in range(3):
+                state, m = step(state, batch)
+                ls.append((float(m["loss"]), float(m["grad_norm"])))
+            out[overlap] = ls
+        assert out[False] == out[True], (name, scheme, out)
+    print("SCENARIO_OK overlap_equivalence")
 
 
 # ---------------------------------------------------------------------------
@@ -233,7 +324,7 @@ def hlo_census_real():
     mesh = _mesh()
     n_layers, width = 7, 256
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(None, AX), P(AX)), out_specs=P(AX),
              check_vma=False)
     def f(ws, x):
@@ -339,6 +430,8 @@ def resident_and_sp():
 
 
 SCENARIOS = dict(collectives=collectives,
+                 collectives_split=collectives_split,
+                 overlap_equivalence=overlap_equivalence,
                  schemes_equivalent=schemes_equivalent,
                  dp_vs_single=dp_vs_single,
                  serve_sharded=serve_sharded,

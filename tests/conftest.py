@@ -1,6 +1,10 @@
 """Shared fixtures. NOTE: XLA_FLAGS is deliberately NOT set here — in-process
-tests see the real single CPU device; distributed semantics are exercised by
-subprocess scenarios (test_distributed.py) that set their own device count."""
+tests use degree-1 meshes pinned to the first device, so they pass under any
+host device count (locally that is 1 device; CI exports
+XLA_FLAGS=--xla_force_host_platform_device_count=8 for the whole run, per
+.github/workflows/ci.yml). Distributed semantics are exercised by subprocess
+scenarios (test_distributed.py, test_overlap.py, test_collectives.py) that
+always force their own 8-device view regardless of the parent env."""
 import os
 import sys
 

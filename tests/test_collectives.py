@@ -1,0 +1,153 @@
+"""Collectives invariants promised by partition.py's module docstring: the
+canonical flat-slice hierarchy [W major, E, R minor] makes every stage's
+shard a contiguous refinement of the previous stage's, the secondary
+partition round-trips, and the a2a quantized reduce-scatter tracks the plain
+one.  Degree-1 numerics run in-process; 8-device semantics run the
+``collectives`` / ``collectives_split`` subprocess scenarios."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.compat import shard_map
+from repro.core import collectives as col
+from repro.core.partition import padded_flat_size, preset
+from repro.launch.mesh import make_test_mesh, scheme_config
+
+HERE = os.path.dirname(__file__)
+AX = ("data", "node", "gcd")
+SIZES = {"data": 2, "node": 2, "gcd": 2}
+
+
+def _topo_cfg(**over):
+    return preset("zero_topo", intra_axes=("node", "gcd"),
+                  inter_axes=("data",), l0_axes=("gcd",), axis_sizes=SIZES,
+                  **over)
+
+
+# ---------------------------------------------------------------------------
+# The slice-hierarchy invariant (pure index math, no devices needed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["zero1", "zero2", "zero3", "zeropp",
+                                    "zero_topo"])
+def test_major_to_minor_contiguous_refinement(scheme):
+    """Flat storage uses [W major, E, R minor]: for every device coordinate,
+    the optimizer shard is a contiguous sub-slice of the gradient shard,
+    which is a contiguous sub-slice of the primary shard — i.e. each stage
+    refines the previous one without any re-layout collective."""
+    cfg = preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data",),
+                 l0_axes=("gcd",), axis_sizes=SIZES)
+    n = 1000
+    padded = padded_flat_size(n, cfg)
+    dw, dg, dos = cfg.w_degree, cfg.g_degree, cfg.os_degree
+    assert padded % dos == 0 and dos % dg == 0 and dg % dw == 0
+    lp, lg, lo = padded // dw, padded // dg, padded // dos
+    # enumerate devices by their (w, e, r) group indices, major -> minor
+    for w in range(dw):
+        for e in range(dg // dw):
+            for r in range(dos // dg):
+                p0 = w * lp                       # primary slice start
+                g0 = (w * (dg // dw) + e) * lg     # grad slice start
+                o0 = ((w * (dg // dw) + e) * (dos // dg) + r) * lo
+                # contiguous refinement: each slice sits inside its parent
+                assert p0 <= g0 and g0 + lg <= p0 + lp
+                assert g0 <= o0 and o0 + lo <= g0 + lg
+                # and the offset is exactly the child-major linear index
+                assert g0 - p0 == e * lg
+                assert o0 - g0 == r * lo
+
+
+def test_block_alignment_of_every_stage():
+    """padded % (os_degree * block) == 0 keeps every stage's shard a whole
+    number of quantization blocks (partition.padded_flat_size contract)."""
+    cfg = _topo_cfg()
+    for n in (1, 7, 1000, 4097, 65536):
+        padded = padded_flat_size(n, cfg)
+        b = cfg.block_for(n)
+        assert (padded // cfg.w_degree) % b == 0
+        assert (padded // cfg.g_degree) % b == 0
+        assert (padded // cfg.os_degree) % b == 0
+
+
+# ---------------------------------------------------------------------------
+# Degree-1 numerics (full code path, collectives are group-size-1)
+# ---------------------------------------------------------------------------
+
+def _metric1(fn, x):
+    from jax.sharding import PartitionSpec as P
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=AX)
+    sm = shard_map(lambda s: fn(s.reshape(-1)), mesh=mesh,
+                   in_specs=P(AX), out_specs=P(AX), check_vma=False)
+    return jax.jit(sm)(x)
+
+
+def test_split_gather_matches_fused_degree1():
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=AX)
+    cfg = scheme_config("zero_topo", mesh, quant_block=64)
+
+    x = jax.random.normal(jax.random.key(0), (64 * 4,))
+
+    def check(shard):
+        full, qf, sf = col.quant_all_gather_int8(shard, AX, cfg)
+        qf2, sf2 = col.gather_issue_int8(shard, AX, cfg)
+        full2 = col.gather_wait_int8(qf2, sf2, cfg)
+        return jnp.stack([
+            jnp.max(jnp.abs(full.astype(jnp.float32)
+                            - full2.astype(jnp.float32))),
+            jnp.max(jnp.abs(qf - qf2).astype(jnp.float32)),
+            jnp.max(jnp.abs(sf - sf2))])
+
+    out = _metric1(check, x)
+    assert np.asarray(out).max() == 0.0
+
+
+def test_secondary_roundtrip_degree1():
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=AX)
+    cfg = scheme_config("zero_topo", mesh, quant_block=64)
+    x = jax.random.normal(jax.random.key(1), (64 * 4,))
+
+    def check(shard):
+        full, qf, sf = col.quant_all_gather_int8(shard, AX, cfg)
+        sq, ss = col.secondary_slice(qf, sf, cfg.axes.secondary, cfg)
+        rebuilt = col.gather_secondary(sq, ss, cfg.axes.secondary, cfg)
+        return jnp.max(jnp.abs(rebuilt.astype(jnp.float32)
+                               - full.astype(jnp.float32)))[None]
+
+    assert float(np.asarray(_metric1(check, x)).max()) == 0.0
+
+
+def test_rs_quant_vs_plain_degree1():
+    """Group size 1: both reduce-scatters are the identity (cast aside)."""
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=AX)
+    cfg = scheme_config("zero_topo", mesh, quant_block=64)
+    x = jax.random.normal(jax.random.key(2), (64 * 4,))
+
+    def check(shard):
+        a = col.reduce_scatter_flat(shard, AX, cfg, quantized=False)
+        b = col.reduce_scatter_flat(shard, AX, cfg, quantized=True)
+        return jnp.max(jnp.abs(a - b))[None]
+
+    assert float(np.asarray(_metric1(check, x)).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 8-device semantics (subprocess, own XLA_FLAGS)
+# ---------------------------------------------------------------------------
+
+# (the broader `collectives` scenario already runs under test_distributed.py;
+# only the split-primitive coverage is owned here)
+@pytest.mark.parametrize("name", ["collectives_split"])
+def test_scenario_8dev(name):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_scenarios.py"), name],
+        capture_output=True, text=True, timeout=900, env=env)
+    tail = (r.stdout + r.stderr)[-4000:]
+    assert r.returncode == 0, f"scenario {name} failed:\n{tail}"
+    assert f"SCENARIO_OK {name}" in r.stdout, tail

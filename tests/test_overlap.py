@@ -1,0 +1,151 @@
+"""Overlap-path equivalence: the double-buffered gather prefetch
+(ZeroConfig.overlap, core/prefetch.py, DESIGN.md §3) must be a pure schedule
+change.  scan_layers (stacked leaves, remat on and off, with_ys) and
+loop_layers (heterogeneous pattern) are exercised directly and through the
+engine; the 8-device train-step check runs the ``overlap_equivalence``
+subprocess scenario for zero3 / zeropp / zero_topo."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine import TrainHparams, ZeroEngine
+from repro.launch.mesh import make_test_mesh, scheme_config
+from repro.models.registry import build_model, get_arch
+
+HERE = os.path.dirname(__file__)
+AX = ("data", "node", "gcd")
+
+
+def _mesh1():
+    return make_test_mesh(shape=(1, 1, 1), axes=AX)
+
+
+def _engine(arch="qwen2-0.5b", scheme="zero_topo", **over):
+    mesh = _mesh1()
+    cfg_arch = get_arch(arch).reduced(n_layers=3, d_model=128, vocab=256) \
+        if arch == "qwen2-0.5b" else get_arch(arch).reduced()
+    model = build_model(cfg_arch)
+    cfg = scheme_config(scheme, mesh, quant_block=32,
+                        compute_dtype="float32", **over)
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                     TrainHparams(lr=1e-3, total_steps=10, warmup_steps=0))
+    return mesh, model, eng, eng.init_state(jax.random.key(0))
+
+
+def _batch(model, seed=0, shape=(2, 33)):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(
+        rng.integers(0, model.arch.vocab, shape), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# scan_layers directly (remat on/off, with_ys, explicit overlap arg)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("remat", [True, False])
+def test_scan_layers_overlap_matches(remat):
+    mesh, model, eng, state = _engine()
+    names = [n for n in eng.specs if n.startswith("attn.")]
+
+    def fn(view, x):
+        def body(v, c):
+            y = jnp.tanh(v.mm("attn.wq", c))
+            c2 = c + v.mm("attn.wo", y)
+            return c2, jnp.sum(jnp.square(y))
+
+        outs = {}
+        for overlap in (False, True):
+            outs[overlap] = view.scan_layers(body, x, names, remat=remat,
+                                             with_ys=True, overlap=overlap)
+        return outs
+
+    apply = eng.make_apply(fn, (P(),), P())
+    x = jax.random.normal(jax.random.key(3), (2, 5, 128), jnp.float32)
+    out = apply(state["primaries"], x)
+    np.testing.assert_array_equal(np.asarray(out[False][0]),
+                                  np.asarray(out[True][0]))
+    np.testing.assert_array_equal(np.asarray(out[False][1]),
+                                  np.asarray(out[True][1]))
+
+
+def test_loop_layers_overlap_matches():
+    """Heterogeneous pattern through loop_layers, overlap on/off, incl. the
+    per-layer ys."""
+    mesh, model, eng, state = _engine()
+    names = [n for n in eng.specs if n.startswith("attn.")]
+    stack = eng.specs[names[0]].stack
+
+    def fn(view, x):
+        stacks = view.stacked(names)
+        steps = [("attn", jax.tree.map(lambda a, i=i: a[i], stacks))
+                 for i in range(stack)]
+
+        def body(v, c, tag):
+            y = jnp.tanh(v.mm("attn.wq", c))
+            return c + v.mm("attn.wo", y), jnp.sum(jnp.square(y))
+
+        outs = {}
+        for overlap in (False, True):
+            c, ys = view.loop_layers(body, x, steps, overlap=overlap)
+            outs[overlap] = (c, jnp.stack(ys))
+        return outs
+
+    apply = eng.make_apply(fn, (P(),), P())
+    x = jax.random.normal(jax.random.key(4), (2, 5, 128), jnp.float32)
+    out = apply(state["primaries"], x)
+    np.testing.assert_array_equal(np.asarray(out[False][0]),
+                                  np.asarray(out[True][0]))
+    np.testing.assert_array_equal(np.asarray(out[False][1]),
+                                  np.asarray(out[True][1]))
+
+
+# ---------------------------------------------------------------------------
+# engine-level: prefill caches (with_ys epilogue concat) + hetero arch loss
+# ---------------------------------------------------------------------------
+
+def test_prefill_caches_identical():
+    outs = {}
+    for overlap in (False, True):
+        mesh, model, eng, state = _engine(overlap=overlap)
+        fn = model.prefill_fn((), dict(mesh.shape))
+        apply = eng.make_apply(fn, ({"tokens": P()},), P())
+        logits, caches = apply(state["primaries"], _batch(model))
+        outs[overlap] = (logits, caches)
+    np.testing.assert_array_equal(np.asarray(outs[False][0]),
+                                  np.asarray(outs[True][0]))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        outs[False][1], outs[True][1])
+
+
+def test_hetero_arch_loss_identical():
+    """gemma3's 5:1 local:global pattern goes through loop_layers."""
+    losses = {}
+    for overlap in (False, True):
+        mesh, model, eng, state = _engine(arch="gemma3-1b", overlap=overlap)
+        ev = eng.make_eval_step(model.loss_fn(), {"tokens": P()})
+        losses[overlap] = float(ev(state, _batch(model)))
+    assert losses[False] == losses[True], losses
+
+
+# ---------------------------------------------------------------------------
+# 8-device train-step equivalence (zero3 / zeropp / zero_topo + hetero)
+# ---------------------------------------------------------------------------
+
+def test_scenario_overlap_equivalence_8dev():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_scenarios.py"),
+         "overlap_equivalence"],
+        capture_output=True, text=True, timeout=900, env=env)
+    tail = (r.stdout + r.stderr)[-4000:]
+    assert r.returncode == 0, f"overlap_equivalence failed:\n{tail}"
+    assert "SCENARIO_OK overlap_equivalence" in r.stdout, tail

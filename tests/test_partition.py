@@ -3,6 +3,8 @@ Tables IV/V/VI formulas, padding/block invariants."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")  # optional [test] extra; degrade to skip, not collection error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import (ZeroAxes, ZeroConfig, grad_memory_bytes,

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.engine import ParamView, TrainHparams, ZeroEngine
 from repro.launch.mesh import make_test_mesh, scheme_config
 from repro.models import ssm
@@ -27,7 +28,7 @@ def test_mamba_model_pallas_scan_matches_jnp():
         l, t = model.lm.loss(v, b)
         return l / t
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         loss, mesh=mesh,
         in_specs=(eng.state_in_specs()["primaries"], {"tokens": P()}),
         out_specs=P(), check_vma=False))

@@ -4,6 +4,8 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")  # optional [test] extra; degrade to skip, not collection error
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.selective_scan import selective_scan_pallas

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.engine import ParamView, TrainHparams, ZeroEngine
 from repro.core.partition import padded_flat_size
 from repro.launch.mesh import make_test_mesh, scheme_config
@@ -62,11 +63,12 @@ def _mesh1():
 
 
 def _setup(scheme="zero3", *, quant=None, dtype="float32", arch="qwen2-0.5b",
-           seed=0):
+           seed=0, **over):
     mesh = _mesh1()
     arch_cfg = get_arch(arch).reduced(n_layers=2, d_model=128, vocab=256)
     model = build_model(arch_cfg)
-    cfg = scheme_config(scheme, mesh, quant_block=32, compute_dtype=dtype)
+    cfg = scheme_config(scheme, mesh, quant_block=32, compute_dtype=dtype,
+                        **over)
     if quant is not None:
         cfg = dataclasses.replace(cfg, quantize_weights=quant,
                                   quantize_grads=quant)
@@ -97,13 +99,13 @@ def _engine_grads(eng, model, mesh, state, batch):
 
     def local(primaries, b):
         def loss(p):
-            v = ParamView(eng.fns, p)
+            v = ParamView(eng.fns, p, overlap=eng.cfg.overlap)
             l, t = loss_fn(v, b)
             return l / t
 
         return jax.value_and_grad(loss)(primaries)
 
-    sm = jax.shard_map(local, mesh=mesh,
+    sm = shard_map(local, mesh=mesh,
                        in_specs=(specs, {"tokens": P()}),
                        out_specs=(P(), specs), check_vma=False)
     return jax.jit(sm)(state["primaries"], batch)
@@ -179,6 +181,50 @@ def test_quantized_training_tracks_exact():
         rel = abs(float(me["loss"]) - float(mq["loss"])) \
             / max(float(me["loss"]), 1e-9)
         assert rel < 0.05, (i, float(me["loss"]), float(mq["loss"]))
+
+
+@pytest.mark.parametrize("scheme", ["zero3", "zeropp", "zero_topo"])
+def test_overlap_bitwise_identical_losses(scheme):
+    """The double-buffered gather prefetch (ZeroConfig.overlap, DESIGN.md §3)
+    is a schedule change only: loss AND gradients must be bitwise identical
+    to the serial schedule."""
+    _, _, m0, _, e0, s0, batch = _setup(scheme, overlap=False)
+    _, _, m1, _, e1, s1, _ = _setup(scheme, overlap=True)
+    l0, g0 = _engine_grads(e0, m0, _mesh1(), s0, batch)
+    l1, g1 = _engine_grads(e1, m1, _mesh1(), s1, batch)
+    assert float(l0) == float(l1), (float(l0), float(l1))
+    for n in e0.specs:
+        np.testing.assert_array_equal(np.asarray(g0[n]), np.asarray(g1[n]),
+                                      err_msg=n)
+
+
+def test_overlap_bitwise_identical_pallas_interpret():
+    """Same guarantee with the quantization kernels on the Pallas
+    (interpret-mode) implementation path."""
+    _, _, m0, _, e0, s0, batch = _setup("zero_topo", quant=True,
+                                        impl="pallas_interpret",
+                                        overlap=False)
+    _, _, m1, _, e1, s1, _ = _setup("zero_topo", quant=True,
+                                    impl="pallas_interpret", overlap=True)
+    l0, _ = _engine_grads(e0, m0, _mesh1(), s0, batch)
+    l1, _ = _engine_grads(e1, m1, _mesh1(), s1, batch)
+    assert float(l0) == float(l1), (float(l0), float(l1))
+
+
+def test_overlap_train_step_bitwise():
+    """Full train step (fwd + bwd + grad RS + AdamW + update gather):
+    overlap on/off produce identical losses and identical master weights."""
+    _, _, m0, _, e0, s0, batch = _setup("zero_topo", overlap=False)
+    _, _, m1, _, e1, s1, _ = _setup("zero_topo", overlap=True)
+    step0 = e0.make_train_step(m0.loss_fn(), {"tokens": P()})
+    step1 = e1.make_train_step(m1.loss_fn(), {"tokens": P()})
+    for _ in range(3):
+        s0, r0 = step0(s0, batch)
+        s1, r1 = step1(s1, batch)
+        assert float(r0["loss"]) == float(r1["loss"])
+    for n in e0.specs:
+        np.testing.assert_array_equal(np.asarray(s0["master"][n]),
+                                      np.asarray(s1["master"][n]), err_msg=n)
 
 
 def test_microbatch_accumulation_matches_single():
