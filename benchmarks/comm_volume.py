@@ -1,6 +1,11 @@
 """Paper Tables VII & VIII: analytic per-step communication volume per scheme,
 validated against the wire-byte census of the compiled dry-run when
 experiments/dryrun JSONs are present.
+
+The formulas here are deliberately written scheme-by-scheme and kept
+*independent* of the general cost model in ``repro.topo.cost`` — ``run()``
+(and tests/test_topo.py) cross-checks the two implementations phase by
+phase, so a regression in either one is caught by the other.
 """
 from __future__ import annotations
 
@@ -80,6 +85,26 @@ def run(print_fn=print):
              f"{vt['degrees']}")
     print_fn(f"  topo grad RS volume = 0.25x zero3 (INT4): "
              f"{vt['grad_rs'] / v3['grad_rs']:.3f}")
+
+    print_fn("\n== cross-check vs the planner's cost model (repro.topo.cost) ==")
+    from repro.topo.cost import phase_volumes
+    for scheme in ("zero3", "zeropp", "zero_topo"):
+        sizes = {"data": n_nodes, "node": 4, "gcd": 2}
+        cfg = preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data",),
+                     l0_axes=("gcd",), axis_sizes=sizes)
+        mine = analytic_volumes(scheme, psi, n_nodes)
+        theirs = phase_volumes(cfg, psi)
+        # cost.py splits the grad RS into its two real stages (W per
+        # backward, E per step); the byte counts telescope to one figure
+        pairs = {k: theirs[k] for k in ("fwd_allgather", "bwd_allgather",
+                                        "cross_replica", "update_gather",
+                                        "total")}
+        pairs["grad_rs"] = theirs["grad_rs_w"] + theirs["grad_rs_e"]
+        for k, v in pairs.items():
+            assert abs(mine[k] - v) <= 1e-6 * max(mine[k], 1.0), \
+                (scheme, k, mine[k], v)
+        print_fn(f"  {scheme:10s} all five phases + total agree "
+                 f"(total {theirs['total'] / GB:.1f}G)")
 
     print_fn("\n== overlap schedule (DESIGN.md \u00a73): volume-invariance ==")
     for scheme in ("zero3", "zeropp", "zero_topo"):

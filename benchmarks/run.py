@@ -11,12 +11,13 @@ import sys
 import time
 import traceback
 
-BENCHES = ["memory_table", "comm_volume", "scaling_model", "quant_error",
-           "kernel_micro", "convergence"]
+BENCHES = ["memory_table", "comm_volume", "scaling_model", "plan_table",
+           "quant_error", "kernel_micro", "convergence"]
 PAPER_ARTIFACT = dict(
     memory_table="Tables V/VI + §II max-model-size",
     comm_volume="Tables VII/VIII",
     scaling_model="Figs 7/8 (TFLOPS per GPU, scaling efficiency)",
+    plan_table="Tables IV/V generalized: planner choice vs presets",
     quant_error="§III-C block-based quantization",
     kernel_micro="kernel-level roofline",
     convergence="Figs 9/10 (loss curves, quantized vs exact)",

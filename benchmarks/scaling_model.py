@@ -1,13 +1,16 @@
 """Paper Figs 7 & 8: modeled TFLOPS-per-GPU and scaling efficiency across
 scales for ZeRO-3 / ZeRO++ / ZeRO-topo on the Frontier bandwidth tiers.
 
-CPU containers cannot measure wall-time TFLOPS, so this benchmark evaluates
-an analytic latency model with the same structure the paper argues from:
+This benchmark is now a thin consumer of the shared analytic cost model
+(``repro.topo.cost`` on the ``repro.topo.model.frontier`` topology) — the
+same model the partition planner searches with, so every number printed here
+is a number the planner ranks by (one cost model, two consumers).  The
+structure is the paper's argument:
 
   * per-microbatch collectives (fwd/bwd weight all-gather, gradient RS) pay
-    volume/tier-bandwidth + (group-1) x per-hop ring latency — the paper's
-    central point is that ZeRO-topo pins the group size (2 / 8) so this term
-    is CONSTANT in cluster size, while ZeRO-3/ZeRO++ groups grow with scale;
+    volume/tier-bandwidth + n_layers x (group-1) x per-hop ring latency —
+    ZeRO-topo pins the group sizes (2 / 8) so this term is CONSTANT in
+    cluster size, while ZeRO-3/ZeRO++ groups grow with scale;
   * once-per-step collectives (cross-replica grad sync, update all-gather)
     amortize over gradient accumulation.
 
@@ -17,78 +20,36 @@ efficiency (paper: 0.94 for topo 64->384).
 """
 from __future__ import annotations
 
-from benchmarks.comm_volume import analytic_volumes
-
-# Frontier per-GCD capabilities
-PEAK = 135e12              # achievable matmul FLOP/s per GCD (70% of 191.5)
-BW = dict(l0=200e9,        # GCD-GCD inside one MI250X
-          intra=40e9,      # effective per-GCD intra-node
-          inter=100e9 / 8)  # 4x Slingshot (100 GB/s) shared by 8 GCDs
-HOP_LAT = dict(l0=2e-6, intra=4e-6, inter=15e-6)   # ring per-hop latency
+from repro.topo.cost import Workload, step_cost, tflops_per_device
+from repro.topo.model import frontier
+from repro.topo.planner import preset_on_topology
 
 MICRO_BATCHES = 4
 TOKENS_PER_GCD_MB = 2048   # per-microbatch tokens per GCD
+N_LAYERS = 44
 
 
-def _tier(scheme: str, phase: str) -> str:
-    table = {
-        "zero3": dict(fwd_allgather="inter", bwd_allgather="inter",
-                      grad_rs="inter", cross_replica="inter",
-                      update_gather="inter"),
-        "zeropp": dict(fwd_allgather="inter", bwd_allgather="intra",
-                       grad_rs="inter", cross_replica="inter",
-                       update_gather="inter"),
-        "zero_topo": dict(fwd_allgather="l0", bwd_allgather="intra",
-                          grad_rs="intra", cross_replica="inter",
-                          update_gather="inter"),
-    }
-    return table[scheme][phase]
-
-
-def _group(scheme: str, phase: str, v: dict, n_nodes: int) -> int:
-    d = v["degrees"]
-    table = {
-        "zero3": dict(fwd_allgather=d["w"], bwd_allgather=d["w"],
-                      grad_rs=d["g"], cross_replica=1,
-                      update_gather=1),
-        "zeropp": dict(fwd_allgather=d["w"], bwd_allgather=d["sec"],
-                       grad_rs=d["g"], cross_replica=1,
-                       update_gather=1),
-        "zero_topo": dict(fwd_allgather=d["w"], bwd_allgather=d["sec"],
-                          grad_rs=d["g"], cross_replica=n_nodes,
-                          update_gather=d["os"] // d["w"]),
-    }
-    return table[scheme][phase]
+def _workload(psi: float, n_layers: int = N_LAYERS) -> Workload:
+    return Workload(psi=psi, n_layers=n_layers,
+                    tokens_per_device_mb=TOKENS_PER_GCD_MB,
+                    n_microbatch=MICRO_BATCHES)
 
 
 def step_time(scheme: str, psi: float, n_nodes: int,
-              n_layers: int = 44) -> tuple[float, float]:
-    v = analytic_volumes(scheme, psi, n_nodes)
-    per_mb = 0.0
-    for phase in ("fwd_allgather", "bwd_allgather", "grad_rs"):
-        tier = _tier(scheme, phase)
-        grp = _group(scheme, phase, v, n_nodes)
-        per_mb += v[phase] / BW[tier] \
-            + n_layers * max(grp - 1, 0) * HOP_LAT[tier]
-    per_step = 0.0
-    for phase in ("cross_replica", "update_gather"):
-        tier = _tier(scheme, phase)
-        grp = _group(scheme, phase, v, n_nodes)
-        per_step += v[phase] / BW[tier] + max(grp - 1, 0) * HOP_LAT[tier]
-    t_comm = MICRO_BATCHES * per_mb + per_step
-    gcds = n_nodes * 8
-    tokens = MICRO_BATCHES * TOKENS_PER_GCD_MB * gcds
-    t_comp = 6.0 * psi * tokens / gcds / PEAK
-    return t_comp, t_comm
+              n_layers: int = N_LAYERS) -> tuple[float, float]:
+    """(compute seconds, communication seconds) for one step."""
+    topo = frontier(n_nodes)
+    cfg = preset_on_topology(scheme, topo)
+    c = step_cost(cfg, topo, _workload(psi, n_layers))
+    return c.compute_s, c.comm_total_s
 
 
 def tflops_per_gpu(scheme: str, psi: float, n_nodes: int) -> float:
-    t_comp, t_comm = step_time(scheme, psi, n_nodes)
-    gcds = n_nodes * 8
-    tokens = MICRO_BATCHES * TOKENS_PER_GCD_MB * gcds
-    # DeepSpeed prefetches all-gathers: model 60% of comm hidden under compute
-    t = max(t_comp, t_comm) + 0.4 * min(t_comp, t_comm)
-    return 6.0 * psi * tokens / gcds / t / 1e12
+    topo = frontier(n_nodes)
+    cfg = preset_on_topology(scheme, topo)
+    # DeepSpeed prefetches all-gathers: 60% of comm hidden under compute
+    # (Workload.hidden_fraction default; the repo's own overlap schedule §3)
+    return tflops_per_device(cfg, topo, _workload(psi))
 
 
 def run(print_fn=print):
@@ -114,6 +75,7 @@ def run(print_fn=print):
         print_fn("scaling efficiency 64->384 GCDs: " +
                  ", ".join(f"{k} {v:.2f}" for k, v in eff.items()) +
                  "  (paper: topo 0.94)")
+        assert topo > zpp > z3, "paper trend must hold: topo > zero++ > zero3"
     return True
 
 

@@ -39,10 +39,13 @@ def main():
     model = build_model(arch)
     data = SyntheticTokens(BatchSpec(16, 128, arch.vocab), seed=0)
 
+    psi = model.param_count()
     print(f"model: {arch.name}")
     results = {}
-    for scheme in ("zero1", "zero2", "zero3", "zeropp", "zero_topo"):
-        cfg = scheme_config(scheme, mesh, quant_block=128)
+    for scheme in ("zero1", "zero2", "zero3", "zeropp", "zero_topo", "auto"):
+        # "auto": the topology planner's pick for this mesh (DESIGN.md §4)
+        cfg = scheme_config(scheme, mesh, quant_block=128,
+                            psi=psi, n_layers=arch.n_layers)
         eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
                          TrainHparams(lr=6e-4, total_steps=args.steps,
                                       warmup_steps=10))

@@ -371,6 +371,17 @@ class ZeroEngine:
         )
         return state
 
+    def scheme_fingerprint(self) -> dict:
+        """Layout identity of this engine's checkpoints (JSON-serializable).
+
+        Everything that determines the on-disk shard layout: a checkpoint
+        written under one fingerprint cannot be restored under another
+        (train/checkpoint.py fails loudly on mismatch).
+        """
+        fp = self.cfg.fingerprint()
+        fp["padded_sizes"] = {n: self._pad[n] for n in sorted(self._pad)}
+        return fp
+
     def param_count(self) -> int:
         return sum(s.logical_size * (s.stack or 1) for s in self.specs.values())
 
@@ -481,17 +492,18 @@ class ZeroEngine:
                 mbs = jax.tree.map(split, batch)
 
                 def acc(carry, mb):
-                    gacc, lacc = carry
-                    (l, _), g = jax.value_and_grad(mb_loss, has_aux=True)(
+                    gacc, lacc, tacc = carry
+                    (l, t), g = jax.value_and_grad(mb_loss, has_aux=True)(
                         primaries, mb)
                     gacc = jax.tree.map(
                         lambda a, b: a + b.astype(jnp.float32), gacc, g)
-                    return (gacc, lacc + l), None
+                    return (gacc, lacc + l, tacc + t), None
 
                 g0 = jax.tree.map(
                     lambda p: jnp.zeros(p.shape, jnp.float32), primaries)
-                (grads, loss), _ = lax.scan(acc, (g0, jnp.zeros((), jnp.float32)),
-                                            mbs)
+                (grads, loss, gtok), _ = lax.scan(
+                    acc, (g0, jnp.zeros((), jnp.float32),
+                          jnp.zeros((), jnp.float32)), mbs)
                 # each microbatch loss is normalized by its own global token
                 # count; average the accumulated means
                 grads = jax.tree.map(lambda g: g / n_mb, grads)
@@ -545,8 +557,9 @@ class ZeroEngine:
 
             new_state = dict(primaries=new_prim, master=new_master,
                              opt_m=new_m, opt_v=new_v, step=step)
-            metrics = dict(loss=loss_rep, grad_norm=gnorm, lr=lr,
-                           tokens=gtok if n_mb == 1 else jnp.zeros(()))
+            # gtok: global token count summed over every microbatch (with
+            # n_mb == 1 it is the single microbatch's global count)
+            metrics = dict(loss=loss_rep, grad_norm=gnorm, lr=lr, tokens=gtok)
             return new_state, metrics
 
         sm = shard_map(

@@ -93,6 +93,24 @@ class ZeroConfig:
         """AMSP/paper §V: N_os*P_os >= N_g*P_g >= N_w*P_w."""
         assert self.os_degree >= self.g_degree >= self.w_degree, self
 
+    def fingerprint(self) -> dict:
+        """Shard-layout identity (JSON-serializable): everything about this
+        config that determines how a flat parameter is split across devices.
+        ZeroEngine.scheme_fingerprint() extends it with per-leaf padded sizes;
+        train/checkpoint.py refuses to restore across different fingerprints."""
+        return dict(
+            scheme=self.name,
+            axes=dict(weight=list(self.axes.weight),
+                      extra_grad=list(self.axes.extra_grad),
+                      replica=list(self.axes.replica),
+                      secondary=None if self.axes.secondary is None
+                      else list(self.axes.secondary)),
+            axis_sizes={a: s for a, s in self.axis_sizes},
+            degrees=dict(w=self.w_degree, g=self.g_degree, os=self.os_degree,
+                         sec=self.sec_degree),
+            quant_block=self.quant_block,
+        )
+
     def block_for(self, logical_size: int) -> int:
         """Effective quantization block for a leaf: large leaves use the full
         configured block; small leaves (norm scales, biases) shrink it so the

@@ -56,7 +56,10 @@ def lower_combo(arch_name: str, shape_name: str, mesh_name: str,
     arch = get_arch(arch_name)
     shape = SHAPES[shape_name]
     model = build_model(arch)
-    cfg = scheme_config(scheme, mesh, quant_block=quant_block)
+    planner_kw = {}
+    if scheme == "auto":
+        planner_kw = dict(psi=model.param_count(), n_layers=arch.n_layers)
+    cfg = scheme_config(scheme, mesh, quant_block=quant_block, **planner_kw)
     if engine_opts:
         cfg = dataclasses.replace(cfg, **engine_opts)
     eng = ZeroEngine(model.leaf_specs(), cfg, mesh, TrainHparams())
@@ -106,6 +109,8 @@ def run_combo(arch_name, shape_name, mesh_name, scheme, outdir: Path,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax<=0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     txt = compiled.as_text()
     census = hlo.analyze(txt).summary()
 
@@ -153,7 +158,9 @@ def main():
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="prod")
-    ap.add_argument("--scheme", default="zero_topo")
+    ap.add_argument("--scheme", default="zero_topo",
+                    help="comma-separated presets, or 'auto' for the "
+                         "topology planner's choice on each mesh")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--quant-block", type=int, default=2048)
     ap.add_argument("--save-hlo", action="store_true")

@@ -55,8 +55,24 @@ def zero_tiers(mesh) -> dict[str, tuple[str, ...]]:
     return dict(l0=l0, intra=intra, inter=inter)
 
 
-def scheme_config(scheme: str, mesh, **over):
-    """Build the ZeroConfig preset for `scheme` on `mesh`."""
+def scheme_config(scheme: str, mesh, *, psi=None, n_layers=None,
+                  memory_budget=None, **over):
+    """Build the ZeroConfig for `scheme` on `mesh`.
+
+    ``scheme="auto"`` runs the topology-aware planner (repro.topo) against
+    the live mesh and returns its top-ranked config; ``psi``/``n_layers``
+    describe the workload (defaulting to the paper's 20B/44-layer model) and
+    ``memory_budget`` bounds per-device state bytes. Any remaining keyword
+    overrides (quant_block, overlap, compute_dtype, ...) apply to the chosen
+    config exactly as they would to a preset.
+    """
+    if scheme == "auto":
+        import dataclasses
+
+        from ..topo import plan_for_mesh
+        cfg = plan_for_mesh(mesh, psi=psi, n_layers=n_layers,
+                            memory_budget=memory_budget, top_k=1)[0].cfg
+        return dataclasses.replace(cfg, **over) if over else cfg
     from ..core.partition import preset
     tiers = zero_tiers(mesh)
     return preset(scheme, intra_axes=tiers["intra"], inter_axes=tiers["inter"],

@@ -13,7 +13,9 @@ import os
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--scheme", default="zero_topo")
+    ap.add_argument("--scheme", default="zero_topo",
+                    help="partition preset, or 'auto' to let the topology "
+                         "planner (repro.topo) pick for the live mesh")
     ap.add_argument("--mesh", default="test")
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--steps", type=int, default=50)
@@ -27,8 +29,17 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint in --ckpt-dir "
+                         "(fails loudly if it was written under a different "
+                         "scheme/mesh)")
+    ap.add_argument("--budget-gb", type=float, default=0.0,
+                    help="--scheme auto: per-device memory budget in GB "
+                         "(0 = unbounded; fake CPU devices have no real HBM)")
     ap.add_argument("--log-json", default="")
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     if args.mesh == "test" and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = \
@@ -55,8 +66,19 @@ def main():
         shape = SHAPES["train_4k"]
 
     model = build_model(arch)
+    planner_kw = {}
+    if args.scheme == "auto":
+        # workload for the planner: the real model on the live mesh
+        planner_kw = dict(psi=model.param_count(), n_layers=arch.n_layers,
+                          memory_budget=args.budget_gb * 1e9
+                          if args.budget_gb else None)
     cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block,
-                        overlap=args.overlap)
+                        overlap=args.overlap, **planner_kw)
+    if args.scheme == "auto":
+        a = cfg.axes
+        print(f"planner choice: w={a.weight} e={a.extra_grad} r={a.replica} "
+              f"sec={a.secondary} int8w={cfg.quantize_weights} "
+              f"int4g={cfg.quantize_grads}")
     hp = TrainHparams(lr=args.lr, total_steps=args.steps,
                       warmup_steps=max(args.steps // 20, 2),
                       overlap=args.overlap)
@@ -65,8 +87,12 @@ def main():
           f"params={eng.param_count():,} overlap={eng.cfg.overlap}")
     print("per-device state bytes:", eng.memory_report())
 
-    state = eng.init_state(jax.random.key(0))
     tr = Trainer(model, eng, mesh, shape)
+    if args.resume and args.ckpt_dir:
+        state = tr.restore(args.ckpt_dir)
+        print(f"resumed from step {int(state['step'])}")
+    else:
+        state = eng.init_state(jax.random.key(0))
     state = tr.run(state, args.steps,
                    ckpt_dir=args.ckpt_dir or None,
                    ckpt_every=args.ckpt_every)

@@ -93,6 +93,11 @@ class ModelDef:
     def leaf_specs(self) -> dict[str, LeafSpec]:
         return self.lm.leaf_specs()
 
+    def param_count(self) -> int:
+        """Logical (unpadded) parameter count — matches ZeroEngine.param_count."""
+        return sum(s.logical_size * (s.stack or 1)
+                   for s in self.leaf_specs().values())
+
     # ---- step functions (run inside shard_map; device-local views) ----
 
     def loss_fn(self):

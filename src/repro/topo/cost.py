@@ -1,0 +1,190 @@
+"""Analytic cost model: seconds and bytes for any ``ZeroConfig`` on any
+``Topology``.
+
+The model prices exactly the collective inventory ``core/collectives.py``
+emits per train step (DESIGN.md §4):
+
+  per microbatch (inside the layer loop / backward):
+    fwd_allgather  — weight all-gather of the primary shard over the W axes,
+                     INT8 when ``quantize_weights`` (collectives.quant_all_
+                     gather_int8 / gather_issue_int8);
+    bwd_allgather  — backward re-materialization: all-gather of the INT8
+                     secondary partition over the secondary axes when one
+                     exists (collectives.gather_secondary), else the primary
+                     gather again;
+    grad_rs_w      — stage-1 weight-grad reduce-scatter over the W axes,
+                     inside every backward pass (linear._grad_to_primary_
+                     shard), INT4 all-to-all based when ``quantize_grads``
+                     (collectives.a2a_quant_reduce_scatter);
+  per step (after microbatch accumulation):
+    grad_rs_e      — stage-2 reduce-scatter of the accumulated primary-layout
+                     grads over the E axes (engine ``to_os``; once per step,
+                     strictly less communication than per-microbatch);
+    cross_replica  — replica-tier gradient sync (allreduce+select, or the
+                     beyond-paper reduce_scatter at half volume);
+    update_gather  — the update all-gather over E+R rebuilding bf16 primaries
+                     (collectives.update_all_gather), INT8-halved when
+                     ``quantize_update_gather``.
+
+The two grad-RS stages telescope: ``grad_rs_w + grad_rs_e =
+g_bytes * (dg-1)/dg``, exactly the single-stage Table VIII figure, so byte
+counts stay comparable with ``benchmarks/comm_volume.py`` while the *timing*
+charges each stage at its own tier and cadence.
+
+Each phase costs ``volume / bottleneck_bandwidth + hops * per_hop_latency``
+where the bottleneck link is the slowest axis the collective spans and
+``hops = group_size - 1`` (ring schedule).  Per-microbatch phases pay the
+latency term once per layer — the paper's central argument: ZeRO-topo pins
+those group sizes (2 / 8) so the latency term is constant in cluster size,
+while ZeRO-3/ZeRO++ groups grow with scale.
+
+Volumes are the paper's Tables VII/VIII accounting, generalized to any
+``ZeroAxes`` assignment; ``benchmarks/comm_volume.py`` cross-checks the
+three preset columns against its own independently-written formulas
+(tests/test_topo.py).  Memory reuses the Table V/VI formulas from
+``core/partition.py`` — one source of truth for both planner and benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.partition import (ZeroConfig, grad_memory_bytes,
+                              optimizer_memory_bytes, weight_memory_bytes)
+from .model import Topology
+
+PER_MICROBATCH = ("fwd_allgather", "bwd_allgather", "grad_rs_w")
+PER_STEP = ("grad_rs_e", "cross_replica", "update_gather")
+PHASES = PER_MICROBATCH + PER_STEP
+
+
+@dataclass(frozen=True)
+class Workload:
+    """What one train step does, per device."""
+    psi: float                        # total model parameters
+    n_layers: int = 44                # layer-loop trip count (latency term)
+    tokens_per_device_mb: int = 2048  # tokens per device per microbatch
+    n_microbatch: int = 4             # gradient-accumulation factor
+    hidden_fraction: float = 0.6      # fraction of comm hidden under compute
+    # (DeepSpeed-style prefetch; matches the repo's overlap schedule §3)
+
+
+def phase_volumes(cfg: ZeroConfig, psi: float) -> dict[str, float]:
+    """Bytes per device per step for each collective phase (Tables VII/VIII).
+
+    All-gather over degree d moves ``shard_bytes * (d-1)`` per device;
+    reduce-scatter moves ``full_bytes * (d-1)/d``; ring allreduce twice that.
+    """
+    dw = cfg.w_degree
+    ds = cfg.sec_degree or dw
+    dg = cfg.g_degree
+    dos = cfg.os_degree
+    dr = cfg.size(cfg.axes.replica)
+    # forward all-gather of the primary: INT8 (1 B/param) when quantized
+    w_bytes = psi / dw * (1 if cfg.quantize_weights else 2)
+    fwd = w_bytes * (dw - 1)
+    # backward re-gather: INT8 secondary over its own group, else primary again
+    if cfg.axes.secondary is not None:
+        bwd = psi / ds * (ds - 1)
+    else:
+        bwd = fwd
+    # gradient reduce-scatter, two stages: INT4 (0.5 B/param) when quantized,
+    # bf16 otherwise. Stage 1 (per backward pass): full dense grad -> primary
+    # shard over W. Stage 2 (per step): primary-layout shard -> grad shard
+    # over E. Their sum equals the single-stage figure over dg.
+    gb = 0.5 if cfg.quantize_grads else 2
+    de = cfg.size(cfg.axes.extra_grad)
+    grs_w = psi * gb * (dw - 1) / dw
+    grs_e = (psi / dw) * gb * (de - 1) / de if de > 1 else 0.0
+    # cross-replica sync of the grad shards (bf16-accounted, paper §V-C):
+    # ring allreduce = 2x the reduce-scatter volume
+    if dr > 1:
+        ar = 2 if cfg.cross_replica == "allreduce" else 1
+        crs = ar * (2 * psi / dg) * (dr - 1) / dr
+    else:
+        crs = 0.0
+    # update all-gather over E+R (bf16 primaries; INT8 halves it)
+    upd = (2 * psi / dw) * (1 - dw / dos) \
+        * (0.5 if cfg.quantize_update_gather else 1)
+    return dict(fwd_allgather=fwd, bwd_allgather=bwd,
+                grad_rs_w=grs_w, grad_rs_e=grs_e,
+                cross_replica=crs, update_gather=upd,
+                total=fwd + bwd + grs_w + grs_e + crs + upd)
+
+
+def phase_axes(cfg: ZeroConfig) -> dict[str, tuple[str, ...]]:
+    """Which mesh axes each phase's collective spans (collectives.py)."""
+    return dict(
+        fwd_allgather=cfg.axes.weight,
+        bwd_allgather=cfg.axes.secondary if cfg.axes.secondary is not None
+        else cfg.axes.weight,
+        grad_rs_w=cfg.axes.weight,
+        grad_rs_e=cfg.axes.extra_grad,
+        cross_replica=cfg.axes.replica,
+        update_gather=cfg.axes.extra_grad + cfg.axes.replica,
+    )
+
+
+@dataclass(frozen=True)
+class StepCost:
+    """Predicted cost of one train step for (cfg, topo, workload)."""
+    comm_s: dict[str, float]          # seconds per phase, per step
+    volumes: dict[str, float]         # bytes per device per step, per phase
+    compute_s: float
+    memory: dict[str, float]          # per-device state bytes (Tables V/VI)
+    fits: bool                        # memory_total <= budget
+
+    @property
+    def comm_total_s(self) -> float:
+        return sum(self.comm_s.values())
+
+    @property
+    def memory_total(self) -> float:
+        return self.memory["total"]
+
+    def step_s(self, hidden_fraction: float = 0.6) -> float:
+        """Wall-clock with partial compute/comm overlap."""
+        c, m = self.compute_s, self.comm_total_s
+        return max(c, m) + (1 - hidden_fraction) * min(c, m)
+
+
+def memory_bytes(cfg: ZeroConfig, psi: float) -> dict[str, float]:
+    """Per-device training-state bytes (paper Tables V/VI formulas)."""
+    weights = weight_memory_bytes(cfg, int(psi))
+    grads = grad_memory_bytes(cfg, int(psi))
+    opt = optimizer_memory_bytes(cfg, int(psi))
+    return dict(weights=weights, grads=grads, optimizer=opt,
+                total=weights + grads + opt)
+
+
+def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
+              memory_budget: float | None = None) -> StepCost:
+    """Price one train step of ``wl`` under ``cfg`` on ``topo``."""
+    vols = phase_volumes(cfg, wl.psi)
+    axes = phase_axes(cfg)
+    comm = {}
+    for phase in PHASES:
+        ax = axes[phase]
+        group = cfg.size(ax)
+        if not ax or group == 1:
+            comm[phase] = 0.0
+            continue
+        wire = vols[phase] / topo.bandwidth(ax)
+        hops = (group - 1) * topo.latency(ax)
+        if phase in PER_MICROBATCH:
+            # inside the layer loop: one collective per layer per microbatch
+            comm[phase] = wl.n_microbatch * (wire + wl.n_layers * hops)
+        else:
+            comm[phase] = wire + hops
+    tokens_per_device = wl.n_microbatch * wl.tokens_per_device_mb
+    compute_s = 6.0 * wl.psi * tokens_per_device / topo.flops_per_device
+    mem = memory_bytes(cfg, wl.psi)
+    budget = topo.hbm_bytes if memory_budget is None else memory_budget
+    return StepCost(comm_s=comm, volumes=vols, compute_s=compute_s,
+                    memory=mem, fits=mem["total"] <= budget)
+
+
+def tflops_per_device(cfg: ZeroConfig, topo: Topology, wl: Workload) -> float:
+    """Modeled sustained TFLOP/s per device (the paper's Figs 7/8 metric)."""
+    c = step_cost(cfg, topo, wl)
+    tokens_per_device = wl.n_microbatch * wl.tokens_per_device_mb
+    return 6.0 * wl.psi * tokens_per_device / c.step_s(wl.hidden_fraction) / 1e12

@@ -37,7 +37,10 @@ def _unflatten(flat):
     return out
 
 
-def save(state, ckpt_dir, step: int):
+def save(state, ckpt_dir, step: int, scheme: dict | None = None):
+    """``scheme``: the writing engine's ``scheme_fingerprint()`` — recorded
+    in meta.json so a restore under a different partitioning fails loudly
+    instead of silently re-placing shards in the wrong layout."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
     flat = _flatten(state)
@@ -50,9 +53,39 @@ def save(state, ckpt_dir, step: int):
             arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
         np.save(d / f"leaf_{i:04d}.npy", arr)
         names[k] = f"leaf_{i:04d}.npy"
-    (d / "meta.json").write_text(json.dumps(dict(step=step, names=names,
-                                                 dtypes=dtypes)))
+    meta = dict(step=step, names=names, dtypes=dtypes)
+    if scheme is not None:
+        meta["scheme"] = scheme
+    (d / "meta.json").write_text(json.dumps(meta))
     return str(d)
+
+
+class SchemeMismatch(ValueError):
+    """Checkpoint layout does not match the restoring engine's scheme."""
+
+
+def _check_scheme(saved: dict | None, expect: dict, where: str):
+    # normalize through JSON so tuples/lists and int/float compare equal
+    expect = json.loads(json.dumps(expect))
+    if saved is None:
+        raise SchemeMismatch(
+            f"{where} has no scheme metadata (written before scheme "
+            f"recording, or by an external tool); refusing to restore into "
+            f"an engine expecting {expect['scheme']!r}. Re-save the "
+            f"checkpoint with a scheme fingerprint, or restore with "
+            f"expect_scheme=None to skip the check at your own risk.")
+    if saved != expect:
+        diffs = []
+        for k in sorted(set(saved) | set(expect)):
+            if saved.get(k) != expect.get(k):
+                diffs.append(f"  {k}: checkpoint={saved.get(k)!r} "
+                             f"engine={expect.get(k)!r}")
+        raise SchemeMismatch(
+            f"{where} was written under a different partitioning scheme — "
+            f"restoring it here would silently place shards in the wrong "
+            f"layout. Mismatched fields:\n" + "\n".join(diffs) +
+            "\nRebuild the engine with the checkpoint's scheme/mesh, or "
+            "re-shard the checkpoint explicitly.")
 
 
 def latest_step(ckpt_dir) -> int | None:
@@ -60,9 +93,14 @@ def latest_step(ckpt_dir) -> int | None:
     return steps[-1] if steps else None
 
 
-def restore(ckpt_dir, step: int, shardings=None):
+def restore(ckpt_dir, step: int, shardings=None, expect_scheme: dict | None = None):
+    """``expect_scheme``: the restoring engine's ``scheme_fingerprint()``;
+    when given, the saved fingerprint must match exactly or restore raises
+    ``SchemeMismatch`` with the differing fields."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     meta = json.loads((d / "meta.json").read_text())
+    if expect_scheme is not None:
+        _check_scheme(meta.get("scheme"), expect_scheme, str(d))
     flat = {}
     sh_flat = _flatten(shardings) if shardings else {}
     import ml_dtypes  # packaged with jax

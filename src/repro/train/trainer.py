@@ -88,5 +88,19 @@ class Trainer:
                          f"lr {float(metrics['lr']):.2e} "
                          f"{dt:.2f}s/step  model-TFLOPS(total) {tflops:.2f}")
             if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
-                checkpoint.save(state, ckpt_dir, int(state["step"]))
+                checkpoint.save(state, ckpt_dir, int(state["step"]),
+                                scheme=self.engine.scheme_fingerprint())
         return state
+
+    def restore(self, ckpt_dir, step: int | None = None):
+        """Restore a checkpoint into this trainer's engine layout.
+
+        Fails loudly (checkpoint.SchemeMismatch) if the checkpoint was
+        written under a different scheme/mesh/padding than this engine.
+        """
+        step = checkpoint.latest_step(ckpt_dir) if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+        return checkpoint.restore(ckpt_dir, step,
+                                  self.engine.state_shardings(),
+                                  expect_scheme=self.engine.scheme_fingerprint())

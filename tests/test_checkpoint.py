@@ -1,13 +1,29 @@
-"""Checkpoint save/restore round-trip, including through a train step."""
+"""Checkpoint save/restore round-trip, including through a train step, plus
+scheme-safety: a checkpoint written under one ZeroConfig must refuse to
+restore under another (shard layouts differ silently otherwise)."""
+import json
+from pathlib import Path
+
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core.engine import TrainHparams, ZeroEngine
 from repro.launch.mesh import make_test_mesh, scheme_config
 from repro.models.registry import build_model, get_arch
 from repro.train import checkpoint
+from repro.train.trainer import Trainer
+
+
+def _engine(mesh, scheme="zero_topo", quant_block=64, **arch_over):
+    arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128, vocab=128)
+    model = build_model(arch)
+    cfg = scheme_config(scheme, mesh, quant_block=quant_block)
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                     TrainHparams(total_steps=5, warmup_steps=0))
+    return model, eng
 
 
 def test_roundtrip(tmp_path):
@@ -36,3 +52,81 @@ def test_roundtrip(tmp_path):
     s_b, m_b = step(restored, batch)
     np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
                                rtol=1e-6)
+
+
+def test_scheme_fingerprint_roundtrip_and_mismatch(tmp_path):
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh, "zero_topo")
+    state = eng.init_state(jax.random.key(0))
+    fp = eng.scheme_fingerprint()
+    assert fp["scheme"] == "zero_topo" and fp["padded_sizes"]
+    checkpoint.save(state, tmp_path, 1, scheme=fp)
+
+    # matching fingerprint restores
+    restored = checkpoint.restore(tmp_path, 1, eng.state_shardings(),
+                                  expect_scheme=fp)
+    assert int(restored["step"]) == 0
+
+    # a different scheme fails loudly, naming the differing fields
+    _, eng3 = _engine(mesh, "zero3")
+    with pytest.raises(checkpoint.SchemeMismatch,
+                       match="different partitioning scheme"):
+        checkpoint.restore(tmp_path, 1, eng3.state_shardings(),
+                           expect_scheme=eng3.scheme_fingerprint())
+    # a different quant_block pads differently -> also refused
+    _, engq = _engine(mesh, "zero_topo", quant_block=128)
+    with pytest.raises(checkpoint.SchemeMismatch, match="quant_block"):
+        checkpoint.restore(tmp_path, 1, engq.state_shardings(),
+                           expect_scheme=engq.scheme_fingerprint())
+
+
+def test_restore_without_metadata_refused_when_expected(tmp_path):
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh)
+    state = eng.init_state(jax.random.key(0))
+    checkpoint.save(state, tmp_path, 1)            # legacy: no scheme recorded
+    with pytest.raises(checkpoint.SchemeMismatch,
+                       match="no scheme metadata"):
+        checkpoint.restore(tmp_path, 1, eng.state_shardings(),
+                           expect_scheme=eng.scheme_fingerprint())
+    # explicit opt-out still restores
+    restored = checkpoint.restore(tmp_path, 1, eng.state_shardings())
+    assert int(restored["step"]) == 0
+
+
+def test_trainer_saves_fingerprint_and_restores(tmp_path):
+    from repro.models.config import ShapeConfig
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh)
+    tr = Trainer(model, eng, mesh, ShapeConfig("t", 16, 2, "train"))
+    state = eng.init_state(jax.random.key(0))
+    state = tr.run(state, 2, ckpt_dir=str(tmp_path), ckpt_every=1,
+                   log_every=0)
+    metas = sorted(Path(tmp_path).glob("step_*/meta.json"))
+    assert metas and all(
+        "scheme" in json.loads(m.read_text()) for m in metas)
+    restored = tr.restore(tmp_path)                # latest step, checked
+    assert int(restored["step"]) == 2
+    with pytest.raises(FileNotFoundError):
+        tr.restore(tmp_path / "empty")
+
+
+def test_microbatch_token_metric():
+    """n_microbatch > 1 reports the true accumulated global token count
+    (regression: it used to report zeros)."""
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng1 = _engine(mesh)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, 128, (4, 17)), jnp.int32)}
+    toks = {}
+    for n_mb in (1, 2, 4):
+        cfg = scheme_config("zero_topo", mesh, quant_block=64)
+        eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                         TrainHparams(total_steps=5, warmup_steps=0,
+                                      n_microbatch=n_mb))
+        state = eng.init_state(jax.random.key(0))
+        step = eng.make_train_step(model.loss_fn(), {"tokens": P()})
+        _, m = step(state, batch)
+        toks[n_mb] = float(m["tokens"])
+    assert toks[1] == 4 * 16                       # B x S next-token pairs
+    assert toks[2] == toks[1] and toks[4] == toks[1], toks
