@@ -1,0 +1,138 @@
+"""Benchmark regression gate: diff the freshly-emitted BENCH_*.json against
+the committed baselines in ``benchmarks/baselines/``.
+
+    PYTHONPATH=src python -m benchmarks.check_baseline \
+        [--emitted .] [--baselines benchmarks/baselines]
+
+Only *invariant* fields are gated — collective counts, wire bytes, analytic
+comm volumes, the fused/unfused roofline arithmetic and the
+census-identical flags. Wall-clock fields are recorded in the JSONs for
+trend inspection but never compared (CI machines are noisy).
+
+Exit code != 0 lists every regressed field. To intentionally move a
+baseline (e.g. a scheme change that legitimately alters the gather count),
+re-run the benchmarks and copy the emitted files over
+``benchmarks/baselines/`` in the same PR that changes the behavior.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+RTOL = 1e-6
+
+# dotted paths into each BENCH file that must not drift. A trailing ".*"
+# compares the whole subtree (dict/list/scalar) with float tolerance.
+GATED = {
+    # (the probes' *_identical flags are deliberately not gated: when they
+    # are False the benchmark run itself asserts before emitting the JSON,
+    # so only the raw census numbers carry baseline signal)
+    "BENCH_kernels.json": [
+        "roofline.*",
+        "overlap_probe.overlap=False.all_gather_count",
+        "overlap_probe.overlap=False.all_gather_wire_mb",
+        "overlap_probe.overlap=True.all_gather_count",
+        "overlap_probe.overlap=True.all_gather_wire_mb",
+        "impl_census.jnp.collective_counts.*",
+        "impl_census.jnp.wire_bytes.*",
+        "impl_census.pallas_interpret.collective_counts.*",
+        "impl_census.pallas_interpret.wire_bytes.*",
+    ],
+    "BENCH_comm_volume.json": [
+        "zero3.*", "zeropp.*", "zero_topo.*", "invariants.*",
+        "cost_model_crosscheck", "overlap_volume_invariant",
+    ],
+}
+
+
+def _lookup(tree, path: str):
+    cur = tree
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(path)
+        cur = cur[part]
+    return cur
+
+
+def _diff(base, new, path: str, out: list[str]):
+    if isinstance(base, dict):
+        if not isinstance(new, dict):
+            out.append(f"{path}: dict -> {type(new).__name__}")
+            return
+        for k in base:
+            if k not in new:
+                out.append(f"{path}.{k}: missing in emitted")
+            else:
+                _diff(base[k], new[k], f"{path}.{k}", out)
+        for k in new:
+            if k not in base:
+                out.append(f"{path}.{k}: new field (update the baseline)")
+    elif isinstance(base, list):
+        if not isinstance(new, list) or len(base) != len(new):
+            out.append(f"{path}: list shape changed {base!r} -> {new!r}")
+            return
+        for i, (b, n) in enumerate(zip(base, new)):
+            _diff(b, n, f"{path}[{i}]", out)
+    elif isinstance(base, (int, float)) and isinstance(new, (int, float)) \
+            and not isinstance(base, bool) and not isinstance(new, bool):
+        if abs(float(base) - float(new)) > RTOL * max(abs(float(base)), 1.0):
+            out.append(f"{path}: {base!r} -> {new!r}")
+    elif base != new:
+        out.append(f"{path}: {base!r} -> {new!r}")
+
+
+def check_file(baseline: Path, emitted: Path) -> list[str]:
+    problems: list[str] = []
+    if not emitted.exists():
+        return [f"{emitted}: not emitted (benchmark did not run?)"]
+    base = json.loads(baseline.read_text())
+    new = json.loads(emitted.read_text())
+    for spec in GATED[baseline.name]:
+        path = spec[:-2] if spec.endswith(".*") else spec
+        try:
+            b = _lookup(base, path)
+        except KeyError:
+            problems.append(f"{baseline.name}:{path}: missing in baseline "
+                            "(re-seed benchmarks/baselines/)")
+            continue
+        try:
+            n = _lookup(new, path)
+        except KeyError:
+            problems.append(f"{baseline.name}:{path}: missing in emitted")
+            continue
+        local: list[str] = []
+        _diff(b, n, f"{baseline.name}:{path}", local)
+        problems.extend(local)
+    return problems
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emitted", default=".",
+                    help="directory holding the freshly-written BENCH_*.json")
+    ap.add_argument("--baselines", default="benchmarks/baselines")
+    args = ap.parse_args()
+    emitted = Path(args.emitted)
+    baselines = Path(args.baselines)
+
+    problems: list[str] = []
+    for name in GATED:
+        b = baselines / name
+        if not b.exists():
+            problems.append(f"{b}: baseline missing (seed it from an "
+                            "emitted run)")
+            continue
+        problems.extend(check_file(b, emitted / name))
+
+    if problems:
+        print("BENCHMARK REGRESSIONS vs committed baseline:")
+        for p in problems:
+            print(f"  {p}")
+        sys.exit(1)
+    print(f"benchmark baselines OK ({', '.join(sorted(GATED))})")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,11 +10,14 @@ phase, so a regression in either one is caught by the other.
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 
 from repro.core.partition import preset
 
 GB = 1e9
+PHASE_KEYS = ("fwd_allgather", "bwd_allgather", "grad_rs", "cross_replica",
+              "update_gather", "total")
 
 # bandwidth tiers (B/s): paper's Frontier numbers and the TPU adaptation
 FRONTIER = dict(l0=200e9, intra=50e9, inter=25e9)
@@ -63,6 +66,7 @@ def analytic_volumes(scheme: str, psi: int, n_nodes: int,
 
 
 def run(print_fn=print):
+    rec = {}
     psi = 20e9
     n_nodes = 48
     print_fn("\n== Paper Tables VII/VIII: per-device comm volume per step "
@@ -71,14 +75,18 @@ def run(print_fn=print):
              f"{'x-replica':>9s} {'update':>9s} {'total':>9s}")
     for scheme in ("zero3", "zeropp", "zero_topo"):
         v = analytic_volumes(scheme, psi, n_nodes)
+        rec[scheme] = {k: v[k] for k in PHASE_KEYS}
+        rec[scheme]["degrees"] = v["degrees"]
         print_fn(f"{scheme:10s} " + " ".join(
-            f"{v[k] / GB:8.1f}G" for k in
-            ("fwd_allgather", "bwd_allgather", "grad_rs", "cross_replica",
-             "update_gather", "total")))
+            f"{v[k] / GB:8.1f}G" for k in PHASE_KEYS))
     print_fn("\nkey paper claims encoded here:")
     v3 = analytic_volumes("zero3", psi, n_nodes)
     vp = analytic_volumes("zeropp", psi, n_nodes)
     vt = analytic_volumes("zero_topo", psi, n_nodes)
+    rec["invariants"] = dict(
+        zeropp_fwd_over_zero3=vp["fwd_allgather"] / v3["fwd_allgather"],
+        topo_grad_rs_over_zero3=vt["grad_rs"] / v3["grad_rs"],
+        topo_fwd_degree=vt["degrees"]["w"])
     print_fn(f"  zero++ fwd AG is 0.5x of zero3 (INT8): "
              f"{vp['fwd_allgather'] / v3['fwd_allgather']:.3f}")
     print_fn(f"  topo fwd AG devices = 2 (constant in scale): degrees "
@@ -105,6 +113,7 @@ def run(print_fn=print):
                 (scheme, k, mine[k], v)
         print_fn(f"  {scheme:10s} all five phases + total agree "
                  f"(total {theirs['total'] / GB:.1f}G)")
+    rec["cost_model_crosscheck"] = True
 
     print_fn("\n== overlap schedule (DESIGN.md \u00a73): volume-invariance ==")
     for scheme in ("zero3", "zeropp", "zero_topo"):
@@ -118,6 +127,7 @@ def run(print_fn=print):
                  f"({on['schedule']})  -> identical; overlap moves the "
                  "per-layer gather off the critical path, it sends no "
                  "extra bytes")
+    rec["overlap_volume_invariant"] = True
 
     # cross-check against compiled dry-run census when available
     d = Path("experiments/dryrun")
@@ -125,11 +135,16 @@ def run(print_fn=print):
     if files:
         print_fn("\n== measured (compiled-HLO census) vs analytic, prod mesh ==")
         for f in files[:12]:
-            rec = json.loads(f.read_text())
-            wire = rec["census"]["total_wire_bytes"]
-            print_fn(f"  {rec['arch']:24s} {rec['scheme']:10s} "
+            dr = json.loads(f.read_text())
+            wire = dr["census"]["total_wire_bytes"]
+            print_fn(f"  {dr['arch']:24s} {dr['scheme']:10s} "
                      f"wire {wire / GB:7.2f} GB/device/step  "
-                     f"counts {rec['census']['collective_counts']}")
+                     f"counts {dr['census']['collective_counts']}")
+
+    out = Path(os.environ.get("REPRO_BENCH_DIR", ".")) \
+        / "BENCH_comm_volume.json"
+    out.write_text(json.dumps(rec, indent=1))
+    print_fn(f"\nwrote {out}")
     return True
 
 

@@ -120,13 +120,18 @@ def a2a_quant_reduce_scatter(x, axes: AxisTuple, cfg: ZeroConfig,
     s = s.reshape(d, -1)
     q2 = lax.all_to_all(q, tuple(axes), split_axis=0, concat_axis=0, tiled=False)
     s2 = lax.all_to_all(s, tuple(axes), split_axis=0, concat_axis=0, tiled=False)
+    # receive side: fused unpack + dequant + reduce over the d chunks in one
+    # kernel pass (the unfused tail would materialize d dequantized copies
+    # and re-read them for the sum)
     if bits == 4:
-        deq = ops.dequantize_int4(q2.reshape(-1), s2.reshape(-1),
-                                  cfg.quant_block, jnp.float32, impl=cfg.impl)
+        red = ops.dequantize_int4_sum(q2.reshape(-1), s2.reshape(-1), d,
+                                      cfg.quant_block, jnp.float32,
+                                      impl=cfg.impl)
     else:
-        deq = ops.dequantize_int8(q2.reshape(-1), s2.reshape(-1),
-                                  cfg.quant_block, jnp.float32, impl=cfg.impl)
-    return deq.reshape(d, -1).sum(axis=0).astype(out_dtype)
+        red = ops.dequantize_int8_sum(q2.reshape(-1), s2.reshape(-1), d,
+                                      cfg.quant_block, jnp.float32,
+                                      impl=cfg.impl)
+    return red.astype(out_dtype)
 
 
 def reduce_scatter_flat(x, axes: AxisTuple, cfg: ZeroConfig, *,
@@ -198,9 +203,17 @@ def secondary_slice(qf, sf, axes: AxisTuple, cfg: ZeroConfig):
     return q, s
 
 
+def gather_secondary_q(sec_q, sec_s, axes: AxisTuple, cfg: ZeroConfig):
+    """Backward weight all-gather from the INT8 secondary partition, kept in
+    wire format (q, scales) — the fused dequant-matmul backward consumes it
+    without ever materializing the dense weight."""
+    qf = lax.all_gather(sec_q, tuple(axes), tiled=True)
+    sf = lax.all_gather(sec_s, tuple(axes), tiled=True)
+    return qf, sf
+
+
 def gather_secondary(sec_q, sec_s, axes: AxisTuple, cfg: ZeroConfig,
                      out_dtype=jnp.bfloat16):
     """Backward weight all-gather from the INT8 secondary partition (intra tier)."""
-    qf = lax.all_gather(sec_q, tuple(axes), tiled=True)
-    sf = lax.all_gather(sec_s, tuple(axes), tiled=True)
+    qf, sf = gather_secondary_q(sec_q, sec_s, axes, cfg)
     return ops.dequantize_int8(qf, sf, cfg.quant_block, out_dtype, impl=cfg.impl)

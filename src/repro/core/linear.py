@@ -2,15 +2,21 @@
 
 ``zero_matmul``:
   forward : INT8 block-quantized all-gather of the primary shard over the
-            **weight axes** (L0, fastest tier), dequant, matmul. The
-            forward-gathered quantized copy is sliced into the **secondary
-            partition** (ZeRO++: "retains a copy within the node") and saved
-            as the only weight residual.
+            **weight axes** (L0, fastest tier), then the **fused
+            dequant-matmul kernel** (kernels/dequant_matmul.py, DESIGN.md
+            §5) consumes the gathered wire-format (q, scales) buffer
+            directly — the dense weight never round-trips through HBM.
+            The forward-gathered quantized copy is sliced into the
+            **secondary partition** (ZeRO++: "retains a copy within the
+            node") and saved as the only weight residual. Leaves whose
+            column dim is not block-aligned (ops.matmul_fusable) fall back
+            to the dequant -> matmul pair.
   backward: weights are re-materialized by an all-gather of the secondary
             over the **secondary axes** (intra tier; never crosses the slow
-            tier). dX = g.Wt; the weight gradient is immediately
-            reduce-scattered with INT4 quantization via one all-to-all over
-            the weight axes, so the cotangent has primary-shard layout.
+            tier), again kept in wire format for the fused dX = g.Wt.
+            The weight gradient is immediately reduce-scattered with INT4
+            quantization via one all-to-all over the weight axes, so the
+            cotangent has primary-shard layout.
 
 Cross-replica reduction is deliberately *deferred*: primaries are marked
 device-varying (`pvary`) on entry, the engine performs the hierarchical
@@ -31,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..kernels import ops
 from . import collectives as col
 from .partition import LeafSpec, ZeroConfig, padded_flat_size
 
@@ -41,6 +48,21 @@ def _dtype(cfg: ZeroConfig):
 
 def _pad_flat(x, padded: int):
     return jnp.pad(x.reshape(-1), (0, padded - x.size))
+
+
+def _fusable(spec: LeafSpec, cfg: ZeroConfig) -> bool:
+    """Route this leaf's matmuls through the fused dequant-matmul kernel?
+
+    Requires the INT8 weight path and a flat block layout that tiles the
+    (K, N) view row-by-row (ops.matmul_fusable); everything else falls back
+    to the dequant -> matmul pair."""
+    return cfg.quantize_weights and \
+        ops.matmul_fusable(spec.shape, cfg.quant_block)
+
+
+def _w_kn(spec: LeafSpec) -> tuple[int, int]:
+    n = spec.shape[-1]
+    return spec.logical_size // n, n
 
 
 def _gather_full(primary, spec: LeafSpec, cfg: ZeroConfig):
@@ -60,6 +82,20 @@ def _gather_full(primary, spec: LeafSpec, cfg: ZeroConfig):
     return w, sec_q, sec_s
 
 
+def _gather_full_q(primary, spec: LeafSpec, cfg: ZeroConfig):
+    """Forward gather kept in wire format -> (qf, sf, sec_q, sec_s).
+
+    Op-for-op the collective half of ``_gather_full`` (same quantize, same
+    two all-gathers — the HLO census is identical), but the dequant is left
+    to the fused matmul kernel, so the dense weight never hits HBM."""
+    qf, sf = col.gather_issue_int8(primary, cfg.axes.weight, cfg)
+    if cfg.axes.secondary is not None:
+        sec_q, sec_s = col.secondary_slice(qf, sf, cfg.axes.secondary, cfg)
+    else:
+        sec_q = sec_s = None
+    return qf, sf, sec_q, sec_s
+
+
 def _regather_bwd(primary, sec_q, sec_s, spec: LeafSpec, cfg: ZeroConfig):
     """Backward weight re-materialization (secondary if present, else primary)."""
     n = spec.logical_size
@@ -72,6 +108,14 @@ def _regather_bwd(primary, sec_q, sec_s, spec: LeafSpec, cfg: ZeroConfig):
     else:
         full_flat = col.all_gather_flat(primary, cfg.axes.weight).astype(_dtype(cfg))
     return lax.slice(full_flat, (0,), (n,)).reshape(spec.shape)
+
+
+def _regather_bwd_q(primary, sec_q, sec_s, cfg: ZeroConfig):
+    """Backward re-gather in wire format -> (qf, sf); same collectives as
+    ``_regather_bwd``, dequant deferred to the fused dX matmul."""
+    if sec_q is not None:
+        return col.gather_secondary_q(sec_q, sec_s, cfg.axes.secondary, cfg)
+    return col.gather_issue_int8(primary, cfg.axes.weight, cfg)
 
 
 def _grad_to_primary_shard(dw, spec: LeafSpec, cfg: ZeroConfig, primary_dtype):
@@ -90,6 +134,22 @@ def _mm_apply(x, w, transpose, cfg: ZeroConfig):
     return jnp.matmul(x.astype(_dtype(cfg)), w2)
 
 
+def _mm_apply_q(x, qf, sf, transpose, spec: LeafSpec, cfg: ZeroConfig):
+    """Fused dequant-matmul on the gathered wire-format buffer.
+
+    x (..., K) @ dequant(W (K, N)) (or (..., N) @ W.T when transpose); the
+    INT8 payload + per-block scales go straight into the kernel
+    (kernels/dequant_matmul.py), impl-dispatched like every other quant op.
+    """
+    k, n = _w_kn(spec)
+    out_dim = k if transpose else n
+    x2 = x.reshape(-1, x.shape[-1]).astype(_dtype(cfg))
+    y2 = ops.dequant_matmul(x2, qf, sf, (k, n), cfg.quant_block,
+                            transpose=transpose, dtype=_dtype(cfg),
+                            impl=cfg.impl)
+    return y2.reshape(x.shape[:-1] + (out_dim,))
+
+
 def _mm_bwd(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
     """Shared matmul backward for the inline and prefetched VJPs.
 
@@ -98,11 +158,17 @@ def _mm_bwd(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
     re-gather / dX / dW math to keep in sync.
     """
     x, primary, sec_q, sec_s = res
-    w = _regather_bwd(primary, sec_q, sec_s, spec, cfg)
-    w2 = w.reshape(-1, w.shape[-1])
-    if transpose:
-        w2 = w2.T
-    gx = jnp.matmul(g, w2.T).astype(x.dtype)
+    if _fusable(spec, cfg):
+        # dX = g @ W.T (or g @ W when the forward was transposed): the
+        # re-gathered INT8 secondary feeds the fused kernel directly
+        qf, sf = _regather_bwd_q(primary, sec_q, sec_s, cfg)
+        gx = _mm_apply_q(g, qf, sf, not transpose, spec, cfg).astype(x.dtype)
+    else:
+        w = _regather_bwd(primary, sec_q, sec_s, spec, cfg)
+        w2 = w.reshape(-1, w.shape[-1])
+        if transpose:
+            w2 = w2.T
+        gx = jnp.matmul(g, w2.T).astype(x.dtype)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
     dw2 = jnp.matmul(x2.T, g2)
@@ -116,15 +182,23 @@ def _mm_bwd(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
 def make_zero_matmul(spec: LeafSpec, cfg: ZeroConfig):
     """Returns mm(x, primary) computing x @ W (or x @ W.T via transpose arg)."""
     assert len(spec.shape) >= 2
+    fuse = _fusable(spec, cfg)
 
     @partial(jax.custom_vjp, nondiff_argnums=(2,))
     def mm(x, primary, transpose=False):
+        if fuse:
+            qf, sf, _, _ = _gather_full_q(primary, spec, cfg)
+            return _mm_apply_q(x, qf, sf, transpose, spec, cfg)
         w, _, _ = _gather_full(primary, spec, cfg)
         return _mm_apply(x, w, transpose, cfg)
 
     def fwd(x, primary, transpose):
-        w, sec_q, sec_s = _gather_full(primary, spec, cfg)
-        y = _mm_apply(x, w, transpose, cfg)
+        if fuse:
+            qf, sf, sec_q, sec_s = _gather_full_q(primary, spec, cfg)
+            y = _mm_apply_q(x, qf, sf, transpose, spec, cfg)
+        else:
+            w, sec_q, sec_s = _gather_full(primary, spec, cfg)
+            y = _mm_apply(x, w, transpose, cfg)
         if sec_q is None:
             # no secondary: keep primary handle for re-gather (aliases state)
             return y, (x, primary, None, None)
@@ -214,15 +288,31 @@ def _buf_zero_cotangent(spec: LeafSpec, cfg: ZeroConfig):
 def make_zero_matmul_pre(spec: LeafSpec, cfg: ZeroConfig):
     """mm(x, primary, buf) consuming a prefetched gather buffer."""
     assert len(spec.shape) >= 2
+    fuse = _fusable(spec, cfg)
+
+    def _apply(x, buf, transpose):
+        if fuse:
+            # the prefetch buffer is already wire-format (qf, sf): feed it
+            # to the fused kernel, identical to the inline _gather_full_q
+            # path (bitwise: same buffer, same kernel)
+            qf, sf = buf
+            y = _mm_apply_q(x, qf, sf, transpose, spec, cfg)
+            if cfg.axes.secondary is not None:
+                sec_q, sec_s = col.secondary_slice(qf, sf, cfg.axes.secondary,
+                                                   cfg)
+            else:
+                sec_q = sec_s = None
+            return y, sec_q, sec_s
+        w, sec_q, sec_s = _consume_buf(buf, spec, cfg)
+        return _mm_apply(x, w, transpose, cfg), sec_q, sec_s
 
     @partial(jax.custom_vjp, nondiff_argnums=(3,))
     def mm(x, primary, buf, transpose=False):
-        w, _, _ = _consume_buf(buf, spec, cfg)
-        return _mm_apply(x, w, transpose, cfg)
+        y, _, _ = _apply(x, buf, transpose)
+        return y
 
     def fwd(x, primary, buf, transpose):
-        w, sec_q, sec_s = _consume_buf(buf, spec, cfg)
-        y = _mm_apply(x, w, transpose, cfg)
+        y, sec_q, sec_s = _apply(x, buf, transpose)
         if sec_q is None:
             return y, (x, primary, None, None)
         return y, (x, None, sec_q, sec_s)

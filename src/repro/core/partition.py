@@ -65,7 +65,11 @@ class ZeroConfig:
     overlap: bool = False               # double-buffered prefetch of layer i+1's
     # weight all-gather during layer i's compute (DESIGN.md §3). Schedule-only:
     # per-step comm volume and forward numerics are unchanged (test_overlap.py).
-    impl: str = "jnp"                   # kernel impl (jnp | pallas | pallas_interpret)
+    impl: str | None = None             # kernel impl (jnp | pallas |
+    # pallas_interpret). None inherits the process default
+    # (kernels.ops.set_default_impl — the launchers' --kernel-impl flag and
+    # the CI interpret leg's REPRO_KERNEL_IMPL both set it); an explicit
+    # value here pins this config regardless of the process default.
     compute_dtype: str = "bfloat16"
     name: str = "custom"
 

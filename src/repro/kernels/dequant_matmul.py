@@ -61,3 +61,95 @@ def dequant_matmul_pallas(x: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, q, scales)
+
+
+# ---------------------------------------------------------------------------
+# Flat-shard-layout variant: the hot-path kernel behind ``core/linear.py``.
+#
+# The ZeRO engine gathers weights as a *flat* INT8 shard with one f32 scale
+# per ``block`` consecutive flat elements (DeepSpeed layout). Viewed as the
+# logical (K, N) weight (row-major, N % block == 0), the scale for element
+# (k, j) is ``scales[k, j // block]`` — scales block along columns *within*
+# a row, not down a column. This kernel consumes that layout directly, so
+# the gathered INT8 buffer feeds the MXU without ever materializing the
+# dequantized weight in HBM, and emits bf16 (or any requested dtype).
+#
+# Both matmul orientations are supported because the backward pass needs
+# g @ W.T against the re-gathered INT8 secondary partition:
+#   transpose=False: x (M, K) @ dequant(q (K, N))    -> (M, N)
+#   transpose=True : x (M, N) @ dequant(q (K, N)).T  -> (M, K)
+# In both cases the q/scales tile layout is identical ((rows, cols) with
+# scales (rows, cols//block)); only the grid index maps and the dot_general
+# contraction dims differ.
+# ---------------------------------------------------------------------------
+
+
+def _dequant_mm_flat_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *,
+                            block, k_steps, transpose):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    q = q_ref[...].astype(jnp.float32)
+    r, c = q.shape
+    s = jnp.broadcast_to(s_ref[...][:, :, None], (r, c // block, block))
+    w = q * s.reshape(r, c)
+    if transpose:
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bm", "bo", "bc",
+                                             "transpose", "dtype",
+                                             "interpret"))
+def dequant_matmul_flat_pallas(x: jnp.ndarray, q: jnp.ndarray,
+                               scales: jnp.ndarray, *, block: int,
+                               bm: int, bo: int, bc: int,
+                               transpose: bool = False,
+                               dtype=jnp.bfloat16, interpret: bool = False):
+    """Fused dequant x matmul on the flat-shard scale layout.
+
+    ``q``: (K, N) int8, ``scales``: (K, N // block) f32 (see module note).
+    transpose=False: x (M, K) -> (M, N);  transpose=True: x (M, N) -> (M, K).
+    ``bm``/``bo``/``bc`` tile M / the output dim / the contraction dim.
+    Scale tiles must stay block-aligned: bc % block == 0 when the
+    contraction runs along N (transpose=True), bo % block == 0 otherwise.
+    """
+    k, n = q.shape
+    m = x.shape[0]
+    assert scales.shape == (k, n // block), (q.shape, scales.shape, block)
+    c_len, out_dim = (n, k) if transpose else (k, n)
+    assert x.shape == (m, c_len) and m % bm == 0 and out_dim % bo == 0 \
+        and c_len % bc == 0, (x.shape, q.shape, bm, bo, bc)
+    k_steps = c_len // bc
+    grid = (m // bm, out_dim // bo, k_steps)
+    if transpose:
+        assert bc % block == 0, (bc, block)
+        q_spec = pl.BlockSpec((bo, bc), lambda i, j, kk: (j, kk))
+        s_spec = pl.BlockSpec((bo, bc // block), lambda i, j, kk: (j, kk))
+    else:
+        assert bo % block == 0, (bo, block)
+        q_spec = pl.BlockSpec((bc, bo), lambda i, j, kk: (kk, j))
+        s_spec = pl.BlockSpec((bc, bo // block), lambda i, j, kk: (kk, j))
+    return pl.pallas_call(
+        functools.partial(_dequant_mm_flat_kernel, block=block,
+                          k_steps=k_steps, transpose=transpose),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bc), lambda i, j, kk: (i, kk)),
+            q_spec,
+            s_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, out_dim), dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bo), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scales)

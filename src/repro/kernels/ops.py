@@ -19,8 +19,12 @@ import functools
 import jax.numpy as jnp
 
 from . import ref
-from .quant_blockwise import dequantize_int8_pallas, quantize_int8_pallas
-from .quant_int4 import dequantize_int4_pallas, quantize_int4_pallas
+from .dequant_matmul import dequant_matmul_flat_pallas
+from .quant_blockwise import (dequantize_int8_pallas,
+                              dequantize_int8_sum_pallas,
+                              quantize_int8_pallas)
+from .quant_int4 import (dequantize_int4_pallas, dequantize_int4_sum_pallas,
+                         quantize_int4_pallas)
 
 DEFAULT_BLOCK = 512
 _DEFAULT_IMPL = "jnp"
@@ -87,6 +91,123 @@ def dequantize_int4(packed, scales, block: int = DEFAULT_BLOCK,
         out = dequantize_int4_pallas(qb, sb, dtype,
                                      interpret=(impl == "pallas_interpret"))
     return out.reshape(-1)
+
+
+def dequantize_int4_sum(packed, scales, d: int, block: int = DEFAULT_BLOCK,
+                        dtype=jnp.float32, impl: str | None = None):
+    """Fused unpack + dequant + reduce of a2a-received INT4 chunks.
+
+    packed: flat (d * n/2,) uint8 (d chunks, row-major); scales: flat
+    (d * n/block,). Returns (n,) = sum over the d chunks, dequantized once
+    — the receive-side half of the ZeRO++ quantized reduce-scatter in a
+    single pass (no d dequantized copies round-tripping through HBM)."""
+    impl = impl or _DEFAULT_IMPL
+    qb = packed.reshape(d, -1, block // 2)
+    sb = scales.reshape(d, -1, 1)
+    if impl == "jnp":
+        out = ref.dequantize_int4_sum_ref(qb, sb, dtype)
+    else:
+        out = dequantize_int4_sum_pallas(qb, sb, dtype,
+                                         interpret=(impl == "pallas_interpret"))
+    return out.reshape(-1)
+
+
+def dequantize_int8_sum(q, scales, d: int, block: int = DEFAULT_BLOCK,
+                        dtype=jnp.float32, impl: str | None = None):
+    """INT8 variant of ``dequantize_int4_sum`` (bits=8 gradient RS)."""
+    impl = impl or _DEFAULT_IMPL
+    qb = q.reshape(d, -1, block)
+    sb = scales.reshape(d, -1, 1)
+    if impl == "jnp":
+        out = ref.dequantize_int8_sum_ref(qb, sb, dtype)
+    else:
+        out = dequantize_int8_sum_pallas(qb, sb, dtype,
+                                         interpret=(impl == "pallas_interpret"))
+    return out.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Fused dequant x matmul (flat-shard scale layout)
+# ---------------------------------------------------------------------------
+
+def matmul_fusable(shape: tuple[int, ...], block: int) -> bool:
+    """Can a weight of logical ``shape`` feed the fused dequant matmul?
+
+    Requires >= 2 dims and the last (column) dim to be a whole number of
+    quantization blocks, so the flat blocks tile each row of the (K, N)
+    view exactly. Non-fusable leaves fall back to dequant -> matmul."""
+    return len(shape) >= 2 and shape[-1] % block == 0
+
+
+@functools.cache
+def _divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (>= 1)."""
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _contraction_tile(c_len: int, block: int, transpose: bool) -> int:
+    """Contraction tile (one accumulation step per tile).
+
+    Along K (transpose=False) any divisor works; along N (transpose=True)
+    the tile must stay a whole number of scale blocks. Capped near 512 so
+    the K-blocked jnp oracle unrolls only a handful of dots and compiled
+    tiles stay VMEM-sized."""
+    if transpose:
+        return block * _divisor_leq(c_len // block, max(1, 512 // block))
+    return _divisor_leq(c_len, 512)
+
+
+def dequant_matmul(x2, q_flat, scales, w_shape: tuple[int, int],
+                   block: int = DEFAULT_BLOCK, *, transpose: bool = False,
+                   dtype=jnp.bfloat16, impl: str | None = None):
+    """y = x @ dequant(W) (or x @ dequant(W).T) without materializing W.
+
+    ``q_flat``/``scales`` are the flat gathered INT8 buffer + per-block
+    scales exactly as the collectives produce them (padded; only the first
+    K*N / K*N//block entries are consumed). ``w_shape`` = (K, N) logical.
+    x2: (M, K) (or (M, N) when transpose). Output rows are padded to the
+    f32 sublane multiple internally and sliced back.
+
+    impl="jnp" runs ``ref.dequant_matmul_flat_ref`` with the *same*
+    contraction blocking and accumulation order as the kernel, so jnp and
+    pallas_interpret results are bitwise identical (tests/test_kernels.py).
+    """
+    impl = impl or _DEFAULT_IMPL
+    k, n = w_shape
+    assert n % block == 0, (w_shape, block)
+    q2 = q_flat.reshape(-1)[: k * n].reshape(k, n)
+    s2 = scales.reshape(-1)[: (k * n) // block].reshape(k, n // block)
+    m = x2.shape[0]
+    m_pad = padded_size(max(m, 1), 8)
+    if m_pad != m:
+        x2 = jnp.pad(x2, ((0, m_pad - m), (0, 0)))
+    bc = _contraction_tile(n if transpose else k, block, transpose)
+    out_dim = k if transpose else n
+    if impl == "jnp":
+        out = ref.dequant_matmul_flat_ref(x2, q2, s2, block, bc=bc,
+                                          transpose=transpose, dtype=dtype)
+    elif impl == "pallas_interpret":
+        # full M/out-dim extents: one grid tile per contraction step, the
+        # exact blocking the jnp oracle mirrors (bitwise contract, §5)
+        out = dequant_matmul_flat_pallas(
+            x2, q2, s2, block=block, bm=m_pad, bo=out_dim, bc=bc,
+            transpose=transpose, dtype=dtype, interpret=True)
+    else:
+        # compiled TPU: VMEM-sized tiles (the fused win is HBM traffic, so
+        # the accumulation order may differ from the CPU oracle here — like
+        # any other MXU-vs-CPU matmul)
+        bm = _divisor_leq(m_pad, 256)
+        if transpose:
+            bo = _divisor_leq(out_dim, 512)
+        else:
+            bo = block * _divisor_leq(out_dim // block, max(1, 512 // block))
+        out = dequant_matmul_flat_pallas(
+            x2, q2, s2, block=block, bm=bm, bo=bo, bc=bc,
+            transpose=transpose, dtype=dtype, interpret=False)
+    return out[:m] if m_pad != m else out
 
 
 @functools.cache

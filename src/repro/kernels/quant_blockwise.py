@@ -5,12 +5,14 @@ assigns one warp per block and uses warp shuffles for the absmax reduction;
 on TPU the natural unit is a VMEM tile processed by the VPU, so we tile the
 ``(num_blocks, block_size)`` view into ``(ROWS_PER_TILE, block_size)`` VMEM
 blocks and let each grid step reduce its rows vectorized. ``block_size`` is
-kept a multiple of 128 (lane width) and rows a multiple of 8 (sublanes) so
-tiles are layout-aligned.
+kept a multiple of 128 (lane width); the row tile is ``gcd(nb, 8)`` —
+8 sublanes when the block count allows, degrading (never truncating) for
+odd block counts so every row is written.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -36,9 +38,10 @@ def _dequant_int8_kernel(q_ref, s_ref, o_ref, *, dtype):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize_int8_pallas(blocks: jnp.ndarray, *, interpret: bool = False):
-    """(nb, bs) -> ((nb, bs) int8, (nb, 1) f32). nb % 8 == 0, bs % 128 == 0."""
+    """(nb, bs) -> ((nb, bs) int8, (nb, 1) f32). bs % 128 == 0; the row tile
+    is gcd(nb, 8) so every block row is covered for any nb."""
     nb, bs = blocks.shape
-    rows = min(ROWS_PER_TILE, nb)
+    rows = math.gcd(nb, ROWS_PER_TILE)
     grid = (nb // rows,)
     return pl.pallas_call(
         _quant_int8_kernel,
@@ -60,7 +63,7 @@ def quantize_int8_pallas(blocks: jnp.ndarray, *, interpret: bool = False):
 def dequantize_int8_pallas(q: jnp.ndarray, scales: jnp.ndarray,
                            dtype=jnp.float32, *, interpret: bool = False):
     nb, bs = q.shape
-    rows = min(ROWS_PER_TILE, nb)
+    rows = math.gcd(nb, ROWS_PER_TILE)
     grid = (nb // rows,)
     return pl.pallas_call(
         functools.partial(_dequant_int8_kernel, dtype=dtype),
@@ -68,6 +71,40 @@ def dequantize_int8_pallas(q: jnp.ndarray, scales: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((rows, bs), lambda i: (i, 0)),
             pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bs), dtype),
+        interpret=interpret,
+    )(q, scales)
+
+
+def _dequant_int8_sum_kernel(q_ref, s_ref, o_ref, *, d, dtype):
+    # unrolled sequential accumulation over the (static, small) group axis:
+    # one pass over the received chunks instead of d dequant round-trips
+    # through HBM followed by a separate reduction
+    acc = q_ref[0].astype(jnp.float32) * s_ref[0]
+    for j in range(1, d):
+        acc = acc + q_ref[j].astype(jnp.float32) * s_ref[j]
+    o_ref[...] = acc.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def dequantize_int8_sum_pallas(q: jnp.ndarray, scales: jnp.ndarray,
+                               dtype=jnp.float32, *, interpret: bool = False):
+    """Fused dequant + reduce of a2a-received chunks (ZeRO++ grad RS tail).
+
+    q: (d, nb, bs) int8; scales: (d, nb, 1) f32 -> (nb, bs)
+    = sum_j dequant(q[j]). Sequential f32 accumulation over j, same order
+    as ``ref.dequantize_int8_sum_ref`` (bitwise in interpret mode)."""
+    d, nb, bs = q.shape
+    rows = math.gcd(nb, ROWS_PER_TILE)
+    grid = (nb // rows,)
+    return pl.pallas_call(
+        functools.partial(_dequant_int8_sum_kernel, d=d, dtype=dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, rows, bs), lambda i: (0, i, 0)),
+            pl.BlockSpec((d, rows, 1), lambda i: (0, i, 0)),
         ],
         out_specs=pl.BlockSpec((rows, bs), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, bs), dtype),

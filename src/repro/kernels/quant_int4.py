@@ -11,6 +11,7 @@ viewed as (..., bs//2, 2); low nibble = even element, high nibble = odd.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +46,7 @@ def _dequant_int4_kernel(q_ref, s_ref, o_ref, *, dtype):
 def quantize_int4_pallas(blocks: jnp.ndarray, *, interpret: bool = False):
     """(nb, bs) -> ((nb, bs//2) uint8 packed, (nb, 1) f32). bs % 256 == 0."""
     nb, bs = blocks.shape
-    rows = min(ROWS_PER_TILE, nb)
+    rows = math.gcd(nb, ROWS_PER_TILE)
     grid = (nb // rows,)
     return pl.pallas_call(
         _quant_int4_kernel,
@@ -67,7 +68,7 @@ def quantize_int4_pallas(blocks: jnp.ndarray, *, interpret: bool = False):
 def dequantize_int4_pallas(packed: jnp.ndarray, scales: jnp.ndarray,
                            dtype=jnp.float32, *, interpret: bool = False):
     nb, half = packed.shape
-    rows = min(ROWS_PER_TILE, nb)
+    rows = math.gcd(nb, ROWS_PER_TILE)
     grid = (nb // rows,)
     return pl.pallas_call(
         functools.partial(_dequant_int4_kernel, dtype=dtype),
@@ -75,6 +76,48 @@ def dequantize_int4_pallas(packed: jnp.ndarray, scales: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((rows, half), lambda i: (i, 0)),
             pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, half * 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, half * 2), dtype),
+        interpret=interpret,
+    )(packed, scales)
+
+
+def _dequant_int4_sum_kernel(q_ref, s_ref, o_ref, *, d, dtype):
+    # fused unpack + dequant + reduce: one pass over the a2a-received chunks
+    # (the unfused tail would write d dequantized copies back to HBM and
+    # re-read them for the reduction)
+    def chunk(j):
+        p = q_ref[j].astype(jnp.int32)
+        lo = (p & 0xF) - 8
+        hi = ((p >> 4) & 0xF) - 8
+        r, ch = p.shape
+        out = jnp.stack([lo, hi], axis=-1).reshape(r, ch * 2).astype(jnp.float32)
+        return out * s_ref[j]
+
+    acc = chunk(0)
+    for j in range(1, d):
+        acc = acc + chunk(j)
+    o_ref[...] = acc.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def dequantize_int4_sum_pallas(packed: jnp.ndarray, scales: jnp.ndarray,
+                               dtype=jnp.float32, *, interpret: bool = False):
+    """Fused unpack + dequant + reduce over the leading (group) axis.
+
+    packed: (d, nb, bs//2) uint8; scales: (d, nb, 1) f32 -> (nb, bs)
+    = sum_j dequant(packed[j]). Sequential f32 accumulation over j, same
+    order as ``ref.dequantize_int4_sum_ref`` (bitwise in interpret mode)."""
+    d, nb, half = packed.shape
+    rows = math.gcd(nb, ROWS_PER_TILE)
+    grid = (nb // rows,)
+    return pl.pallas_call(
+        functools.partial(_dequant_int4_sum_kernel, d=d, dtype=dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, rows, half), lambda i: (0, i, 0)),
+            pl.BlockSpec((d, rows, 1), lambda i: (0, i, 0)),
         ],
         out_specs=pl.BlockSpec((rows, half * 2), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, half * 2), dtype),

@@ -12,6 +12,7 @@ owns the flatten/pad plumbing.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 INT8_QMAX = 127.0
@@ -71,3 +72,68 @@ def dequant_matmul_ref(x: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
     kb = q.shape[0] // scales.shape[0]
     w = q.astype(jnp.float32) * jnp.repeat(scales, kb, axis=0)
     return (x.astype(jnp.float32) @ w).astype(dtype)
+
+
+def dequant_w_flat_ref(q: jnp.ndarray, scales: jnp.ndarray,
+                       block: int) -> jnp.ndarray:
+    """Dequantize a (K, N) int8 weight whose blocks follow the *flat*
+    (row-major) shard layout: scale ``scales[k, c]`` covers columns
+    ``[c*block, (c+1)*block)`` of row ``k`` (requires N % block == 0).
+    ``scales``: (K, N // block) f32. Returns f32 (K, N)."""
+    k, n = q.shape
+    s = jnp.broadcast_to(scales[:, :, None], (k, n // block, block))
+    return q.astype(jnp.float32) * s.reshape(k, n)
+
+
+def dequant_matmul_flat_ref(x: jnp.ndarray, q: jnp.ndarray,
+                            scales: jnp.ndarray, block: int, *,
+                            bc: int, transpose: bool = False,
+                            dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for the flat-layout fused dequant matmul, with the *same*
+    contraction blocking as the Pallas kernel (``bc`` elements per step,
+    sequential f32 accumulation) so ``impl="jnp"`` and
+    ``impl="pallas_interpret"`` are bitwise identical.
+
+    transpose=False: x (M, K) @ dequant(q (K, N)) -> (M, N)
+    transpose=True : x (M, N) @ dequant(q (K, N)).T -> (M, K)
+    """
+    w = dequant_w_flat_ref(q, scales, block)
+    xf = x.astype(jnp.float32)
+    c_len = q.shape[0] if not transpose else q.shape[1]
+    out_dim = q.shape[1] if not transpose else q.shape[0]
+    acc = jnp.zeros((x.shape[0], out_dim), jnp.float32)
+    for step in range(c_len // bc):
+        sl = slice(step * bc, (step + 1) * bc)
+        if transpose:
+            acc = acc + jax.lax.dot_general(
+                xf[:, sl], w[:, sl], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            acc = acc + jnp.dot(xf[:, sl], w[sl, :],
+                                preferred_element_type=jnp.float32)
+    return acc.astype(dtype)
+
+
+def dequantize_int8_sum_ref(q: jnp.ndarray, scales: jnp.ndarray,
+                            dtype=jnp.float32) -> jnp.ndarray:
+    """Fused dequant + reduce over the leading (group) axis.
+
+    ``q``: (d, nb, bs) int8, ``scales``: (d, nb, 1). Accumulation is a
+    *sequential* f32 loop over d (matching the Pallas kernel's order) so the
+    jnp and interpret impls agree bitwise. Returns (nb, bs)."""
+    acc = dequantize_int8_ref(q[0], scales[0], jnp.float32)
+    for j in range(1, q.shape[0]):
+        acc = acc + dequantize_int8_ref(q[j], scales[j], jnp.float32)
+    return acc.astype(dtype)
+
+
+def dequantize_int4_sum_ref(packed: jnp.ndarray, scales: jnp.ndarray,
+                            dtype=jnp.float32) -> jnp.ndarray:
+    """Fused unpack + dequant + reduce over the leading (group) axis.
+
+    ``packed``: (d, nb, bs//2) uint8, ``scales``: (d, nb, 1).
+    Returns (nb, bs) = sum_j dequant(packed[j]), sequential f32 order."""
+    acc = dequantize_int4_ref(packed[0], scales[0], jnp.float32)
+    for j in range(1, packed.shape[0]):
+        acc = acc + dequantize_int4_ref(packed[j], scales[j], jnp.float32)
+    return acc.astype(dtype)

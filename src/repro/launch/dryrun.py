@@ -169,6 +169,10 @@ def main():
     ap.add_argument("--cross-replica", default="",
                     choices=["", "allreduce", "reduce_scatter"])
     ap.add_argument("--quant-update", action="store_true")
+    ap.add_argument("--kernel-impl", default="",
+                    choices=["", "jnp", "pallas", "pallas_interpret"],
+                    help="quantization-kernel implementation to lower with "
+                         "(DESIGN.md §5); empty inherits the process default")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
     engine_opts = {}
@@ -176,6 +180,8 @@ def main():
         engine_opts["cross_replica"] = args.cross_replica
     if args.quant_update:
         engine_opts["quantize_update_gather"] = True
+    if args.kernel_impl:
+        engine_opts["impl"] = args.kernel_impl
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     # default "all" = the 10 assigned archs (paper's neox models via explicit)

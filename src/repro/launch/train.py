@@ -26,6 +26,11 @@ def main():
     ap.add_argument("--overlap", action="store_true",
                     help="double-buffered prefetch of the per-layer weight "
                          "all-gather (DESIGN.md §3)")
+    ap.add_argument("--kernel-impl", default=None,
+                    choices=["jnp", "pallas", "pallas_interpret"],
+                    help="quantization-kernel implementation (DESIGN.md §5):"
+                         " jnp oracle (default), compiled Pallas (TPU), or"
+                         " interpreted Pallas bodies (CPU validation)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -48,6 +53,11 @@ def main():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
     import jax
+    if args.kernel_impl:
+        # process default: covers every config built from here on (the
+        # explicit per-config override below pins the engine's own cfg)
+        from ..kernels import ops as kernel_ops
+        kernel_ops.set_default_impl(args.kernel_impl)
     from ..core.engine import TrainHparams, ZeroEngine
     from ..models.config import ShapeConfig, SHAPES
     from ..models.registry import build_model, get_arch
@@ -73,7 +83,8 @@ def main():
                           memory_budget=args.budget_gb * 1e9
                           if args.budget_gb else None)
     cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block,
-                        overlap=args.overlap, **planner_kw)
+                        overlap=args.overlap, impl=args.kernel_impl,
+                        **planner_kw)
     if args.scheme == "auto":
         a = cfg.axes
         print(f"planner choice: w={a.weight} e={a.extra_grad} r={a.replica} "
@@ -84,7 +95,8 @@ def main():
                       overlap=args.overlap)
     eng = ZeroEngine(model.leaf_specs(), cfg, mesh, hp)
     print(f"arch={arch.name} scheme={cfg.name} mesh={dict(mesh.shape)} "
-          f"params={eng.param_count():,} overlap={eng.cfg.overlap}")
+          f"params={eng.param_count():,} overlap={eng.cfg.overlap} "
+          f"kernel_impl={eng.cfg.impl or 'jnp'}")
     print("per-device state bytes:", eng.memory_report())
 
     tr = Trainer(model, eng, mesh, shape)

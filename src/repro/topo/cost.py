@@ -66,6 +66,11 @@ class Workload:
     n_microbatch: int = 4             # gradient-accumulation factor
     hidden_fraction: float = 0.6      # fraction of comm hidden under compute
     # (DeepSpeed-style prefetch; matches the repo's overlap schedule §3)
+    fused_kernels: bool = True        # dequant fused into the consumer
+    # (kernels/dequant_matmul.py + the a2a dequant-reduce). False prices the
+    # unfused pipeline: every gathered weight is dequantized to bf16 in HBM
+    # and re-read by the matmul, and the a2a-received grad chunks round-trip
+    # once more before the reduction (step_cost's kernel_s term).
 
 
 def phase_volumes(cfg: ZeroConfig, psi: float) -> dict[str, float]:
@@ -132,6 +137,9 @@ class StepCost:
     compute_s: float
     memory: dict[str, float]          # per-device state bytes (Tables V/VI)
     fits: bool                        # memory_total <= budget
+    kernel_s: float = 0.0             # unfused quant/dequant HBM round-trips
+    # (zero when Workload.fused_kernels: the dequant rides the matmul's
+    # VMEM pipeline and never touches HBM)
 
     @property
     def comm_total_s(self) -> float:
@@ -143,7 +151,7 @@ class StepCost:
 
     def step_s(self, hidden_fraction: float = 0.6) -> float:
         """Wall-clock with partial compute/comm overlap."""
-        c, m = self.compute_s, self.comm_total_s
+        c, m = self.compute_s + self.kernel_s, self.comm_total_s
         return max(c, m) + (1 - hidden_fraction) * min(c, m)
 
 
@@ -177,10 +185,25 @@ def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
             comm[phase] = wire + hops
     tokens_per_device = wl.n_microbatch * wl.tokens_per_device_mb
     compute_s = 6.0 * wl.psi * tokens_per_device / topo.flops_per_device
+    kernel_s = 0.0
+    if not wl.fused_kernels:
+        # unfused quant path: every INT8 weight gather is dequantized to a
+        # bf16 copy in HBM (write 2B/param) that the matmul re-reads
+        # (another 2B/param), forward and backward, per microbatch; the a2a
+        # grad RS likewise materializes the received chunks in f32 before
+        # reducing. Fusion (kernels/dequant_matmul.py, *_sum kernels)
+        # deletes all of it — HBM only ever sees the 1B/param wire format.
+        kb = 0.0
+        if cfg.quantize_weights:
+            kb += wl.n_microbatch * 2 * 4.0 * wl.psi        # fwd + bwd dequant
+        if cfg.quantize_grads:
+            kb += wl.n_microbatch * 2 * 4.0 * wl.psi / cfg.w_degree
+        kernel_s = kb / topo.hbm_bw
     mem = memory_bytes(cfg, wl.psi)
     budget = topo.hbm_bytes if memory_budget is None else memory_budget
     return StepCost(comm_s=comm, volumes=vols, compute_s=compute_s,
-                    memory=mem, fits=mem["total"] <= budget)
+                    memory=mem, fits=mem["total"] <= budget,
+                    kernel_s=kernel_s)
 
 
 def tflops_per_device(cfg: ZeroConfig, topo: Topology, wl: Workload) -> float:

@@ -45,6 +45,8 @@ class Topology:
     links: tuple[Link, ...]
     flops_per_device: float = 135e12   # achievable matmul FLOP/s
     hbm_bytes: float = 64e9            # per-device memory budget default
+    hbm_bw: float = 1.6e12             # per-device HBM bandwidth, B/s
+    # (prices the dequant round-trip the fused kernels remove, cost.py)
 
     def __post_init__(self):
         names = [l.name for l in self.links]
@@ -113,7 +115,8 @@ class Topology:
         links = tuple(Link(**l) for l in d["links"])
         return cls(name=d["name"], links=links,
                    flops_per_device=float(d.get("flops_per_device", 135e12)),
-                   hbm_bytes=float(d.get("hbm_bytes", 64e9)))
+                   hbm_bytes=float(d.get("hbm_bytes", 64e9)),
+                   hbm_bw=float(d.get("hbm_bw", 1.6e12)))
 
     def save(self, path) -> str:
         Path(path).write_text(json.dumps(self.to_dict(), indent=1))

@@ -21,6 +21,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.compat import shard_map  # noqa: E402
 
+# propagate the CI interpret leg's kernel impl into subprocess scenarios
+# (same hook as tests/conftest.py)
+if os.environ.get("REPRO_KERNEL_IMPL"):
+    from repro.kernels import ops as _kops
+    _kops.set_default_impl(os.environ["REPRO_KERNEL_IMPL"])
+
 AX = ("data", "node", "gcd")
 
 
@@ -201,6 +207,77 @@ def overlap_equivalence():
             out[overlap] = ls
         assert out[False] == out[True], (name, scheme, out)
     print("SCENARIO_OK overlap_equivalence")
+
+
+def kernel_impl_equivalence():
+    """impl="jnp" vs impl="pallas_interpret" are bitwise identical through
+    the full quantized hot path on 8 devices: zero_matmul / zero_gather_q
+    forward (loss) AND backward (every per-leaf gradient), including the
+    fused dequant-matmul and the fused INT4 a2a dequant-reduce."""
+    from repro.core.engine import ParamView, TrainHparams, ZeroEngine
+    from repro.models.registry import build_model, get_arch
+
+    jax.config.update("jax_default_matmul_precision", "float32")
+    mesh = _mesh()
+    arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128, vocab=256)
+    model = build_model(arch)
+    rng = np.random.default_rng(0)
+    batch_np = rng.integers(0, arch.vocab, (8, 33), dtype=np.int32)
+    loss_fn = model.loss_fn()
+
+    out = {}
+    for impl in ("jnp", "pallas_interpret"):
+        cfg = _cfg("zero_topo", mesh, compute_dtype="float32", impl=impl)
+        assert cfg.quantize_weights and cfg.quantize_grads
+        eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                         TrainHparams(lr=1e-3, total_steps=8, warmup_steps=0))
+        state = eng.init_state(jax.random.key(0))
+        specs = eng.state_in_specs()["primaries"]
+
+        def local(primaries, b, eng=eng):
+            def loss(p):
+                v = ParamView(eng.fns, p, overlap=eng.cfg.overlap)
+                l, t = loss_fn(v, b)
+                return l / t
+            return jax.value_and_grad(loss)(primaries)
+
+        sm = shard_map(local, mesh=mesh,
+                       in_specs=(specs, {"tokens": P(AX)}),
+                       out_specs=(P(), specs), check_vma=False)
+        batch = {"tokens": jax.device_put(jnp.asarray(batch_np),
+                                          NamedSharding(mesh, P(AX)))}
+        loss, grads = jax.jit(sm)(state["primaries"], batch)
+        out[impl] = (float(loss), {n: np.asarray(g) for n, g in grads.items()})
+
+    l_j, g_j = out["jnp"]
+    l_p, g_p = out["pallas_interpret"]
+    assert l_j == l_p, (l_j, l_p)
+    for n in g_j:
+        np.testing.assert_array_equal(g_j[n], g_p[n], err_msg=n)
+
+    # full train step (adds the stage-2 RS + update gather): losses and
+    # updated masters must also match bitwise
+    steps = {}
+    for impl in ("jnp", "pallas_interpret"):
+        cfg = _cfg("zero_topo", mesh, compute_dtype="float32", impl=impl)
+        eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                         TrainHparams(lr=1e-3, total_steps=8, warmup_steps=0))
+        state = eng.init_state(jax.random.key(0))
+        step = eng.make_train_step(loss_fn, {"tokens": P(AX)})
+        batch = {"tokens": jax.device_put(jnp.asarray(batch_np),
+                                          NamedSharding(mesh, P(AX)))}
+        ls = []
+        for _ in range(2):
+            state, m = step(state, batch)
+            ls.append(float(m["loss"]))
+        steps[impl] = (ls, {n: np.asarray(state["master"][n])
+                            for n in eng.specs})
+    assert steps["jnp"][0] == steps["pallas_interpret"][0], steps
+    for n in steps["jnp"][1]:
+        np.testing.assert_array_equal(steps["jnp"][1][n],
+                                      steps["pallas_interpret"][1][n],
+                                      err_msg=n)
+    print("SCENARIO_OK kernel_impl_equivalence")
 
 
 # ---------------------------------------------------------------------------
@@ -478,6 +555,7 @@ def resident_and_sp():
 SCENARIOS = dict(collectives=collectives,
                  collectives_split=collectives_split,
                  overlap_equivalence=overlap_equivalence,
+                 kernel_impl_equivalence=kernel_impl_equivalence,
                  auto_scheme=auto_scheme,
                  schemes_equivalent=schemes_equivalent,
                  dp_vs_single=dp_vs_single,

@@ -15,6 +15,14 @@ import pytest  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "float32")
 
+# CI interpret leg: REPRO_KERNEL_IMPL=pallas_interpret reruns the suite with
+# the Pallas kernel bodies interpreted on CPU. ZeroConfig.impl defaults to
+# None (= inherit this process default), so every config built by the tests
+# picks it up unless a test pins impl explicitly.
+if os.environ.get("REPRO_KERNEL_IMPL"):
+    from repro.kernels import ops as _kops
+    _kops.set_default_impl(os.environ["REPRO_KERNEL_IMPL"])
+
 
 @pytest.fixture(scope="session")
 def mesh1():

@@ -9,8 +9,8 @@ import pytest
 
 HERE = os.path.dirname(__file__)
 SCENARIOS = ["collectives", "schemes_equivalent", "auto_scheme",
-             "dp_vs_single", "serve_sharded", "hlo_census_real",
-             "multipod_mesh", "resident_and_sp"]
+             "kernel_impl_equivalence", "dp_vs_single", "serve_sharded",
+             "hlo_census_real", "multipod_mesh", "resident_and_sp"]
 
 
 @pytest.mark.parametrize("name", SCENARIOS)

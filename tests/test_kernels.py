@@ -1,12 +1,19 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
-shape/dtype sweeps + hypothesis property tests (deliverable (c))."""
+shape/dtype sweeps + hypothesis property tests (deliverable (c)).
+
+hypothesis is an optional [test] extra: only the property tests at the
+bottom require it (they skip when it is missing); the deterministic kernel
+tests always run."""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
-pytest.importorskip("hypothesis")  # optional [test] extra; degrade to skip, not collection error
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.kernels.quant_blockwise import (dequantize_int8_pallas,
@@ -78,6 +85,114 @@ def test_dequant_matmul_pallas(mkn):
                                rtol=2e-5, atol=5e-4)
 
 
+@pytest.mark.parametrize("transpose", [False, True])
+@pytest.mark.parametrize("knb", [(128, 384, 64), (256, 256, 128),
+                                 (128, 512, 512)])
+def test_dequant_matmul_flat_matches_ref_and_unfused(knb, transpose):
+    """Flat-shard scale layout: the fused kernel (interpret) == the blocked
+    ref == the unfused dequant->matmul, both orientations."""
+    k, n, block = knb
+    m = 66   # deliberately not a sublane multiple: exercises the M padding
+    w = _rand((k * n,), jnp.float32, 4)
+    q, s = ops.quantize_int8(w, block)
+    x = _rand((m, n if transpose else k), jnp.float32, 5)
+    y_j = ops.dequant_matmul(x, q, s, (k, n), block, transpose=transpose,
+                             dtype=jnp.float32, impl="jnp")
+    y_p = ops.dequant_matmul(x, q, s, (k, n), block, transpose=transpose,
+                             dtype=jnp.float32, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y_j), np.asarray(y_p))
+    wd = ops.dequantize_int8(q, s, block, jnp.float32).reshape(k, n)
+    y_u = x @ (wd.T if transpose else wd)
+    # approximate: the unfused dot's reduction order depends on XLA's CPU
+    # partitioning (it shifts under --xla_force_host_platform_device_count)
+    np.testing.assert_allclose(np.asarray(y_j), np.asarray(y_u),
+                               rtol=1e-4, atol=5e-4)
+
+
+def test_dequant_matmul_flat_bf16_out():
+    k, n, block = 128, 256, 64
+    q, s = ops.quantize_int8(_rand((k * n,), jnp.float32, 6), block)
+    x = _rand((8, k), jnp.float32, 7)
+    y = ops.dequant_matmul(x, q, s, (k, n), block, dtype=jnp.bfloat16,
+                           impl="pallas_interpret")
+    assert y.dtype == jnp.bfloat16 and y.shape == (8, n)
+    y32 = ops.dequant_matmul(x, q, s, (k, n), block, dtype=jnp.float32,
+                             impl="jnp")
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(y32.astype(jnp.bfloat16)))
+
+
+def test_matmul_fusable_gate():
+    assert ops.matmul_fusable((128, 384), 64)
+    assert not ops.matmul_fusable((128, 100), 64)   # N not block-aligned
+    assert not ops.matmul_fusable((512,), 64)       # 1-D leaf
+
+
+@pytest.mark.parametrize("d", [2, 8])
+def test_int4_sum_kernel_matches_ref(d):
+    """Fused unpack+dequant+reduce == per-chunk dequant + sum; jnp and
+    interpret impls bitwise identical under jit (the engine always runs
+    jitted, where XLA applies the same fma contraction to both)."""
+    block = 256
+    x = _rand((d * 8 * block,), jnp.float32, 8)
+    q, s = ops.quantize_int4(x, block)
+    r_j = jax.jit(lambda q, s: ops.dequantize_int4_sum(
+        q, s, d, block, impl="jnp"))(q, s)
+    r_p = jax.jit(lambda q, s: ops.dequantize_int4_sum(
+        q, s, d, block, impl="pallas_interpret"))(q, s)
+    np.testing.assert_array_equal(np.asarray(r_j), np.asarray(r_p))
+    unfused = ops.dequantize_int4(q, s, block).reshape(d, -1).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(r_j), np.asarray(unfused),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("nb", [1, 3, 12, 20])
+def test_kernels_cover_unaligned_block_counts(nb):
+    """Block counts that are not a multiple of the 8-row tile must still be
+    fully written (the row tile degrades via gcd instead of the grid
+    truncating and leaving trailing rows as uninitialized garbage)."""
+    block, d = 128, 2
+    x = _rand((nb * block,), jnp.float32, 10)
+    for quant, dequant in ((ops.quantize_int8, ops.dequantize_int8),
+                           (ops.quantize_int4, ops.dequantize_int4)):
+        q, s = quant(x, block, impl="pallas_interpret")
+        qr, sr = quant(x, block, impl="jnp")
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        out = dequant(q, s, block, jnp.float32, impl="pallas_interpret")
+        outr = dequant(q, s, block, jnp.float32, impl="jnp")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(outr))
+    xs = _rand((d * nb * block,), jnp.float32, 11)
+    q, s = ops.quantize_int4(xs, block)
+    r_p = jax.jit(lambda q, s: ops.dequantize_int4_sum(
+        q, s, d, block, impl="pallas_interpret"))(q, s)
+    r_j = jax.jit(lambda q, s: ops.dequantize_int4_sum(
+        q, s, d, block, impl="jnp"))(q, s)
+    assert np.isfinite(np.asarray(r_p)).all()
+    np.testing.assert_array_equal(np.asarray(r_p), np.asarray(r_j))
+    q8, s8 = ops.quantize_int8(xs, block)
+    r8_p = jax.jit(lambda q, s: ops.dequantize_int8_sum(
+        q, s, d, block, impl="pallas_interpret"))(q8, s8)
+    r8_j = jax.jit(lambda q, s: ops.dequantize_int8_sum(
+        q, s, d, block, impl="jnp"))(q8, s8)
+    assert np.isfinite(np.asarray(r8_p)).all()
+    np.testing.assert_array_equal(np.asarray(r8_p), np.asarray(r8_j))
+
+
+@pytest.mark.parametrize("d", [2, 8])
+def test_int8_sum_kernel_matches_ref(d):
+    block = 128
+    x = _rand((d * 16 * block,), jnp.float32, 9)
+    q, s = ops.quantize_int8(x, block)
+    r_j = jax.jit(lambda q, s: ops.dequantize_int8_sum(
+        q, s, d, block, impl="jnp"))(q, s)
+    r_p = jax.jit(lambda q, s: ops.dequantize_int8_sum(
+        q, s, d, block, impl="pallas_interpret"))(q, s)
+    np.testing.assert_array_equal(np.asarray(r_j), np.asarray(r_p))
+    unfused = ops.dequantize_int8(q, s, block).reshape(d, -1).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(r_j), np.asarray(unfused),
+                               rtol=1e-6, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # ops-level (flat API, padding plumbing)
 # ---------------------------------------------------------------------------
@@ -108,44 +223,47 @@ def test_ops_int4_roundtrip_error_bound(impl):
 
 
 # ---------------------------------------------------------------------------
-# hypothesis property tests
+# hypothesis property tests (skip when the optional extra is missing)
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1),
-       st.sampled_from([64, 128, 512]))
-def test_prop_int8_scales_positive_and_bounded(nb, seed, block):
-    x = jax.random.normal(jax.random.key(seed), (nb, block)) * 10
-    q, s = ref.quantize_int8_ref(x)
-    assert (np.asarray(s) > 0).all()
-    assert (np.abs(np.asarray(q)) <= 127).all()
-    # all-zero blocks dequantize to exact zeros
-    z, sz = ref.quantize_int8_ref(jnp.zeros((2, block)))
-    assert (np.asarray(ref.dequantize_int8_ref(z, sz)) == 0).all()
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1),
+           st.sampled_from([64, 128, 512]))
+    def test_prop_int8_scales_positive_and_bounded(nb, seed, block):
+        x = jax.random.normal(jax.random.key(seed), (nb, block)) * 10
+        q, s = ref.quantize_int8_ref(x)
+        assert (np.asarray(s) > 0).all()
+        assert (np.abs(np.asarray(q)) <= 127).all()
+        # all-zero blocks dequantize to exact zeros
+        z, sz = ref.quantize_int8_ref(jnp.zeros((2, block)))
+        assert (np.asarray(ref.dequantize_int8_ref(z, sz)) == 0).all()
 
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_prop_int4_pack_bijection(seed):
+        """pack(unpack(q)) == q for all valid nibble pairs."""
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(-7, 8, size=(4, 256)).astype(np.float32)
+        q, s = ref.quantize_int4_ref(jnp.asarray(vals))  # scale==1 blocks
+        d = ref.dequantize_int4_ref(q, s)
+        # since |vals| <= 7 and absmax<=7 -> scale = absmax/7 <= 1;
+        # round-trip re-quantizing gives identical packed bytes
+        q2, s2 = ref.quantize_int4_ref(d)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 2 ** 31 - 1))
-def test_prop_int4_pack_bijection(seed):
-    """pack(unpack(q)) == q for all valid nibble pairs."""
-    rng = np.random.default_rng(seed)
-    vals = rng.integers(-7, 8, size=(4, 256)).astype(np.float32)
-    q, s = ref.quantize_int4_ref(jnp.asarray(vals))  # scale==1 blocks
-    d = ref.dequantize_int4_ref(q, s)
-    # since |vals| <= 7 and absmax<=7 -> scale = absmax/7 <= 1; round-trip
-    # re-quantizing gives identical packed bytes
-    q2, s2 = ref.quantize_int4_ref(d)
-    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([128, 256]))
-def test_prop_quant_idempotent(seed, block):
-    """Dequantized tensors are fixed points of quantize∘dequantize."""
-    x = jax.random.normal(jax.random.key(seed), (4, block))
-    q, s = ref.quantize_int8_ref(x)
-    d = ref.dequantize_int8_ref(q, s)
-    q2, s2 = ref.quantize_int8_ref(d)
-    d2 = ref.dequantize_int8_ref(q2, s2)
-    np.testing.assert_allclose(np.asarray(d), np.asarray(d2),
-                               rtol=1e-5, atol=1e-6)
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([128, 256]))
+    def test_prop_quant_idempotent(seed, block):
+        """Dequantized tensors are fixed points of quantize∘dequantize."""
+        x = jax.random.normal(jax.random.key(seed), (4, block))
+        q, s = ref.quantize_int8_ref(x)
+        d = ref.dequantize_int8_ref(q, s)
+        q2, s2 = ref.quantize_int8_ref(d)
+        d2 = ref.dequantize_int8_ref(q2, s2)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(d2),
+                                   rtol=1e-5, atol=1e-6)
+else:
+    def test_prop_hypothesis_missing():
+        pytest.skip("hypothesis not installed (optional [test] extra); "
+                    "property tests run on CI")

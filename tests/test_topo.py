@@ -90,6 +90,31 @@ def test_memory_budget_excludes_oversized_plans():
 # acceptance: Frontier + 20B — planner never slower than any preset
 # ---------------------------------------------------------------------------
 
+def test_fused_kernel_knob_prices_dequant_roundtrip():
+    """Workload.fused_kernels (DESIGN.md §5): the unfused pipeline pays the
+    dequant HBM round-trips (kernel_s > 0, slower step); the fused default
+    pays nothing, so every pre-existing cost number is unchanged."""
+    import dataclasses
+    topo = frontier(48)
+    wl = model_workload("gpt_neox_20b")
+    assert wl.fused_kernels
+    for scheme in ("zero3", "zeropp", "zero_topo"):
+        cfg = preset_on_topology(scheme, topo)
+        fused = step_cost(cfg, topo, wl)
+        unfused = step_cost(cfg, topo,
+                            dataclasses.replace(wl, fused_kernels=False))
+        assert fused.kernel_s == 0.0
+        # comm volumes never depend on the kernel impl (fusion changes
+        # compute, not communication)
+        assert fused.volumes == unfused.volumes
+        if cfg.quantize_weights or cfg.quantize_grads:
+            assert unfused.kernel_s > 0.0, scheme
+            assert unfused.step_s(wl.hidden_fraction) \
+                > fused.step_s(wl.hidden_fraction), scheme
+        else:
+            assert unfused.kernel_s == 0.0, scheme
+
+
 def test_planner_beats_every_preset_on_frontier_20b():
     topo = frontier(48)
     wl = model_workload("gpt_neox_20b")            # underscore form accepted

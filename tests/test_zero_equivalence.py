@@ -211,6 +211,39 @@ def test_overlap_bitwise_identical_pallas_interpret():
     assert float(l0) == float(l1), (float(l0), float(l1))
 
 
+def test_impl_bitwise_jnp_vs_pallas_interpret():
+    """Kernel-impl dispatch (DESIGN.md §5): with the fused dequant-matmul
+    and fused INT4 dequant-reduce in the hot path, impl="jnp" and
+    impl="pallas_interpret" must stay bitwise identical through
+    zero_matmul/zero_gather_q — loss AND every per-leaf gradient.
+    (The 8-device version of this check is the kernel_impl_equivalence
+    scenario in tests/_scenarios.py.)"""
+    _, _, mj, _, ej, sj, batch = _setup("zero_topo", quant=True, impl="jnp")
+    _, _, mp, _, ep, sp, _ = _setup("zero_topo", quant=True,
+                                    impl="pallas_interpret")
+    lj, gj = _engine_grads(ej, mj, _mesh1(), sj, batch)
+    lp, gp = _engine_grads(ep, mp, _mesh1(), sp, batch)
+    assert float(lj) == float(lp), (float(lj), float(lp))
+    for n in ej.specs:
+        np.testing.assert_array_equal(np.asarray(gj[n]), np.asarray(gp[n]),
+                                      err_msg=n)
+
+
+def test_impl_bitwise_with_overlap():
+    """The prefetched (mm_pre) fused path keeps the same impl-equivalence
+    guarantee: overlap + pallas_interpret == overlap + jnp, bitwise."""
+    _, _, mj, _, ej, sj, batch = _setup("zero_topo", quant=True, impl="jnp",
+                                        overlap=True)
+    _, _, mp, _, ep, sp, _ = _setup("zero_topo", quant=True,
+                                    impl="pallas_interpret", overlap=True)
+    lj, gj = _engine_grads(ej, mj, _mesh1(), sj, batch)
+    lp, gp = _engine_grads(ep, mp, _mesh1(), sp, batch)
+    assert float(lj) == float(lp), (float(lj), float(lp))
+    for n in ej.specs:
+        np.testing.assert_array_equal(np.asarray(gj[n]), np.asarray(gp[n]),
+                                      err_msg=n)
+
+
 def test_overlap_train_step_bitwise():
     """Full train step (fwd + bwd + grad RS + AdamW + update gather):
     overlap on/off produce identical losses and identical master weights."""
