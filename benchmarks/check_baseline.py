@@ -5,9 +5,11 @@ the committed baselines in ``benchmarks/baselines/``.
         [--emitted .] [--baselines benchmarks/baselines]
 
 Only *invariant* fields are gated — collective counts, wire bytes, analytic
-comm volumes, the fused/unfused roofline arithmetic and the
-census-identical flags. Wall-clock fields are recorded in the JSONs for
-trend inspection but never compared (CI machines are noisy).
+comm volumes, the fused/unfused roofline arithmetic, and the planner's
+chosen scheme + predicted step seconds on the CI reference workload
+(BENCH_plan.json, pure cost-model arithmetic). Wall-clock fields are
+recorded in the JSONs for trend inspection but never compared (CI machines
+are noisy).
 
 Exit code != 0 lists every regressed field. To intentionally move a
 baseline (e.g. a scheme change that legitimately alters the gather count),
@@ -43,6 +45,14 @@ GATED = {
     "BENCH_comm_volume.json": [
         "zero3.*", "zeropp.*", "zero_topo.*", "invariants.*",
         "cost_model_crosscheck", "overlap_volume_invariant",
+    ],
+    # the planner's chosen scheme on the CI reference workload
+    # (plan_table --quick): identity + predicted step seconds are pure
+    # cost-model arithmetic, so ANY drift is a planner/cost change that
+    # must ship with an updated baseline
+    "BENCH_plan.json": [
+        "topology", "workload.*", "n_schemes_searched",
+        "choice.*", "presets.*",
     ],
 }
 

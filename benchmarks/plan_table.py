@@ -14,6 +14,9 @@ planner's choice is never slower than any preset (it searches a superset).
 from __future__ import annotations
 
 import argparse
+import json
+import os
+from pathlib import Path
 
 from repro.core.partition import sharding_factor_table
 from repro.topo.cost import PHASES, Workload, step_cost
@@ -22,6 +25,34 @@ from repro.topo.planner import Plan, model_workload, plan, preset_on_topology
 
 PRESETS = ("zero3", "zeropp", "zero_topo")
 GB = 1e9
+
+
+def _bench_path() -> Path:
+    return Path(os.environ.get("REPRO_BENCH_DIR", ".")) / "BENCH_plan.json"
+
+
+def _plan_record(topo, wl, rows, ranked) -> dict:
+    """The baseline-gated record: the planner's chosen scheme (axes,
+    degrees, quant switches) and every row's predicted step seconds — all
+    deterministic cost-model arithmetic, no wall clock anywhere."""
+    auto = rows["auto (planner)"]
+    t = sharding_factor_table(auto.cfg)
+    return dict(
+        topology=topo.name,
+        workload=dict(psi=wl.psi, n_layers=wl.n_layers),
+        n_schemes_searched=len(ranked),
+        choice=dict(
+            label=auto.label,
+            weights=t["weights"], grads=t["grads"],
+            optimizer=t["optimizer"], secondary=t["secondary"],
+            int8_weights=bool(auto.cfg.quantize_weights),
+            int4_grads=bool(auto.cfg.quantize_grads),
+            step_s=auto.step_s,
+        ),
+        presets={name: dict(step_s=rows[name].step_s,
+                            fits=bool(rows[name].cost.fits))
+                 for name in PRESETS},
+    )
 
 
 def build_rows(topo, wl: Workload, budget: float | None):
@@ -96,6 +127,16 @@ def run(print_fn=print, topology: str = "frontier",
         for r, p in enumerate(ranked[:5], 1):
             print_fn(f"  {r}. step {p.step_s:.3f}s  mem "
                      f"{p.cost.memory_total / GB:.1f}G  {p.label}")
+    if quick:
+        # the CI bench-gate diffs this record against the committed
+        # baseline: a planner/cost-model change that silently flips the
+        # chosen scheme fails check_baseline until the baseline is updated
+        # in the same PR. Only the --quick (fixed 20B) workload is gated —
+        # a full run would record a different psi and spuriously trip the
+        # gate against the committed --quick baseline.
+        rec = _plan_record(topo, wl, rows, ranked)
+        _bench_path().write_text(json.dumps(rec, indent=1))
+        print_fn(f"\nwrote {_bench_path()}")
     return True
 
 

@@ -72,3 +72,23 @@ def pvary(x, axes):
     if hasattr(lax, "pvary"):
         return lax.pvary(x, tuple(axes))
     return x
+
+
+def enable_cpu_collectives(impl: str = "gloo") -> bool:
+    """Select the cross-process collectives backend for the CPU client.
+
+    Must run before the first jax device access AND before
+    ``jax.distributed.initialize`` — without it, a multi-process CPU cluster
+    forms but every cross-host collective deadlocks. Returns False on JAX
+    versions that predate the option (single-process use is unaffected;
+    multi-process runs will fail loudly at initialize time instead).
+    """
+    import os
+    # the env var is the config's backing store on every version that has
+    # the option; setting both covers config-name churn across releases
+    os.environ.setdefault("JAX_CPU_COLLECTIVES_IMPLEMENTATION", impl)
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", impl)
+        return True
+    except (AttributeError, ValueError):
+        return False

@@ -38,6 +38,25 @@ def unvary(x, axes: AxisTuple):
     return x
 
 
+def det_psum(x, axes: AxisTuple):
+    """Order-deterministic psum of a (near-)scalar: all-gather the per-device
+    partials and reduce them locally in axis-index order.
+
+    ``lax.psum``'s reduction order is transport-dependent — the in-process
+    XLA ring and a cross-process gloo/NCCL tree associate the sum
+    differently, so a metric computed with it drifts in the last float bits
+    when the same mesh is split across processes. The all-gather is pure
+    data movement (bitwise-safe on any transport) and lands the partials in
+    canonical axis-index order on every device, so the local sum is bitwise
+    identical across process layouts. Scalars/metrics only: the gather
+    costs group_size elements per device.
+    """
+    if not axes:
+        return x
+    g = lax.all_gather(x, tuple(axes))
+    return jnp.sum(g, axis=0)
+
+
 def all_gather_flat(shard, axes: AxisTuple):
     """Plain (unquantized) tiled all-gather of a flat shard. AD: psum_scatter."""
     if not axes:

@@ -53,6 +53,20 @@ from .partition import (EXPERT, GATHER_Q, MATMUL, PLAIN, LeafSpec, ZeroConfig,
 from .prefetch import issue_buffers, prefetchable_names
 
 
+def host_scalar(v):
+    """Fetch a replicated scalar as a host numpy value on any process.
+
+    Reading the first *addressable* shard is the whole fetch for a fully
+    replicated array; a plain ``np.asarray``/``float`` would demand every
+    shard and fail on multi-process arrays under older jax. The single
+    shared implementation for trainer step counters, metric fetches and the
+    test harness.
+    """
+    if hasattr(v, "addressable_data"):
+        return np.asarray(v.addressable_data(0))
+    return v
+
+
 # ---------------------------------------------------------------------------
 # Parameter views
 # ---------------------------------------------------------------------------
@@ -509,8 +523,13 @@ class ZeroEngine:
                 grads = jax.tree.map(lambda g: g / n_mb, grads)
                 loss = loss / n_mb
 
-            # global loss for reporting: sum of per-device (local/global_tok)
-            loss_rep = lax.psum(loss, cfg.axes.all)
+            # global loss for reporting: sum of per-device (local/global_tok).
+            # det_psum, not lax.psum: the reduction order must not depend on
+            # how the mesh is split across processes (tests/_mp.py asserts a
+            # 2x4 cluster reproduces the 1x8 run bitwise). gtok above stays a
+            # plain psum — token counts are integers in float32, exact in
+            # any summation order.
+            loss_rep = col.det_psum(loss, cfg.axes.all)
 
             # stage 2 + 3: primary-layout grads -> optimizer-shard grads
             def to_os(name, g):
@@ -528,9 +547,12 @@ class ZeroEngine:
 
             os_grads = {n: to_os(n, g) for n, g in grads.items()}
 
-            # grad-norm clip (global: os shards partition the full gradient)
+            # grad-norm clip (global: os shards partition the full gradient).
+            # det_psum: gnorm feeds the clip scale applied to every gradient,
+            # so a transport-dependent reduction order here would make the
+            # entire update drift across process layouts.
             sq = sum(jnp.sum(jnp.square(g)) for g in os_grads.values())
-            gnorm = jnp.sqrt(lax.psum(sq, cfg.axes.all))
+            gnorm = jnp.sqrt(col.det_psum(sq, cfg.axes.all))
             scale = jnp.minimum(1.0, hp.grad_clip / (gnorm + 1e-6))
             os_grads = {n: g * scale for n, g in os_grads.items()}
 
@@ -558,7 +580,11 @@ class ZeroEngine:
             new_state = dict(primaries=new_prim, master=new_master,
                              opt_m=new_m, opt_v=new_v, step=step)
             # gtok: global token count summed over every microbatch (with
-            # n_mb == 1 it is the single microbatch's global count)
+            # n_mb == 1 it is the single microbatch's global count). Both it
+            # and loss_rep/gnorm are psummed over cfg.axes.all — which
+            # includes any process-spanning axis — so the metrics leaving the
+            # step are CLUSTER-global, not process-local; metrics_to_host
+            # fetches them on every process without a second collective.
             metrics = dict(loss=loss_rep, grad_norm=gnorm, lr=lr, tokens=gtok)
             return new_state, metrics
 
@@ -570,6 +596,16 @@ class ZeroEngine:
             check_vma=False)
         return jax.jit(sm, donate_argnums=(0,))
 
+    @staticmethod
+    def metrics_to_host(metrics) -> dict[str, float]:
+        """Fetch step metrics as python floats on every process.
+
+        The train/eval steps emit metrics with out_spec ``P()`` after a psum
+        over ``cfg.axes.all``, so each metric is fully replicated — globally
+        aggregated already, even when the mesh spans processes.
+        """
+        return {k: float(host_scalar(v)) for k, v in metrics.items()}
+
     # -- eval / serve steps ------------------------------------------------------
 
     def make_eval_step(self, loss_fn: Callable, batch_specs: dict[str, P]):
@@ -579,8 +615,12 @@ class ZeroEngine:
             view = ParamView(self.fns, state["primaries"],
                              overlap=self.cfg.overlap)
             loss_sum, tok = loss_fn(view, batch)
+            # gtok: integer-valued, exact under any order; loss: det_psum so
+            # eval losses match bitwise across process layouts (train step
+            # rationale above)
             gtok = lax.psum(tok.astype(jnp.float32), self.cfg.axes.all)
-            loss = lax.psum(loss_sum.astype(jnp.float32), self.cfg.axes.all)
+            loss = col.det_psum(loss_sum.astype(jnp.float32),
+                                self.cfg.axes.all)
             return loss / jnp.maximum(gtok, 1.0)
 
         sm = shard_map(local_eval, mesh=self.mesh,

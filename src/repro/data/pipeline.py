@@ -42,6 +42,31 @@ def spec_for(arch: ArchConfig, shape: ShapeConfig) -> BatchSpec:
                      d_model=arch.d_model)
 
 
+def shard_batch(np_batch: dict, mesh, pspecs: dict):
+    """Place a host batch onto the mesh, multi-process safe.
+
+    Every process holds (or can deterministically regenerate) the *global*
+    batch; each shard of the resulting global ``jax.Array`` is fed from the
+    matching slice, so only this process's addressable rows are ever copied
+    to devices. Single-process this is exactly ``jax.device_put`` with a
+    ``NamedSharding``; multi-process, ``device_put`` of a host array would
+    try to place non-addressable shards and fail.
+
+    Determinism across process layouts is the load-bearing property: a
+    2-process x 4-device run consumes bitwise the same global batch as the
+    single-process 8-device run (tests/_mp.py train-step parity).
+    """
+    import jax
+    from jax.sharding import NamedSharding
+
+    out = {}
+    for k, v in np_batch.items():
+        sh = NamedSharding(mesh, pspecs[k])
+        out[k] = jax.make_array_from_callback(
+            v.shape, sh, lambda idx, v=v: v[idx])
+    return out
+
+
 class SyntheticTokens:
     """Deterministic learnable token stream.
 

@@ -31,6 +31,7 @@ from ..models.registry import (batch_axes, build_model, data_axes, get_arch,
                                list_archs)
 from ..serve.engine import ServeEngine, make_serve_config
 from . import hlo, roofline
+from .distributed import add_cli_args, from_args, initialize
 from .mesh import make_production_mesh, make_topo_mesh, scheme_config
 
 MESHES = {
@@ -174,7 +175,20 @@ def main():
                     help="quantization-kernel implementation to lower with "
                          "(DESIGN.md §5); empty inherits the process default")
     ap.add_argument("--tag", default="")
+    add_cli_args(ap)
     args = ap.parse_args()
+    # multi-process dry-run: each process forces its share of the 512 fake
+    # devices; rendezvous before the first device access (jax was imported
+    # above but its backend is still uninitialized — mesh construction is
+    # the first device touch)
+    dcfg = from_args(args)
+    if dcfg.is_distributed:
+        if 512 % dcfg.num_processes:
+            ap.error(f"the 512-device dry-run meshes are not divisible by "
+                     f"{dcfg.num_processes} processes ({dcfg.source})")
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                                   f"{512 // dcfg.num_processes}")
+    initialize(dcfg)
     engine_opts = {}
     if args.cross_replica:
         engine_opts["cross_replica"] = args.cross_replica

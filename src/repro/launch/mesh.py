@@ -39,8 +39,36 @@ def make_test_mesh(shape=(2, 2, 2), axes=("data", "node", "gcd")):
     return _mk(shape, axes)
 
 
+def process_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that cross a process boundary.
+
+    ``jax.devices()`` is process-major, so with the leading axes sized to a
+    multiple of the process count these are exactly the leading (inter) axes;
+    any other arrangement means intra-tier collectives would go over the
+    slowest links, which ``zero_tiers`` rejects.
+    """
+    import numpy as np
+    devs = np.asarray(mesh.devices)
+    pidx = np.reshape([getattr(d, "process_index", 0)
+                       for d in devs.ravel()], devs.shape)
+    if (pidx == pidx.flat[0]).all():
+        return ()
+    spanning = []
+    for k, name in enumerate(mesh.axis_names):
+        first = np.take(pidx, [0], axis=k)
+        if not (pidx == first).all():
+            spanning.append(name)
+    return tuple(spanning)
+
+
 def zero_tiers(mesh) -> dict[str, tuple[str, ...]]:
-    """Map a mesh's axes onto the (l0, intra, inter) bandwidth tiers."""
+    """Map a mesh's axes onto the (l0, intra, inter) bandwidth tiers.
+
+    On a multi-process mesh the process boundary MUST fall inside the inter
+    tier: the primary weight gather and the secondary partition live on the
+    intra axes precisely because those are the fast in-node links, and a
+    process boundary there would silently run them over the network.
+    """
     names = set(mesh.axis_names)
     if {"node", "gcd"} <= names:
         intra = ("node", "gcd")
@@ -52,6 +80,14 @@ def zero_tiers(mesh) -> dict[str, tuple[str, ...]]:
         intra = (mesh.axis_names[-1],)
         l0 = intra
     inter = tuple(a for a in mesh.axis_names if a not in intra)
+    crossing = tuple(a for a in process_axes(mesh) if a not in inter)
+    if crossing:
+        raise ValueError(
+            f"process boundary crosses intra-tier axes {crossing} of mesh "
+            f"{dict(mesh.shape)}: a multi-process launch must keep whole "
+            f"intra groups (axes {intra}) inside one process — lower the "
+            f"per-process device count or reorder the mesh so only the "
+            f"leading axes {inter} span processes")
     return dict(l0=l0, intra=intra, inter=inter)
 
 

@@ -5,9 +5,16 @@
 
 ``--reduced`` trains the smoke-scale variant on fake CPU devices (what this
 container can run); on a real TPU pod drop it and pass --mesh prod.
+
+Multi-process (one process per node/GCD; README "Multi-host quickstart"):
+either pass --coordinator/--num-processes/--process-id explicitly, or let
+SLURM / OpenMPI / REPRO_* env autodetection fill them in. ``--devices`` is
+the *global* device count; each process brings its share.
 """
 import argparse
 import os
+
+from .distributed import add_cli_args, from_args, initialize
 
 
 def main():
@@ -31,6 +38,14 @@ def main():
                     help="quantization-kernel implementation (DESIGN.md §5):"
                          " jnp oracle (default), compiled Pallas (TPU), or"
                          " interpreted Pallas bodies (CPU validation)")
+    ap.add_argument("--compute-dtype", default=None,
+                    choices=["bfloat16", "float32"],
+                    help="activation/primary dtype (default: the scheme's, "
+                         "bf16). float32 also pins matmul precision — the "
+                         "cross-process bitwise-comparison regime "
+                         "(DESIGN.md §6; at bf16, or above XLA CPU's "
+                         "threaded-reduction thresholds, layouts differ by "
+                         "~1e-5 deterministic reassociation noise)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -42,17 +57,24 @@ def main():
                     help="--scheme auto: per-device memory budget in GB "
                          "(0 = unbounded; fake CPU devices have no real HBM)")
     ap.add_argument("--log-json", default="")
+    add_cli_args(ap)
     args = ap.parse_args()
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")
 
-    if args.mesh == "test" and "XLA_FLAGS" not in os.environ:
-        os.environ["XLA_FLAGS"] = \
-            f"--xla_force_host_platform_device_count={args.devices}"
-    if args.mesh != "test" and "XLA_FLAGS" not in os.environ:
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    dcfg = from_args(args)
+    n_fake = args.devices if args.mesh == "test" else 512
+    if n_fake % dcfg.num_processes:
+        ap.error(f"--devices {n_fake} not divisible by the "
+                 f"{dcfg.num_processes} processes ({dcfg.source})")
+    # rendezvous (no-op single-process) BEFORE the first jax device access;
+    # each process only forces its local share of the fake CPU devices
+    initialize(dcfg, local_devices=n_fake // dcfg.num_processes)
+    log0 = print if dcfg.process_id == 0 else (lambda *a, **k: None)
 
     import jax
+    if args.compute_dtype == "float32":
+        jax.config.update("jax_default_matmul_precision", "float32")
     if args.kernel_impl:
         # process default: covers every config built from here on (the
         # explicit per-config override below pins the engine's own cfg)
@@ -82,35 +104,40 @@ def main():
         planner_kw = dict(psi=model.param_count(), n_layers=arch.n_layers,
                           memory_budget=args.budget_gb * 1e9
                           if args.budget_gb else None)
+    dtype_kw = {"compute_dtype": args.compute_dtype} \
+        if args.compute_dtype else {}
     cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block,
                         overlap=args.overlap, impl=args.kernel_impl,
-                        **planner_kw)
+                        **dtype_kw, **planner_kw)
     if args.scheme == "auto":
         a = cfg.axes
-        print(f"planner choice: w={a.weight} e={a.extra_grad} r={a.replica} "
-              f"sec={a.secondary} int8w={cfg.quantize_weights} "
-              f"int4g={cfg.quantize_grads}")
+        log0(f"planner choice: w={a.weight} e={a.extra_grad} r={a.replica} "
+             f"sec={a.secondary} int8w={cfg.quantize_weights} "
+             f"int4g={cfg.quantize_grads}")
     hp = TrainHparams(lr=args.lr, total_steps=args.steps,
                       warmup_steps=max(args.steps // 20, 2),
                       overlap=args.overlap)
     eng = ZeroEngine(model.leaf_specs(), cfg, mesh, hp)
-    print(f"arch={arch.name} scheme={cfg.name} mesh={dict(mesh.shape)} "
-          f"params={eng.param_count():,} overlap={eng.cfg.overlap} "
-          f"kernel_impl={eng.cfg.impl or 'jnp'}")
-    print("per-device state bytes:", eng.memory_report())
+    log0(f"arch={arch.name} scheme={cfg.name} mesh={dict(mesh.shape)} "
+         f"params={eng.param_count():,} overlap={eng.cfg.overlap} "
+         f"kernel_impl={eng.cfg.impl or 'jnp'} "
+         f"processes={dcfg.num_processes} ({dcfg.source})")
+    log0(f"per-device state bytes: {eng.memory_report()}")
 
+    from ..train.trainer import _host_int
     tr = Trainer(model, eng, mesh, shape)
     if args.resume and args.ckpt_dir:
         state = tr.restore(args.ckpt_dir)
-        print(f"resumed from step {int(state['step'])}")
+        log0(f"resumed from step {_host_int(state['step'])}")
     else:
         state = eng.init_state(jax.random.key(0))
     state = tr.run(state, args.steps,
                    ckpt_dir=args.ckpt_dir or None,
-                   ckpt_every=args.ckpt_every)
-    if args.log_json:
+                   ckpt_every=args.ckpt_every,
+                   print_fn=log0)
+    if args.log_json and dcfg.process_id == 0:
         tr.log.save(args.log_json)
-    print("final loss:", tr.log.losses[-1])
+    log0(f"final loss: {tr.log.losses[-1]}")
 
 
 if __name__ == "__main__":

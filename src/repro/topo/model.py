@@ -139,20 +139,32 @@ class Topology:
         the hand-written presets use), so ``--scheme auto`` searches exactly
         the space the presets live in.  ``bandwidths``/``latencies`` override
         per *tier* (keys l0/intra/inter).
+
+        Axes that cross a *process* boundary (``launch.mesh.process_axes``)
+        are pinned to the inter tier and priced at the inter link — the
+        process boundary IS the slow network, whatever the axis is named.
+        ``zero_tiers`` raises if a process boundary would cut an intra axis,
+        so by the time we get here spanning axes are inter axes; the pin is
+        asserted rather than silently re-derived.
         """
-        from ..launch.mesh import zero_tiers
+        from ..launch.mesh import process_axes, zero_tiers
         bw = dict(DEFAULT_TIER_BANDWIDTH)
         bw.update(bandwidths or {})
         lat = dict(DEFAULT_TIER_LATENCY)
         lat.update(latencies or {})
         tiers = zero_tiers(mesh)
+        spanning = process_axes(mesh)
+        assert all(a in tiers["inter"] for a in spanning), (spanning, tiers)
         links = []
         for tier in ("l0", "intra", "inter"):
             for a in tiers[tier]:
                 if any(l.name == a for l in links):
                     continue     # l0 axes also appear in intra
                 links.append(Link(a, mesh.shape[a], bw[tier], lat[tier], tier))
-        return cls(name=f"mesh:{dict(mesh.shape)}", links=tuple(links),
+        name = f"mesh:{dict(mesh.shape)}"
+        if spanning:
+            name += f" procs@{','.join(spanning)}"
+        return cls(name=name, links=tuple(links),
                    flops_per_device=flops_per_device, hbm_bytes=hbm_bytes)
 
 

@@ -1,10 +1,28 @@
-"""Sharded numpy checkpointing.
+"""Sharded numpy checkpointing, single- and multi-process.
 
-Each leaf of the training state is saved as one ``.npy`` (gathered to host);
-layout + step metadata in ``meta.json``. Restore re-places shards with the
-engine's NamedShardings. Simple, dependency-free, and round-trip tested —
-a real deployment would swap in async/multi-host Orbax behind the same two
-functions.
+Single-process (the historical format, unchanged on disk): every leaf of the
+training state is gathered to host and saved as one ``.npy``; layout + step
+metadata in ``meta.json``. Restore re-places shards with the engine's
+NamedShardings.
+
+Multi-process (``jax.process_count() > 1``): gathering would need a
+cross-host collective per leaf and a full copy of the state on every host —
+instead each process writes exactly its *addressable* shards
+(``leaf_0007.p002.npy`` = process 2's local shards of leaf 7, stacked in
+local-device order) and process 0 writes ``meta.json``. Restore hands each
+process its own file back via ``jax.make_array_from_single_device_arrays``
+— no cross-process traffic in either direction.
+
+Both formats record the writing run's mesh layout; restoring onto a
+different device/process count raises ``MeshMismatch`` naming both layouts
+(the per-process format physically cannot be re-placed onto a different
+layout, and the global format would otherwise die much later in an opaque
+reshape inside the first train step). Scheme-level layout identity
+(partitioning degrees, padding) is covered by the separate
+``SchemeMismatch`` check, same spirit.
+
+Simple, dependency-free, and round-trip tested — a real deployment would
+swap in async/multi-host Orbax behind the same two functions.
 """
 from __future__ import annotations
 
@@ -37,28 +55,130 @@ def _unflatten(flat):
     return out
 
 
+def _to_disk_dtype(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.kind == "V":        # ml_dtypes (bfloat16, fp8): raw bits
+        return arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+    return arr
+
+
+def _from_disk_dtype(arr: np.ndarray, want: str | None) -> np.ndarray:
+    if want and str(arr.dtype) != want:
+        import ml_dtypes  # packaged with jax
+        return arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+    return arr
+
+
+# -- mesh layout identity ----------------------------------------------------
+
+def _state_mesh(flat: dict):
+    """The mesh a flat dict of arrays OR shardings lives on (None for
+    host/numpy states)."""
+    for v in flat.values():
+        if getattr(v, "mesh", None) is not None:     # a NamedSharding
+            return v.mesh
+        sh = getattr(v, "sharding", None)            # a device array
+        if sh is not None and getattr(sh, "mesh", None) is not None:
+            return sh.mesh
+    return None
+
+
+def mesh_layout(mesh) -> dict:
+    """JSON-serializable identity of a mesh's device/process layout."""
+    local = sum(1 for d in np.asarray(mesh.devices).ravel()
+                if getattr(d, "process_index", 0) == jax.process_index())
+    return dict(axes=list(mesh.axis_names),
+                shape=[int(mesh.shape[a]) for a in mesh.axis_names],
+                n_devices=int(mesh.size),
+                process_count=int(jax.process_count()),
+                local_devices=int(local))
+
+
+class MeshMismatch(ValueError):
+    """Checkpoint device/process layout does not match the restoring mesh."""
+
+
+def _fmt_layout(d: dict) -> str:
+    return (f"{dict(zip(d.get('axes', []), d.get('shape', [])))} "
+            f"({d.get('n_devices')} devices, {d.get('process_count')} "
+            f"process(es) x {d.get('local_devices')} local)")
+
+
+def _check_mesh(saved: dict | None, live: dict, where: str,
+                strict_shape: bool = False):
+    if saved is None:
+        return           # legacy checkpoint without mesh metadata
+    mismatch = (saved.get("n_devices") != live["n_devices"]
+                or saved.get("process_count") != live["process_count"]
+                or saved.get("local_devices") != live["local_devices"]
+                or (strict_shape and (saved.get("axes") != live["axes"]
+                                      or saved.get("shape") != live["shape"])))
+    if mismatch:
+        raise MeshMismatch(
+            f"{where} was written on a different mesh layout:\n"
+            f"  checkpoint: {_fmt_layout(saved)}\n"
+            f"  restoring : {_fmt_layout(live)}\n"
+            "Shard files are laid out per device/process, so they cannot be "
+            "re-placed across layouts. Relaunch with the checkpoint's "
+            "process/device count, or re-shard the checkpoint explicitly "
+            "(restore on the writing layout, then save on the new one).")
+
+
+def _barrier(tag: str):
+    if jax.process_count() == 1:
+        return
+    from jax.experimental import multihost_utils
+    multihost_utils.sync_global_devices(tag)
+
+
+# -- save --------------------------------------------------------------------
+
 def save(state, ckpt_dir, step: int, scheme: dict | None = None):
     """``scheme``: the writing engine's ``scheme_fingerprint()`` — recorded
     in meta.json so a restore under a different partitioning fails loudly
-    instead of silently re-placing shards in the wrong layout."""
+    instead of silently re-placing shards in the wrong layout. The mesh
+    layout is recorded unconditionally (read off the state's shardings)."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
-    d.mkdir(parents=True, exist_ok=True)
     flat = _flatten(state)
-    names = {}
-    dtypes = {}
+    mesh = _state_mesh(flat)
+    multiprocess = jax.process_count() > 1
+    if multiprocess and mesh is None:
+        raise ValueError("multi-process save needs a device-backed state "
+                         "(host arrays carry no shard placement)")
+    d.mkdir(parents=True, exist_ok=True)
+
+    names, dtypes, shapes = {}, {}, {}
+    pid = jax.process_index()
     for i, (k, v) in enumerate(sorted(flat.items())):
-        arr = np.asarray(jax.device_get(v))
-        dtypes[k] = str(arr.dtype)
-        if arr.dtype.kind == "V":        # ml_dtypes (bfloat16, fp8): raw bits
-            arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
-        np.save(d / f"leaf_{i:04d}.npy", arr)
-        names[k] = f"leaf_{i:04d}.npy"
-    meta = dict(step=step, names=names, dtypes=dtypes)
-    if scheme is not None:
-        meta["scheme"] = scheme
-    (d / "meta.json").write_text(json.dumps(meta))
+        base = f"leaf_{i:04d}"
+        if not multiprocess:
+            arr = np.asarray(jax.device_get(v))
+            dtypes[k] = str(arr.dtype)
+            shapes[k] = list(arr.shape)
+            np.save(d / f"{base}.npy", _to_disk_dtype(arr))
+            names[k] = f"{base}.npy"
+            continue
+        # per-process: this process's addressable shards, local-device order
+        shards = sorted(v.addressable_shards, key=lambda s: s.device.id)
+        stack = np.stack([np.asarray(s.data) for s in shards])
+        dtypes[k] = str(stack.dtype)
+        shapes[k] = list(v.shape)
+        np.save(d / f"{base}.p{pid:03d}.npy", _to_disk_dtype(stack))
+        names[k] = base      # per-process files share the base name
+
+    if pid == 0:
+        meta = dict(step=step, names=names, dtypes=dtypes,
+                    global_shapes=shapes,
+                    format="per_process" if multiprocess else "global")
+        if mesh is not None:
+            meta["mesh"] = mesh_layout(mesh)
+        if scheme is not None:
+            meta["scheme"] = scheme
+        (d / "meta.json").write_text(json.dumps(meta))
+    _barrier(f"ckpt_save_{step}")
     return str(d)
 
+
+# -- scheme guard (layout identity below the mesh: degrees, padding) ---------
 
 class SchemeMismatch(ValueError):
     """Checkpoint layout does not match the restoring engine's scheme."""
@@ -93,25 +213,72 @@ def latest_step(ckpt_dir) -> int | None:
     return steps[-1] if steps else None
 
 
+# -- restore -----------------------------------------------------------------
+
+def _restore_leaf_global(d: Path, fname: str, k: str, meta: dict, sh):
+    arr = _from_disk_dtype(np.load(d / fname),
+                           meta.get("dtypes", {}).get(k))
+    if sh is None:
+        return jax.numpy.asarray(arr)
+    if jax.process_count() > 1:
+        # device_put of a host array would try to place non-addressable
+        # shards; the callback form feeds each local shard from its slice
+        return jax.make_array_from_callback(arr.shape, sh,
+                                            lambda idx, a=arr: a[idx])
+    return jax.device_put(arr, sh)
+
+
+def _restore_leaf_per_process(d: Path, base: str, k: str, meta: dict, sh):
+    if sh is None:
+        raise ValueError(f"per-process checkpoint leaf {k!r} has no "
+                         "sharding in the restore request")
+    pid = jax.process_index()
+    path = d / f"{base}.p{pid:03d}.npy"
+    if not path.exists():
+        raise MeshMismatch(
+            f"{path} missing: this process has no shard file — the "
+            f"checkpoint was written by a different process layout "
+            f"({_fmt_layout(meta.get('mesh', {}))})")
+    stack = _from_disk_dtype(np.load(path), meta.get("dtypes", {}).get(k))
+    mesh = sh.mesh
+    local = sorted((dev for dev in np.asarray(mesh.devices).ravel()
+                    if dev.process_index == pid), key=lambda dev: dev.id)
+    if len(local) != stack.shape[0]:
+        raise MeshMismatch(
+            f"{path} holds {stack.shape[0]} shards but this process owns "
+            f"{len(local)} devices of the restoring mesh "
+            f"({_fmt_layout(mesh_layout(mesh))})")
+    shape = tuple(meta["global_shapes"][k])
+    bufs = [jax.device_put(stack[j], dev) for j, dev in enumerate(local)]
+    return jax.make_array_from_single_device_arrays(shape, sh, bufs)
+
+
 def restore(ckpt_dir, step: int, shardings=None, expect_scheme: dict | None = None):
     """``expect_scheme``: the restoring engine's ``scheme_fingerprint()``;
     when given, the saved fingerprint must match exactly or restore raises
-    ``SchemeMismatch`` with the differing fields."""
+    ``SchemeMismatch`` with the differing fields. The mesh layout check
+    (``MeshMismatch``) runs whenever ``shardings`` are given and the
+    checkpoint recorded its mesh."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     meta = json.loads((d / "meta.json").read_text())
     if expect_scheme is not None:
         _check_scheme(meta.get("scheme"), expect_scheme, str(d))
-    flat = {}
+    fmt = meta.get("format", "global")
     sh_flat = _flatten(shardings) if shardings else {}
-    import ml_dtypes  # packaged with jax
+    live_mesh = _state_mesh(sh_flat) if sh_flat else None
+    if live_mesh is not None:
+        _check_mesh(meta.get("mesh"), mesh_layout(live_mesh), str(d),
+                    strict_shape=(fmt == "per_process"))
+    elif fmt == "per_process":
+        raise ValueError(f"{d} is a per-process checkpoint; restore needs "
+                         "the engine's shardings to re-place the shards")
 
+    flat = {}
     for k, fname in meta["names"].items():
-        arr = np.load(d / fname)
-        want = meta.get("dtypes", {}).get(k)
-        if want and str(arr.dtype) != want:
-            arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
-        if k in sh_flat:
-            flat[k] = jax.device_put(arr, sh_flat[k])
+        sh = sh_flat.get(k)
+        if fmt == "per_process":
+            flat[k] = _restore_leaf_per_process(d, fname, k, meta, sh)
         else:
-            flat[k] = jax.numpy.asarray(arr)
+            flat[k] = _restore_leaf_global(d, fname, k, meta, sh)
+    _barrier(f"ckpt_restore_{step}")
     return _unflatten(flat)

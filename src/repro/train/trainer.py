@@ -14,14 +14,17 @@ from dataclasses import dataclass, field
 from pathlib import Path
 
 import jax
-import numpy as np
-from jax.sharding import NamedSharding
 
-from ..core.engine import TrainHparams, ZeroEngine
-from ..data.pipeline import BatchSpec, SyntheticTokens, spec_for
+from ..core.engine import TrainHparams, ZeroEngine, host_scalar
+from ..data.pipeline import BatchSpec, SyntheticTokens, shard_batch, spec_for
 from ..models.config import ArchConfig, ShapeConfig
 from ..models.registry import ModelDef, batch_axes
 from . import checkpoint
+
+
+def _host_int(x) -> int:
+    """Scalar fetch that works on multi-process (replicated) arrays too."""
+    return int(host_scalar(x))
 
 
 @dataclass
@@ -33,7 +36,7 @@ class TrainLog:
     meta: dict = field(default_factory=dict)   # scheme/overlap/mesh, for A/Bs
 
     def record(self, step, metrics, dt):
-        self.steps.append(int(step))
+        self.steps.append(_host_int(step))
         self.losses.append(float(metrics["loss"]))
         self.grad_norms.append(float(metrics["grad_norm"]))
         self.step_times.append(dt)
@@ -63,9 +66,9 @@ class Trainer:
             overlap=engine.cfg.overlap, mesh=dict(mesh.shape)))
 
     def _shard_batch(self, np_batch):
-        return {
-            k: jax.device_put(v, NamedSharding(self.mesh, self.bspecs[k]))
-            for k, v in np_batch.items()}
+        # process-aware: each process feeds only its addressable shards from
+        # the deterministic global batch (pipeline.shard_batch)
+        return shard_batch(np_batch, self.mesh, self.bspecs)
 
     def run(self, state, n_steps: int, *, log_every: int = 10,
             ckpt_dir: str | None = None, ckpt_every: int = 0,
@@ -77,18 +80,21 @@ class Trainer:
             batch = self._shard_batch(next(it))
             t0 = time.time()
             state, metrics = self.step_fn(state, batch)
-            metrics = jax.tree.map(lambda x: x.block_until_ready(), metrics)
+            jax.tree.map(lambda x: x.block_until_ready(), metrics)
             dt = time.time() - t0
+            # metrics are cluster-global (psum over all axes inside the
+            # step); this fetch works on every process of a multi-host run
+            metrics = self.engine.metrics_to_host(metrics)
             self.log.record(state["step"], metrics, dt)
             if log_every and i % log_every == 0:
                 tflops = 6.0 * n_params * tokens_per_step / dt / 1e12
-                print_fn(f"step {int(state['step']):5d} "
-                         f"loss {float(metrics['loss']):.4f} "
-                         f"gnorm {float(metrics['grad_norm']):.3f} "
-                         f"lr {float(metrics['lr']):.2e} "
+                print_fn(f"step {_host_int(state['step']):5d} "
+                         f"loss {metrics['loss']:.4f} "
+                         f"gnorm {metrics['grad_norm']:.3f} "
+                         f"lr {metrics['lr']:.2e} "
                          f"{dt:.2f}s/step  model-TFLOPS(total) {tflops:.2f}")
             if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
-                checkpoint.save(state, ckpt_dir, int(state["step"]),
+                checkpoint.save(state, ckpt_dir, _host_int(state["step"]),
                                 scheme=self.engine.scheme_fingerprint())
         return state
 

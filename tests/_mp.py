@@ -1,0 +1,319 @@
+"""Multi-PROCESS test harness: real ``jax.distributed`` clusters on CPU.
+
+Two halves in one file:
+
+* ``run_cluster(scenario, n_proc, ...)`` — imported by
+  test_multiprocess.py. Spawns ``n_proc`` pytest-free worker processes
+  (``python tests/_mp.py <scenario> <rank> <n_proc> <n_devices> <port>``)
+  that rendezvous via ``jax.distributed.initialize`` on a fresh local port
+  and split ``n_devices`` fake CPU devices between them (2 x 4 = the same
+  8-device topo mesh the in-process scenarios use). ``n_proc=1`` runs the
+  identical scenario single-process — the reference side of every parity
+  assertion. All workers are killed on the first failure or on deadline, so
+  a hung rendezvous costs minutes, not the CI job timeout.
+
+* worker ``main()`` — runs one scenario and prints ``MP_RESULT <json>``
+  (rank 0) + ``MP_OK <scenario> <rank>`` (every rank). Scenarios assert
+  internally; the JSON carries whatever the pytest side diffs across
+  process layouts (loss reprs, state hashes, collective census).
+"""
+import hashlib
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(__file__)
+
+AX = ("data", "node", "gcd")
+
+
+# ---------------------------------------------------------------------------
+# harness side (runs inside pytest; must not import jax)
+# ---------------------------------------------------------------------------
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def run_cluster(scenario: str, n_proc: int = 2, n_devices: int = 8,
+                extra: dict | None = None, timeout: float = 900.0) -> dict:
+    """Run `scenario` on an n_proc cluster; return rank 0's MP_RESULT json.
+
+    Asserts every rank exits 0 and prints MP_OK. ``extra`` is forwarded to
+    the workers as json (kernel impl, shared tmp dirs, ...).
+    """
+    assert n_devices % n_proc == 0, (n_devices, n_proc)
+    port = _free_port()
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)       # workers force their own device count
+    argv_tail = [str(n_proc), str(n_devices), str(port),
+                 json.dumps(extra or {})]
+    # line-buffered pipes read by the OS; workers are small-output, so
+    # letting them run to completion before read() cannot fill the pipe
+    # (<64KB per rank) — but a crashed rank must kill the cluster NOW, not
+    # at the deadline: a dead worker leaves the others blocked in a
+    # collective, so poll every second and tear down on first failure
+    procs = [subprocess.Popen(
+        [sys.executable, os.path.join(HERE, "_mp.py"), scenario, str(rank)]
+        + argv_tail,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+        for rank in range(n_proc)]
+    deadline = time.monotonic() + timeout
+    hung = failed_early = False
+    while any(p.poll() is None for p in procs):
+        if any(p.poll() not in (None, 0) for p in procs):
+            failed_early = True
+            break
+        if time.monotonic() > deadline:
+            hung = True
+            break
+        time.sleep(1.0)
+    if hung or failed_early:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    outs = [p.communicate()[0] or "" for p in procs]
+    if hung:
+        raise AssertionError(
+            f"cluster {scenario} ({n_proc} procs) hung past {timeout}s:\n"
+            + "\n".join(f"-- rank {r} --\n{o[-2000:]}"
+                        for r, o in enumerate(outs)))
+    # report the genuinely-crashed rank first (peers of a dead worker were
+    # SIGKILLed by the teardown above and carry no useful traceback)
+    ranked = sorted(range(n_proc), key=lambda r: procs[r].returncode <= 0)
+    for rank in ranked:
+        assert procs[rank].returncode == 0, \
+            (f"rank {rank}/{n_proc} of {scenario} failed "
+             f"(exit {procs[rank].returncode}):\n{outs[rank][-4000:]}")
+    for rank, out in enumerate(outs):
+        assert f"MP_OK {scenario} {rank}" in out, out[-4000:]
+    for line in outs[0].splitlines():
+        if line.startswith("MP_RESULT "):
+            return json.loads(line[len("MP_RESULT "):])
+    raise AssertionError(f"rank 0 of {scenario} printed no MP_RESULT:\n"
+                         f"{outs[0][-4000:]}")
+
+
+# ---------------------------------------------------------------------------
+# worker side (its own process; full jax stack)
+# ---------------------------------------------------------------------------
+
+def _worker_setup(rank: int, n_proc: int, n_devices: int, port: int):
+    sys.path.insert(0, os.path.join(HERE, "..", "src"))
+    from repro.launch.distributed import DistConfig, initialize
+    dcfg = DistConfig(f"127.0.0.1:{port}", n_proc, rank, "flags") \
+        if n_proc > 1 else DistConfig()
+    initialize(dcfg, local_devices=n_devices // n_proc)
+    import jax
+    jax.config.update("jax_default_matmul_precision", "float32")
+    if os.environ.get("REPRO_KERNEL_IMPL"):
+        from repro.kernels import ops as _kops
+        _kops.set_default_impl(os.environ["REPRO_KERNEL_IMPL"])
+    return dcfg
+
+
+def _mesh():
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(shape=(2, 2, 2), axes=AX)
+
+
+def _replicated_np(x, mesh):
+    """Full global value of a sharded array, on every process (all-gather
+    via resharding — pure data movement, bitwise-safe)."""
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = jax.jit(lambda a: a,
+                  out_shardings=NamedSharding(mesh, P()))(x)
+    return np.asarray(rep.addressable_data(0))
+
+
+def _sha(a) -> str:
+    import numpy as np
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+def _build(impl: str | None):
+    import numpy as np
+    from repro.core.engine import TrainHparams, ZeroEngine
+    from repro.launch.mesh import scheme_config
+    from repro.models.registry import build_model, get_arch
+
+    mesh = _mesh()
+    arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128, vocab=256)
+    model = build_model(arch)
+    cfg = scheme_config("zero_topo", mesh, quant_block=64,
+                        compute_dtype="float32", impl=impl)
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                     TrainHparams(lr=1e-3, total_steps=8, warmup_steps=0))
+    batch_np = {"tokens": np.random.default_rng(0).integers(
+        0, arch.vocab, (8, 33)).astype(np.int32)}
+    return mesh, model, eng, batch_np
+
+
+def _sharded_batch(mesh, batch_np):
+    from jax.sharding import PartitionSpec as P
+    from repro.data.pipeline import shard_batch
+    return shard_batch(batch_np, mesh, {"tokens": P(AX)})
+
+
+def train_step_parity(extra: dict):
+    """Two train steps of the full quantized zero_topo hot path. The JSON
+    printed here must be IDENTICAL between a 2-process x 4-device cluster
+    and the single-process 8-device run: losses/grad-norms bitwise (repr),
+    every per-leaf master update bitwise (sha256), and the compiled step's
+    collective census (counts + wire bytes)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import hlo
+
+    mesh, model, eng, batch_np = _build(extra.get("impl"))
+    state = eng.init_state(jax.random.key(0))
+    step = eng.make_train_step(model.loss_fn(), {"tokens": P(AX)})
+    batch = _sharded_batch(mesh, batch_np)
+
+    lowered = step.lower(state, batch)
+    census = hlo.analyze(lowered.compile().as_text()).summary()
+
+    losses, gnorms = [], []
+    for _ in range(2):
+        state, m = step(state, batch)
+        h = eng.metrics_to_host(m)
+        losses.append(repr(h["loss"]))
+        gnorms.append(repr(h["grad_norm"]))
+    masters = {n: _sha(_replicated_np(state["master"][n], mesh))
+               for n in sorted(eng.specs)}
+    prims = {n: _sha(_replicated_np(state["primaries"][n], mesh))
+             for n in sorted(eng.specs)}
+    return dict(losses=losses, gnorms=gnorms, masters=masters, prims=prims,
+                census=dict(collective_counts=census["collective_counts"],
+                            wire_bytes=census["wire_bytes"]))
+
+
+def checkpoint_roundtrip(extra: dict):
+    """Per-process checkpoint save -> restore is lossless on a live
+    multi-process cluster, and training continues bitwise-identically from
+    the restored state."""
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.train import checkpoint
+
+    mesh, model, eng, batch_np = _build(extra.get("impl"))
+    state = eng.init_state(jax.random.key(0))
+    step = eng.make_train_step(model.loss_fn(), {"tokens": P(AX)})
+    batch = _sharded_batch(mesh, batch_np)
+    state, _ = step(state, batch)
+
+    from repro.core.engine import host_scalar
+    ckpt_dir = extra["ckpt_dir"]
+    checkpoint.save(state, ckpt_dir, int(host_scalar(state["step"])),
+                    scheme=eng.scheme_fingerprint())
+    with open(os.path.join(ckpt_dir, "step_00000001", "meta.json")) as f:
+        meta = json.load(f)
+    if jax.process_count() > 1:
+        assert meta["format"] == "per_process", meta["format"]
+        assert meta["mesh"]["process_count"] == jax.process_count()
+    restored = checkpoint.restore(ckpt_dir, 1, eng.state_shardings(),
+                                  expect_scheme=eng.scheme_fingerprint())
+    for k, v in checkpoint._flatten(state).items():
+        a = _replicated_np(v, mesh)
+        b = _replicated_np(checkpoint._flatten(restored)[k], mesh)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32), err_msg=k)
+    # training continues bitwise-identically from the restored state
+    s_a, m_a = step(jax.tree.map(jax.numpy.copy, state), batch)
+    s_b, m_b = step(restored, batch)
+    ha, hb = eng.metrics_to_host(m_a), eng.metrics_to_host(m_b)
+    assert repr(ha["loss"]) == repr(hb["loss"]), (ha, hb)
+    return dict(loss=repr(ha["loss"]),
+                format=meta["format"], mesh=meta["mesh"])
+
+
+def checkpoint_wrong_layout(extra: dict):
+    """Restoring a checkpoint written by a different process/device layout
+    raises MeshMismatch naming both layouts (not an opaque reshape)."""
+    from repro.train import checkpoint
+
+    mesh, model, eng, _ = _build(extra.get("impl"))
+    try:
+        checkpoint.restore(extra["ckpt_dir"], 1, eng.state_shardings(),
+                           expect_scheme=eng.scheme_fingerprint())
+    except checkpoint.MeshMismatch as e:
+        msg = str(e)
+        assert "checkpoint:" in msg and "restoring" in msg, msg
+        return dict(raised=True, message=msg[:200])
+    raise AssertionError("restore across process layouts did not raise "
+                         "MeshMismatch")
+
+
+def topology_tiers(extra: dict):
+    """Topology.from_mesh on a process-spanning mesh: the process-boundary
+    axis lands in the inter tier and is priced at the inter link; the
+    planner runs on the resulting topology; and a mesh whose process
+    boundary would cut an intra axis is rejected by zero_tiers."""
+    import jax
+    from repro.launch.mesh import make_test_mesh, process_axes, zero_tiers
+    from repro.topo import Topology, plan_for_mesh
+    from repro.topo.model import DEFAULT_TIER_BANDWIDTH
+
+    mesh = _mesh()
+    spanning = process_axes(mesh)
+    if jax.process_count() > 1:
+        assert spanning == ("data",), spanning
+    else:
+        assert spanning == (), spanning
+    tiers = zero_tiers(mesh)
+    assert all(a in tiers["inter"] for a in spanning), (spanning, tiers)
+
+    topo = Topology.from_mesh(mesh)
+    link = topo.link("data")
+    assert link.tier == "inter", link
+    assert link.bandwidth == DEFAULT_TIER_BANDWIDTH["inter"], link
+    assert topo.bandwidth(("data",)) == DEFAULT_TIER_BANDWIDTH["inter"]
+
+    plans = plan_for_mesh(mesh, psi=2e6, n_layers=2)
+    assert plans and plans[0].step_s > 0
+    plans[0].cfg.validate_dependency_rule()
+
+    if jax.process_count() > 1:
+        # a mesh whose *leading* axis is an intra axis puts the process
+        # boundary inside the node: zero_tiers must refuse it
+        bad = make_test_mesh(shape=(2, 2, 2), axes=("node", "gcd", "data"))
+        try:
+            zero_tiers(bad)
+        except ValueError as e:
+            assert "process boundary" in str(e), e
+        else:
+            raise AssertionError("zero_tiers accepted a process boundary "
+                                 "across intra axes")
+    return dict(spanning=list(spanning), tier=link.tier,
+                bandwidth=link.bandwidth, topo_name=topo.name)
+
+
+SCENARIOS = dict(train_step_parity=train_step_parity,
+                 checkpoint_roundtrip=checkpoint_roundtrip,
+                 checkpoint_wrong_layout=checkpoint_wrong_layout,
+                 topology_tiers=topology_tiers)
+
+
+def main():
+    scenario, rank, n_proc, n_devices, port, extra = (
+        sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
+        int(sys.argv[5]), json.loads(sys.argv[6]))
+    _worker_setup(rank, n_proc, n_devices, port)
+    result = SCENARIOS[scenario](extra)
+    if rank == 0 and result is not None:
+        print("MP_RESULT " + json.dumps(result), flush=True)
+    print(f"MP_OK {scenario} {rank}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

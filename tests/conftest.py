@@ -4,7 +4,9 @@ host device count (locally that is 1 device; CI exports
 XLA_FLAGS=--xla_force_host_platform_device_count=8 for the whole run, per
 .github/workflows/ci.yml). Distributed semantics are exercised by subprocess
 scenarios (test_distributed.py, test_overlap.py, test_collectives.py) that
-always force their own 8-device view regardless of the parent env."""
+always force their own 8-device view regardless of the parent env, and by
+real multi-PROCESS jax.distributed clusters (test_multiprocess.py via
+tests/_mp.py) whose workers likewise pin their own local device count."""
 import os
 import sys
 

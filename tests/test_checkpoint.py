@@ -111,6 +111,52 @@ def test_trainer_saves_fingerprint_and_restores(tmp_path):
         tr.restore(tmp_path / "empty")
 
 
+def test_mesh_layout_recorded_and_mismatch_refused(tmp_path):
+    """meta.json records the writing mesh's device/process layout; restoring
+    onto a different device or process count raises MeshMismatch naming
+    both layouts (regression: it used to die much later in an opaque
+    reshape inside the first train step)."""
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh)
+    state = eng.init_state(jax.random.key(0))
+    checkpoint.save(state, tmp_path, 1, scheme=eng.scheme_fingerprint())
+
+    meta_path = Path(tmp_path) / "step_00000001" / "meta.json"
+    meta = json.loads(meta_path.read_text())
+    assert meta["format"] == "global"
+    assert meta["mesh"]["axes"] == ["data", "node", "gcd"]
+    assert meta["mesh"]["process_count"] == 1
+
+    # same layout restores fine
+    restored = checkpoint.restore(tmp_path, 1, eng.state_shardings())
+    assert int(restored["step"]) == 0
+
+    # a checkpoint claiming a different device/process layout is refused,
+    # and the error names both sides
+    for field in ("n_devices", "process_count", "local_devices"):
+        bad = dict(meta, mesh=dict(meta["mesh"], **{field: 64}))
+        meta_path.write_text(json.dumps(bad))
+        with pytest.raises(checkpoint.MeshMismatch) as ei:
+            checkpoint.restore(tmp_path, 1, eng.state_shardings())
+        assert "checkpoint:" in str(ei.value), ei.value
+        assert "restoring" in str(ei.value), ei.value
+    meta_path.write_text(json.dumps(meta))
+
+    # a per-process checkpoint cannot be restored without shardings
+    meta_path.write_text(json.dumps(dict(meta, format="per_process")))
+    with pytest.raises(ValueError, match="per-process checkpoint"):
+        checkpoint.restore(tmp_path, 1)
+
+
+def test_mesh_layout_helper():
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    lay = checkpoint.mesh_layout(mesh)
+    assert lay["axes"] == ["data", "node", "gcd"]
+    assert lay["shape"] == [1, 1, 1]
+    assert lay["n_devices"] == 1 and lay["process_count"] == 1
+    assert lay["local_devices"] == 1
+
+
 def test_microbatch_token_metric():
     """n_microbatch > 1 reports the true accumulated global token count
     (regression: it used to report zeros)."""

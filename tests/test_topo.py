@@ -255,6 +255,81 @@ def test_from_mesh_matches_zero_tiers(mesh1):
 
 
 # ---------------------------------------------------------------------------
+# process-spanning meshes: Topology.from_mesh must land the process-boundary
+# axis in the inter tier and price it at the inter link. Real multi-process
+# coverage runs in tests/test_multiprocess.py (topology_tiers scenario);
+# here a stub mesh with fake per-device process indices exercises the same
+# code in-process, including layouts a 2-process CPU run can't produce.
+# ---------------------------------------------------------------------------
+
+class _FakeDevice:
+    def __init__(self, process_index):
+        self.process_index = process_index
+
+
+class _FakeMesh:
+    """Duck-typed mesh: axis_names / shape / devices are all from_mesh,
+    zero_tiers and process_axes consume."""
+
+    def __init__(self, shape: dict, n_processes: int):
+        import numpy as np
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+        n = math.prod(shape.values())
+        assert n % n_processes == 0
+        per = n // n_processes
+        devs = [_FakeDevice(i // per) for i in range(n)]
+        self.devices = np.array(devs, dtype=object).reshape(
+            tuple(shape.values()))
+
+
+def test_from_mesh_process_boundary_lands_inter():
+    from repro.launch.mesh import process_axes
+    from repro.topo.model import DEFAULT_TIER_BANDWIDTH
+
+    # 2 processes x 4 devices: the leading inter axis spans processes
+    mesh = _FakeMesh(dict(data=2, node=2, gcd=2), n_processes=2)
+    assert process_axes(mesh) == ("data",)
+    topo = Topology.from_mesh(mesh)
+    link = topo.link("data")
+    assert link.tier == "inter"
+    assert link.bandwidth == DEFAULT_TIER_BANDWIDTH["inter"]
+    assert topo.bandwidth(("data",)) == DEFAULT_TIER_BANDWIDTH["inter"]
+    assert topo.tiers()["inter"] == ("data",)
+    assert "procs@data" in topo.name
+
+    # 4 processes x 2 devices: the boundary still sits between data groups
+    mesh4 = _FakeMesh(dict(data=4, node=2, gcd=1), n_processes=4)
+    assert process_axes(mesh4) == ("data",)
+    assert Topology.from_mesh(mesh4).link("data").tier == "inter"
+
+    # planner sanity on the process-spanning topology: candidates exist,
+    # the top plan is valid and the step cost prices inter traffic > 0
+    wl = Workload(psi=2e6, n_layers=2)
+    plans = plan(topo, wl)
+    assert plans and plans[0].step_s > 0
+    plans[0].cfg.validate_dependency_rule()
+
+
+def test_from_mesh_rejects_intra_process_boundary():
+    # 4 processes x 2 devices on (2, 2, 2): the boundary cuts the "node"
+    # axis — intra-tier collectives would cross the network
+    mesh = _FakeMesh(dict(data=2, node=2, gcd=2), n_processes=4)
+    from repro.launch.mesh import process_axes, zero_tiers
+    assert "node" in process_axes(mesh)
+    with pytest.raises(ValueError, match="process boundary"):
+        zero_tiers(mesh)
+    with pytest.raises(ValueError, match="process boundary"):
+        Topology.from_mesh(mesh)
+
+
+def test_process_axes_single_process():
+    from repro.launch.mesh import process_axes
+    mesh = _FakeMesh(dict(data=2, node=2, gcd=2), n_processes=1)
+    assert process_axes(mesh) == ()
+
+
+# ---------------------------------------------------------------------------
 # --scheme auto end-to-end on a live (degree-1) mesh; 8-device semantics run
 # in tests/_scenarios.py::auto_scheme
 # ---------------------------------------------------------------------------
@@ -301,9 +376,13 @@ def test_planner_cli_main(tmp_path, capsys):
         planner.main(["--model", "definitely-not-a-model"])
 
 
-def test_plan_table_quick_runs():
+def test_plan_table_quick_runs(tmp_path, monkeypatch):
+    # route the emitted BENCH_plan.json to tmp (it lands in cwd otherwise)
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
     from benchmarks.plan_table import run
     lines = []
     assert run(print_fn=lines.append, quick=True) is True
     text = "\n".join(lines)
     assert "auto (planner)" in text and "Table IV" in text
+    rec = json.loads((tmp_path / "BENCH_plan.json").read_text())
+    assert rec["choice"]["label"] and rec["workload"]["psi"] == 20e9
