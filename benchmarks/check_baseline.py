@@ -41,6 +41,13 @@ GATED = {
         "impl_census.jnp.wire_bytes.*",
         "impl_census.pallas_interpret.collective_counts.*",
         "impl_census.pallas_interpret.wire_bytes.*",
+        # streaming grad path (DESIGN.md §8): both regimes' full train-step
+        # collective inventory, pinned — the probe itself asserts the
+        # grad-RS wire bytes are identical across regimes before emitting
+        "grad_rs_census.stream=False.collective_counts.*",
+        "grad_rs_census.stream=False.wire_bytes.*",
+        "grad_rs_census.stream=True.collective_counts.*",
+        "grad_rs_census.stream=True.wire_bytes.*",
     ],
     "BENCH_comm_volume.json": [
         "zero3.*", "zeropp.*", "zero_topo.*", "invariants.*",
@@ -53,6 +60,13 @@ GATED = {
     "BENCH_plan.json": [
         "topology", "workload.*", "n_schemes_searched",
         "choice.*", "presets.*",
+    ],
+    # per-device memory accounting (benchmarks/memory_table.py): pure byte
+    # arithmetic from partition.py's shared formulas — any drift is a
+    # memory-model change (engine memory_report uses the same functions,
+    # cross-checked by tests/test_stream_grads.py)
+    "BENCH_memory.json": [
+        "paper_table.*", "engine.*", "max_model_2nodes.*", "max_model_tpu.*",
     ],
 }
 

@@ -142,6 +142,7 @@ def run(print_fn=print):
     rec["cpu_wall"] = cpu_wall_section(print_fn)
     rec["overlap_probe"] = overlap_probe(print_fn)
     rec["impl_census"] = impl_census_probe(print_fn)
+    rec["grad_rs_census"] = grad_rs_census_probe(print_fn)
 
     out = bench_out_path()
     out.write_text(json.dumps(rec, indent=1))
@@ -319,10 +320,93 @@ def _impl_probe_main():
     print(json.dumps(out))
 
 
+# ---------------------------------------------------------------------------
+# Grad-RS census probe (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def grad_rs_census_probe(print_fn=print) -> dict:
+    """Compile the full train step with the seed and the streaming grad
+    paths and census the gradient collectives of both modules.
+
+    The streaming path moves the stage-2 reduce-scatter + cross-replica
+    sync from one batched post-backward collective per leaf into the
+    reverse scan body (one per layer), so the *counts* differ by design
+    (scan trip count multiplies ops) — but the total gradient wire bytes
+    per step must be IDENTICAL at n_microbatch=1: same data, different
+    schedule. Both censuses are pinned in the baseline so neither path's
+    collective inventory can silently drift."""
+    print_fn("\n== streaming grad path: train-step collective census, seed "
+             "vs stream (zero_topo, 8 fake CPU devices) ==")
+    rec = _probe_subprocess("--grad-rs-probe", print_fn)
+    for key in ("stream=False", "stream=True"):
+        m = rec[key]
+        print_fn(f"  {key:13s} collectives {m['collective_counts']}  "
+                 f"wire {m['total_wire_mb']:.3f} MB  loss {m['loss']:.6f}  "
+                 f"grad-RS wire {m['grad_rs_wire_mb']:.3f} MB")
+    off, on = rec["stream=False"], rec["stream=True"]
+    same_wire = abs(off["grad_rs_wire_mb"] - on["grad_rs_wire_mb"]) < 1e-9
+    bitwise = off["loss"] == on["loss"]
+    print_fn(f"  -> grad-RS wire bytes identical: {same_wire}; losses "
+             f"bitwise equal: {bitwise} (streaming changes the schedule and "
+             "the accumulation layout, never the gradient bytes on the "
+             "wire)")
+    rec["grad_rs_wire_identical"] = same_wire   # informational; assert gates
+    assert same_wire and bitwise, rec
+    return rec
+
+
+def _grad_rs_probe_main():
+    """Child half of grad_rs_census_probe (8 fake devices): one full train
+    step per grad regime — the stage-2 RS + cross-replica + update gather
+    are only in the compiled module for a *train* step."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.engine import TrainHparams, ZeroEngine
+    from repro.launch import hlo
+    from repro.launch.mesh import make_test_mesh, scheme_config
+    from repro.models.registry import build_model, get_arch
+
+    jax.config.update("jax_default_matmul_precision", "float32")
+    ax = ("data", "node", "gcd")
+    mesh = make_test_mesh()
+    arch = get_arch("qwen2-0.5b").reduced(n_layers=N_LAYERS, d_model=128,
+                                          vocab=256)
+    model = build_model(arch)
+    rng = np.random.default_rng(0)
+    batch_np = rng.integers(0, arch.vocab, (8, 33), dtype=np.int32)
+    out = {}
+    for stream in (False, True):
+        cfg = scheme_config("zero_topo", mesh, quant_block=64,
+                            compute_dtype="float32", stream_grads=stream)
+        eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                         TrainHparams(lr=1e-3, total_steps=8, warmup_steps=0))
+        state = eng.init_state(jax.random.key(0))
+        step = eng.make_train_step(model.loss_fn(), {"tokens": P(ax)})
+        batch = {"tokens": jax.device_put(jnp.asarray(batch_np),
+                                          NamedSharding(mesh, P(ax)))}
+        census = hlo.analyze(
+            step.lower(state, batch).compile().as_text()).summary()
+        state, m = step(state, batch)
+        # gradient wire = the a2a-based quantized RS (stage 1 + stage 2)
+        # plus the cross-replica all-reduce; the all-gathers are the
+        # (unchanged) weight/update paths
+        grs = census["wire_bytes"].get("all-to-all", 0.0) \
+            + census["wire_bytes"].get("all-reduce", 0.0) \
+            + census["wire_bytes"].get("reduce-scatter", 0.0)
+        out[f"stream={stream}"] = dict(
+            loss=float(m["loss"]),
+            collective_counts=census["collective_counts"],
+            wire_bytes=census["wire_bytes"],
+            total_wire_mb=census["total_wire_bytes"] / 1e6,
+            grad_rs_wire_mb=grs / 1e6)
+    print(json.dumps(out))
+
+
 if __name__ == "__main__":
     if "--overlap-probe" in sys.argv:
         _overlap_probe_main()
     elif "--impl-probe" in sys.argv:
         _impl_probe_main()
+    elif "--grad-rs-probe" in sys.argv:
+        _grad_rs_probe_main()
     else:
         run()

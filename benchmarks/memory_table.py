@@ -1,80 +1,148 @@
-"""Paper Tables V & VI + §II max-model-size motivation.
+"""Paper Tables V & VI + §II max-model-size motivation, reconciled with the
+engine's real allocation.
 
-Per-device weight/gradient/optimizer bytes for each scheme, on the paper's
-Frontier geometry (64 GB/GCD, 8 GCD/node) and on the TPU v5e target
-(16 GB/chip), plus the maximum trainable model size per scheme — reproducing
-the ZeRO++ 55B vs ZeRO-3 68B observation on 2 nodes (16 GCDs).
+Three accountings of the per-device gradient buffer, all from the SAME
+formulas in ``repro.core.partition`` (so this table, ``ZeroEngine.
+memory_report`` and the planner's ``topo.cost`` can never drift —
+tests/test_stream_grads.py cross-checks all three):
+
+* **paper table** — fp16 grads at the grad-shard degree (``grad_memory_
+  bytes(grad_bytes=2)``): what Tables V/VI print.
+* **engine (seed)** — fp32 grads in *primary layout*
+  (``grad_buffer_bytes(streaming=False)`` = 4*psi/w_degree): what the seed
+  step actually accumulates across microbatches, strictly more than the
+  paper figure whenever E is non-trivial.
+* **engine (streaming)** — fp32 grads in *optimizer-shard layout*
+  (``grad_buffer_bytes(streaming=True)`` = 4*psi/os_degree): the streaming
+  grad path (DESIGN.md §8), which reduces each layer's cotangent inside the
+  backward.
+
+Emits ``BENCH_memory.json`` (cwd, or $REPRO_BENCH_DIR); CI's bench-gate
+diffs it against ``benchmarks/baselines/BENCH_memory.json`` via
+``benchmarks.check_baseline`` — pure byte arithmetic, so ANY drift is a
+memory-model change that must ship with an updated baseline.
 """
 from __future__ import annotations
 
-from repro.core.partition import (grad_memory_bytes, optimizer_memory_bytes,
-                                  preset, weight_memory_bytes)
+import json
+import os
+from pathlib import Path
+
+from repro.core.partition import (grad_buffer_bytes, grad_memory_bytes,
+                                  optimizer_memory_bytes, preset,
+                                  weight_memory_bytes)
 
 GB = 1 << 30
+SCHEMES = ("zero1", "zero2", "zero3", "zeropp", "zero_topo")
 
 
-def scheme_bytes(scheme: str, psi: int, n_nodes: int, gcds_per_node: int = 8):
+def _cfg(scheme: str, n_nodes: int, gcds_per_node: int = 8):
     sizes = {"data": n_nodes, "node": gcds_per_node // 2, "gcd": 2}
-    cfg = preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data",),
-                 l0_axes=("gcd",), axis_sizes=sizes)
+    return preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data",),
+                  l0_axes=("gcd",), axis_sizes=sizes)
+
+
+def scheme_bytes(scheme: str, psi: int, n_nodes: int, gcds_per_node: int = 8,
+                 *, grad_bytes: int = 2, streaming: bool | None = None):
+    """Per-device training-state bytes for one scheme.
+
+    ``streaming=None`` reproduces the paper's Table V/VI accounting (grads
+    at the grad-shard degree, fp16 by default); a bool selects the engine's
+    real buffer (``grad_buffer_bytes``) in the seed (False) or streaming
+    (True) regime, fp32.
+    """
+    cfg = _cfg(scheme, n_nodes, gcds_per_node)
     w = weight_memory_bytes(cfg, psi)
-    g = grad_memory_bytes(cfg, psi) // 2        # paper counts fp16 grads
+    if streaming is None:
+        g = grad_memory_bytes(cfg, psi, grad_bytes=grad_bytes)
+    else:
+        g = grad_buffer_bytes(cfg, psi, streaming=streaming,
+                              grad_bytes=grad_bytes)
     os_ = optimizer_memory_bytes(cfg, psi)
     return dict(weights=w, grads=g, optimizer=os_, total=w + g + os_)
 
 
 def max_model_size(scheme: str, n_nodes: int, mem_per_gcd: float,
-                   gcds_per_node: int = 8) -> float:
+                   gcds_per_node: int = 8, *, grad_bytes: int = 2,
+                   streaming: bool | None = None) -> float:
     """Largest psi (params) whose training state fits (bisective search)."""
     lo, hi = 1e6, 1e13
     for _ in range(80):
         mid = (lo + hi) / 2
-        if scheme_bytes(scheme, int(mid), n_nodes, gcds_per_node)["total"] \
-                <= mem_per_gcd:
+        b = scheme_bytes(scheme, int(mid), n_nodes, gcds_per_node,
+                         grad_bytes=grad_bytes, streaming=streaming)
+        if b["total"] <= mem_per_gcd:
             lo = mid
         else:
             hi = mid
     return lo
 
 
+def bench_out_path() -> Path:
+    return Path(os.environ.get("REPRO_BENCH_DIR", ".")) / "BENCH_memory.json"
+
+
 def run(print_fn=print):
-    print_fn("\n== Paper Tables V/VI: per-GCD training-state bytes "
-             "(psi=20B params, 48 Frontier nodes) ==")
+    rec: dict = {}
     psi = 20_000_000_000
+    print_fn("\n== Paper Tables V/VI: per-GCD training-state bytes "
+             "(psi=20B params, 48 Frontier nodes; fp16 grads, Table VI "
+             "accounting) ==")
     hdr = f"{'scheme':10s} {'weights':>10s} {'grads':>10s} {'optimizer':>10s} {'total':>10s}"
     print_fn(hdr)
-    for scheme in ("zero1", "zero2", "zero3", "zeropp", "zero_topo"):
+    rec["paper_table"] = {}
+    for scheme in SCHEMES:
         b = scheme_bytes(scheme, psi, 48)
+        rec["paper_table"][scheme] = b
         print_fn(f"{scheme:10s} " + " ".join(
             f"{b[k] / GB:9.2f}G" for k in ("weights", "grads", "optimizer",
                                            "total")))
 
+    print_fn("\n== engine accounting: the fp32 grad buffer the step really "
+             "allocates (same formulas as ZeroEngine.memory_report) ==")
+    print_fn(f"{'scheme':10s} {'paper(fp16)':>12s} {'seed(fp32)':>12s} "
+             f"{'streaming':>12s}   seed = primary layout 4psi/w; "
+             "streaming = os layout 4psi/os (DESIGN.md §8)")
+    rec["engine"] = {}
+    for scheme in SCHEMES:
+        paper = scheme_bytes(scheme, psi, 48)["grads"]
+        seed = scheme_bytes(scheme, psi, 48, grad_bytes=4,
+                            streaming=False)["grads"]
+        strm = scheme_bytes(scheme, psi, 48, grad_bytes=4,
+                            streaming=True)["grads"]
+        rec["engine"][scheme] = dict(paper_fp16=paper, seed_fp32=seed,
+                                     streaming_fp32=strm)
+        print_fn(f"{scheme:10s} {paper / GB:11.2f}G {seed / GB:11.2f}G "
+                 f"{strm / GB:11.2f}G")
+        assert strm <= seed, (scheme, strm, seed)
+    print_fn("-> the seed path's primary-layout accumulation costs up to "
+             "w_degree/os_degree MORE than the paper table assumes; the "
+             "streaming path brings it BELOW the table (fp32 at os degree).")
+
     print_fn("\n== §II motivation: max model size, 2 Frontier nodes "
              "(16 GCDs x 64 GB) ==")
+    rec["max_model_2nodes"] = {}
     for scheme in ("zero3", "zeropp", "zero_topo"):
         m = max_model_size(scheme, 2, 64 * GB)
-        print_fn(f"{scheme:10s} ~{m / 1e9:5.1f}B params")
+        ms = max_model_size(scheme, 2, 64 * GB, grad_bytes=4, streaming=True)
+        rec["max_model_2nodes"][scheme] = dict(paper=m, streaming=ms)
+        print_fn(f"{scheme:10s} ~{m / 1e9:5.1f}B params "
+                 f"(streaming grads, fp32: ~{ms / 1e9:5.1f}B)")
     print_fn("(paper reports ~68B for ZeRO-3 vs ~55B for ZeRO++ — same "
              "ordering and ~20% gap; zero_topo trades further memory for "
              "constant-latency gathers and is the 36B-class row, Table V)")
 
     print_fn("\n== TPU v5e adaptation: max model size, 16 GB/chip, 256 chips ==")
+    rec["max_model_tpu"] = {}
     for scheme in ("zero3", "zeropp", "zero_topo"):
-        sizes = {"data": 16, "node": 8, "gcd": 2}   # 256 chips
-        cfg = preset(scheme, intra_axes=("node", "gcd"), inter_axes=("data",),
-                     l0_axes=("gcd",), axis_sizes=sizes)
-        lo, hi = 1e6, 1e13
-        for _ in range(80):
-            mid = (lo + hi) / 2
-            w = weight_memory_bytes(cfg, int(mid))
-            g = grad_memory_bytes(cfg, int(mid)) // 2
-            o = optimizer_memory_bytes(cfg, int(mid))
-            if w + g + o <= 16 * GB:
-                lo = mid
-            else:
-                hi = mid
-        print_fn(f"{scheme:10s} ~{lo / 1e9:5.1f}B params "
-                 f"(weight-degree {cfg.w_degree})")
+        m = max_model_size(scheme, 16, 16 * GB, gcds_per_node=16)
+        rec["max_model_tpu"][scheme] = m
+        print_fn(f"{scheme:10s} ~{m / 1e9:5.1f}B params "
+                 f"(weight-degree {_cfg(scheme, 16, 16).w_degree})")
+
+    out = bench_out_path()
+    out.write_text(json.dumps(rec, indent=1))
+    print_fn(f"\nwrote {out}")
     return True
 
 

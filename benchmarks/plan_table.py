@@ -102,9 +102,15 @@ def print_tables(topo, wl, rows, print_fn=print):
 
 def run(print_fn=print, topology: str = "frontier",
         model: str = "gpt-neox-20b", quick: bool = False,
-        budget_gb: float = 0.0):
+        budget_gb: float = 0.0, stream_grads: bool = False):
+    import dataclasses
     topo = load_topology(topology)
     wl = model_workload(model) if not quick else Workload(psi=20e9)
+    if stream_grads:
+        # streaming grad regime (DESIGN.md §8): per-layer grad RS inside
+        # the backward, grad memory at os layout. Not used by --quick: the
+        # CI gate pins the seed-regime record.
+        wl = dataclasses.replace(wl, stream_grads=True)
     budget = budget_gb * GB if budget_gb else None
     rows, ranked = build_rows(topo, wl, budget)
     print_tables(topo, wl, rows, print_fn)
@@ -150,9 +156,11 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="skip model construction (fixed 20B workload) — "
                          "the CI gate")
+    ap.add_argument("--stream-grads", action="store_true",
+                    help="price the streaming grad regime (DESIGN.md §8)")
     args = ap.parse_args()
     run(topology=args.topology, model=args.model, quick=args.quick,
-        budget_gb=args.budget_gb)
+        budget_gb=args.budget_gb, stream_grads=args.stream_grads)
 
 
 if __name__ == "__main__":

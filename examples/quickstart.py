@@ -27,10 +27,12 @@ def main():
 
     # 2. a reduced GPT-NeoX (the paper's model family) + the zero_topo scheme:
     #    weights sharded over 'gcd' (INT8 gathers), grads over the node
-    #    (INT4 all-to-all reduce-scatter), optimizer over everything
+    #    (INT4 all-to-all reduce-scatter), optimizer over everything.
+    #    stream_grads: each layer's grad reduce-scatter runs inside the
+    #    backward and accumulates in optimizer-shard layout (DESIGN.md §8)
     arch = get_arch("gpt-neox-20b").reduced(n_layers=2, d_model=256, vocab=512)
     model = build_model(arch)
-    cfg = scheme_config("zero_topo", mesh, quant_block=128)
+    cfg = scheme_config("zero_topo", mesh, quant_block=128, stream_grads=True)
     print(f"scheme={cfg.name}: weight shards x{cfg.w_degree}, "
           f"grad shards x{cfg.g_degree}, optimizer shards x{cfg.os_degree}")
 

@@ -116,18 +116,28 @@ def gather_wait_int8(qf, sf, cfg: ZeroConfig, out_dtype=jnp.bfloat16):
                                impl=cfg.impl)
 
 
-def a2a_quant_reduce_scatter(x, axes: AxisTuple, cfg: ZeroConfig,
-                             bits: int = 4, out_dtype=jnp.float32):
-    """All-to-all based quantized reduce-scatter over `axes`.
+# -- a2a-RS issue / wait split (streaming grad path, DESIGN.md §8) -----------
+#
+# Mirrors the ``gather_issue_int8``/``gather_wait_int8`` split above, for the
+# other direction: ``a2a_rs_issue`` ends at the all-to-all (quantize + a2a,
+# no dequant — the point where the collective leaves the device), and
+# ``a2a_rs_wait`` is the pure-local receive side (fused unpack + dequant +
+# reduce). issue+wait composes op-for-op into ``a2a_quant_reduce_scatter``,
+# so the streaming backward tap that uses the split halves is bitwise the
+# fused primitive (tests/_scenarios.py::collectives_split). The issue half's
+# result feeds nothing in the current layer's backward compute, so XLA's
+# latency-hiding scheduler can run layer i's grad all-to-all concurrently
+# with layer i-1's backward matmuls — the same mechanism as the forward
+# gather prefetch (core/schedule.py owns both idioms).
 
-    x: flat (n,) with n % (D * block) == 0, D = group size. Returns the
-    (n // D,) shard for this device's group index, summed over the group,
-    with exactly one quantize/dequantize round-trip (INT4 by default ->
-    0.25x communication volume, paper Table VIII).
+def a2a_rs_issue(x, axes: AxisTuple, cfg: ZeroConfig, bits: int = 4):
+    """Quantize the d chunks of a flat shard and exchange them with one
+    all-to-all, *without* the receive-side dequant-reduce.
+
+    Returns the received (q2, s2) wire buffers; same wire traffic as the
+    fused ``a2a_quant_reduce_scatter``.
     """
     d = cfg.size(axes)
-    if d == 1:
-        return x.astype(out_dtype)
     chunks = x.reshape(d, -1)          # chunk j -> group member j (major order)
     flatc = chunks.reshape(-1)
     if bits == 4:
@@ -139,9 +149,15 @@ def a2a_quant_reduce_scatter(x, axes: AxisTuple, cfg: ZeroConfig,
     s = s.reshape(d, -1)
     q2 = lax.all_to_all(q, tuple(axes), split_axis=0, concat_axis=0, tiled=False)
     s2 = lax.all_to_all(s, tuple(axes), split_axis=0, concat_axis=0, tiled=False)
-    # receive side: fused unpack + dequant + reduce over the d chunks in one
-    # kernel pass (the unfused tail would materialize d dequantized copies
-    # and re-read them for the sum)
+    return q2, s2
+
+
+def a2a_rs_wait(q2, s2, d: int, cfg: ZeroConfig, bits: int = 4,
+                out_dtype=jnp.float32):
+    """Receive side of the a2a quantized RS: fused unpack + dequant + reduce
+    over the d chunks in one kernel pass (no communication). The unfused
+    tail would materialize d dequantized copies and re-read them for the
+    sum."""
     if bits == 4:
         red = ops.dequantize_int4_sum(q2.reshape(-1), s2.reshape(-1), d,
                                       cfg.quant_block, jnp.float32,
@@ -151,6 +167,23 @@ def a2a_quant_reduce_scatter(x, axes: AxisTuple, cfg: ZeroConfig,
                                       cfg.quant_block, jnp.float32,
                                       impl=cfg.impl)
     return red.astype(out_dtype)
+
+
+def a2a_quant_reduce_scatter(x, axes: AxisTuple, cfg: ZeroConfig,
+                             bits: int = 4, out_dtype=jnp.float32):
+    """All-to-all based quantized reduce-scatter over `axes`.
+
+    x: flat (n,) with n % (D * block) == 0, D = group size. Returns the
+    (n // D,) shard for this device's group index, summed over the group,
+    with exactly one quantize/dequantize round-trip (INT4 by default ->
+    0.25x communication volume, paper Table VIII). Composition of the
+    ``a2a_rs_issue``/``a2a_rs_wait`` halves above.
+    """
+    d = cfg.size(axes)
+    if d == 1:
+        return x.astype(out_dtype)
+    q2, s2 = a2a_rs_issue(x, axes, cfg, bits)
+    return a2a_rs_wait(q2, s2, d, cfg, bits, out_dtype)
 
 
 def reduce_scatter_flat(x, axes: AxisTuple, cfg: ZeroConfig, *,
@@ -194,17 +227,28 @@ def update_all_gather(master_shard, cfg: ZeroConfig, out_dtype=jnp.bfloat16):
     psi*(d-1)/d over the OS group (paper §V-D). Optionally INT8-quantized
     (beyond-paper; consistent across replicas because dequant is
     deterministic).
+
+    Accepts flat 1-D shards or stacked (layers, shard) 2-D leaves — the
+    gather tiles the last axis, so stacked leaves need no per-row vmap
+    (same data movement, one batched collective).
     """
     axes = cfg.axes.extra_grad + cfg.axes.replica
     x = master_shard.astype(out_dtype)
     if not axes or cfg.size(axes) == 1:
         return x
     if cfg.quantize_update_gather:
-        q, s = ops.quantize_int8(x, cfg.quant_block, impl=cfg.impl)
-        qf = lax.all_gather(q, tuple(axes), tiled=True)
-        sf = lax.all_gather(s, tuple(axes), tiled=True)
-        return ops.dequantize_int8(qf, sf, cfg.quant_block, out_dtype, impl=cfg.impl)
-    return lax.all_gather(x, tuple(axes), tiled=True)
+        # quantize blocks never cross rows (shard length % block == 0 by
+        # padded_flat_size), so flat quantization of the stacked leaf is
+        # bitwise the per-row quantization; gather per row, then dequant
+        q, s = ops.quantize_int8(x.reshape(-1), cfg.quant_block, impl=cfg.impl)
+        q = q.reshape(x.shape)
+        s = s.reshape(x.shape[:-1] + (-1,))
+        qf = lax.all_gather(q, tuple(axes), tiled=True, axis=x.ndim - 1)
+        sf = lax.all_gather(s, tuple(axes), tiled=True, axis=x.ndim - 1)
+        out = ops.dequantize_int8(qf.reshape(-1), sf.reshape(-1),
+                                  cfg.quant_block, out_dtype, impl=cfg.impl)
+        return out.reshape(x.shape[:-1] + (-1,))
+    return lax.all_gather(x, tuple(axes), tiled=True, axis=x.ndim - 1)
 
 
 def secondary_slice(qf, sf, axes: AxisTuple, cfg: ZeroConfig):

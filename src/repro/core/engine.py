@@ -11,20 +11,27 @@ scan body — one gather per layer per pass, exactly ZeRO-3's schedule.
 
 The train step (inside one ``shard_map`` over the full mesh):
 
-  1. value_and_grad of the model loss w.r.t. the primary shards. MATMUL /
-     GATHER_Q leaves use the custom-VJP path from ``linear.py`` (INT8 gather
-     fwd, secondary-partition re-gather bwd, INT4 all-to-all reduce-scatter of
-     the weight grad over the weight axes). Cross-replica reduction is
-     deferred: grads stay device-varying over the E/R axes.
+  1. value_and_grad of the model loss. MATMUL / GATHER_Q leaves use the
+     custom-VJP path from ``linear.py`` (INT8 gather fwd, secondary-partition
+     re-gather bwd, INT4 all-to-all reduce-scatter of the weight grad over
+     the weight axes). Seed regime: differentiate w.r.t. the primary shards;
+     cross-replica reduction is deferred and grads stay device-varying over
+     the E/R axes. Streaming regime (``ZeroConfig.stream_grads``, §8):
+     differentiate w.r.t. fp32 os-shard *sinks* — stacked leaves run the
+     full reduce chain inside the reverse scan step and the accumulation
+     buffer is os-layout (4psi/os instead of 4psi/w).
   2. stage-2 reduce-scatter of the accumulated primary-layout grads over the
-     **extra-grad axes** (paper: intra-node a2a INT4 RS; deferred here to once
-     per step instead of once per microbatch — strictly less communication).
+     **extra-grad axes** (paper: intra-node a2a INT4 RS). Seed: once per
+     step, after the backward; streaming: already folded into step 1, per
+     layer per microbatch, overlapped with the backward matmuls.
   3. cross-replica sync over the **replica axes**: the paper's allreduce +
-     select, or (beyond-paper) a reduce-scatter at half the volume.
+     select, or (beyond-paper) a reduce-scatter at half the volume (also
+     folded into step 1 when streaming).
   4. AdamW on the fp32 master shard; grad-norm clipping uses one scalar psum.
   5. *update all-gather* over (E + R) axes rebuilds the bf16 primary shards
      (volume psi*(d-1)/d over the OS group, paper §V-D), optionally
-     INT8-quantized (beyond-paper).
+     INT8-quantized (beyond-paper); stacked leaves gather their last axis in
+     one batched collective.
 
 ``check_vma=False``: the engine manages replication manually — automatic
 psum-insertion on replicated-input cotangents would defeat the paper's
@@ -45,12 +52,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from . import collectives as col
+from . import schedule as sched
 from .linear import (make_gather_issue, make_plain_gather, make_zero_gather_q,
-                     make_zero_gather_q_pre, make_zero_matmul,
-                     make_zero_matmul_pre)
+                     make_zero_gather_q_pre, make_zero_gather_q_stream,
+                     make_zero_gather_q_stream_pre, make_zero_matmul,
+                     make_zero_matmul_pre, make_zero_matmul_stream,
+                     make_zero_matmul_stream_pre)
 from .partition import (EXPERT, GATHER_Q, MATMUL, PLAIN, LeafSpec, ZeroConfig,
-                        padded_flat_size)
-from .prefetch import issue_buffers, prefetchable_names
+                        grad_buffer_bytes, padded_flat_size,
+                        prefetch_buffer_bytes)
 
 
 def host_scalar(v):
@@ -79,6 +89,13 @@ class _LeafFns:
     issue: Callable | None = None      # prefetch: primary -> gathered buffer
     mm_pre: Callable | None = None     # matmul consuming a prefetched buffer
     full_pre: Callable | None = None   # dense tensor from a prefetched buffer
+    # streaming-grad variants (DESIGN.md §8): take an os-shard sink whose
+    # cotangent is the fully-reduced fp32 gradient row; built only for
+    # stacked MATMUL/GATHER_Q leaves (the layer loop)
+    mm_stream: Callable | None = None
+    mm_stream_pre: Callable | None = None
+    full_stream: Callable | None = None
+    full_stream_pre: Callable | None = None
 
 
 class ParamView:
@@ -92,10 +109,16 @@ class ParamView:
     inside the scan body.
 
     With ``overlap=True`` (ZeroConfig.overlap), ``scan_layers``/``loop_layers``
-    rotate a 2-slot prefetch buffer through the layer loop (prefetch.py):
+    rotate a 2-slot prefetch buffer through the layer loop (schedule.py):
     views bound inside the loop carry the current layer's pre-gathered
     quantized weights in ``bufs`` and consume them via the ``*_pre`` VJPs
     instead of gathering inline.
+
+    With ``sinks`` (ZeroConfig.stream_grads, DESIGN.md §8), the top-level
+    view carries the per-leaf os-shard gradient sinks; the layer loops
+    thread one row per layer to the bound sub-views, whose ``mm``/``get``
+    route through the ``*_stream`` VJPs so each layer's weight cotangent is
+    fully reduced inside the backward.
     """
 
     # class-level defaults so subclasses with their own __init__
@@ -103,22 +126,42 @@ class ParamView:
     # non-overlap behavior without any getattr probing
     _fns: dict[str, "_LeafFns"] | None = None
     _bufs: dict[str, Any] | None = None
+    _sinks: dict[str, Any] | None = None
     _overlap: bool = False
 
     def __init__(self, fns: dict[str, _LeafFns], primaries: dict[str, Any],
-                 bufs: dict[str, Any] | None = None, overlap: bool = False):
+                 bufs: dict[str, Any] | None = None, overlap: bool = False,
+                 sinks: dict[str, Any] | None = None):
         self._fns = fns
         self._p = primaries
         self._bufs = bufs
         self._overlap = overlap
+        self._sinks = sinks
 
     def _buf(self, name: str):
         return None if self._bufs is None else self._bufs.get(name)
+
+    def _sink(self, name: str):
+        return None if self._sinks is None else self._sinks.get(name)
+
+    def sink_stack(self, name: str):
+        """Full (layers, os_shard) sink for a stacked leaf, else None."""
+        return self._sink(name)
+
+    def sink_stacks(self, names) -> dict[str, Any]:
+        return {} if self._sinks is None else \
+            {n: self._sinks[n] for n in names if n in self._sinks}
 
     def mm(self, name: str, x, transpose: bool = False):
         fn = self._fns[name]
         assert fn.mm is not None, f"{name} is not a matmul leaf"
         buf = self._buf(name)
+        sink = self._sink(name)
+        if sink is not None:
+            if buf is not None and fn.mm_stream_pre is not None:
+                return fn.mm_stream_pre(x, self._p[name], buf, sink, transpose)
+            if fn.mm_stream is not None:
+                return fn.mm_stream(x, self._p[name], sink, transpose)
         if buf is not None and fn.mm_pre is not None:
             return fn.mm_pre(x, self._p[name], buf, transpose)
         return fn.mm(x, self._p[name], transpose)
@@ -126,6 +169,12 @@ class ParamView:
     def get(self, name: str):
         fn = self._fns[name]
         buf = self._buf(name)
+        sink = self._sink(name)
+        if sink is not None:
+            if buf is not None and fn.full_stream_pre is not None:
+                return fn.full_stream_pre(self._p[name], buf, sink)
+            if fn.full_stream is not None:
+                return fn.full_stream(self._p[name], sink)
         if buf is not None and fn.full_pre is not None:
             return fn.full_pre(self._p[name], buf)
         return fn.full(self._p[name])
@@ -157,111 +206,40 @@ class ParamView:
         return {n: self._p[n] for n in names}
 
     def sub(self, primaries: dict[str, Any],
-            bufs: dict[str, Any] | None = None) -> "ParamView":
+            bufs: dict[str, Any] | None = None,
+            sinks: dict[str, Any] | None = None) -> "ParamView":
         return ParamView(self._fns, primaries, bufs=bufs,
-                         overlap=self._overlap)
+                         overlap=self._overlap, sinks=sinks)
 
     def scan_layers(self, body, carry, names, *, remat: bool = True,
                     unroll: int = 1, with_ys: bool = False,
                     overlap: bool | None = None):
-        """lax.scan over stacked leaves `names`.
+        """lax.scan over stacked leaves `names`, via the comm-schedule layer
+        (core/schedule.py): the 2-slot gather-prefetch rotation and the
+        streaming grad sinks both ride the scan xs/carry there.
 
         body(view, carry) -> carry, or (carry, y) when ``with_ys`` (per-layer
-        outputs are stacked like lax.scan's ys). ``overlap=None`` inherits the
-        view's setting (ZeroConfig.overlap via the engine).
-
-        Overlapped schedule (prefetch.py): a prologue issues layer 0's
-        gathers, each scan step consumes the carried buffer for layer i while
-        issuing layer i+1's, and the last layer runs as an epilogue — so the
-        gather count stays exactly one per leaf per layer (comm volume
-        unchanged; only the schedule moves).
+        outputs are stacked like lax.scan's ys). ``overlap=None`` inherits
+        the view's setting (ZeroConfig.overlap via the engine).
         """
-        stacked = self.stacked(names)
-        if overlap is None:
-            overlap = self._overlap
-        fns = self._fns
-        pf = prefetchable_names(fns, names) if overlap and fns else ()
-        if not pf:
-            def f(c, layer_p):
-                out = body(self.sub(layer_p), c)
-                return out if with_ys else (out, None)
-
-            if remat:
-                f = jax.checkpoint(f, prevent_cse=False)
-            c, ys = lax.scan(f, carry, stacked, unroll=unroll)
-            return (c, ys) if with_ys else c
-
-        buf0 = issue_buffers(fns, {n: stacked[n][0] for n in pf}, pf)
-
-        def f(c, xs):
-            cur, nxt = xs
-            inner, buf = c
-            buf_next = issue_buffers(fns, nxt, pf)
-            out = body(self.sub(cur, bufs=buf), inner)
-            inner, y = out if with_ys else (out, None)
-            return (inner, buf_next), y
-
-        def last(c):
-            inner, buf = c
-            out = body(self.sub({n: stacked[n][-1] for n in names},
-                                bufs=buf), inner)
-            return out if with_ys else (out, None)
-
-        if remat:
-            f = jax.checkpoint(f, prevent_cse=False)
-            last = jax.checkpoint(last, prevent_cse=False)
-        cur = {n: stacked[n][:-1] for n in names}
-        nxt = {n: stacked[n][1:] for n in pf}
-        c2, ys = lax.scan(f, (carry, buf0), (cur, nxt), unroll=unroll)
-        carry, y_last = last(c2)
-        if not with_ys:
-            return carry
-        if y_last is not None:
-            ys = jax.tree.map(
-                lambda a, b: jnp.concatenate([a, b[None]], axis=0),
-                ys, y_last)
-        return carry, ys
+        return sched.scan_layers(self, body, carry, names, remat=remat,
+                                 unroll=unroll, with_ys=with_ys,
+                                 overlap=overlap)
 
     def loop_layers(self, body, carry, steps, *, remat: bool = True,
                     overlap: bool | None = None):
-        """Python loop for heterogeneous block patterns.
+        """Python loop for heterogeneous block patterns, via
+        core/schedule.py (same rotation/sink threading as ``scan_layers``,
+        across block-kind boundaries — gemma3's 5:1 local:global interleave,
+        jamba's mamba/attn mix).
 
         steps: sequence of ``(tag, layer_primaries)`` pairs — one entry per
-        layer in pattern order, ``layer_primaries`` already indexed out of the
-        per-kind stacks. body(view, carry, tag) -> (carry, y).
+        layer in pattern order, ``layer_primaries`` already indexed out of
+        the per-kind stacks. body(view, carry, tag) -> (carry, y).
         Returns (carry, [y per layer]).
-
-        With overlap, layer j+1's gathers are issued alongside layer j's
-        compute — including across block-kind boundaries (gemma3's 5:1
-        local:global interleave, jamba's mamba/attn mix).
         """
-        if overlap is None:
-            overlap = self._overlap
-        fns = self._fns
-        overlap = overlap and fns is not None
-        bufs_next = None
-        if overlap and len(steps):
-            _, lp0 = steps[0]
-            bufs_next = issue_buffers(fns, lp0,
-                                      prefetchable_names(fns, lp0))
-        ys = []
-        for j, (tag, lp) in enumerate(steps):
-            bufs, bufs_next = bufs_next, None
-            if overlap and j + 1 < len(steps):
-                _, lpn = steps[j + 1]
-                bufs_next = issue_buffers(fns, lpn,
-                                          prefetchable_names(fns, lpn))
-            # plain two-arg sub() for subclasses that don't know about bufs
-            v = self.sub(lp, bufs=bufs) if bufs is not None else self.sub(lp)
-
-            def one(c, v=v, tag=tag):
-                return body(v, c, tag)
-
-            if remat:
-                one = jax.checkpoint(one, prevent_cse=False)
-            carry, y = one(carry)
-            ys.append(y)
-        return carry, ys
+        return sched.loop_layers(self, body, carry, steps, remat=remat,
+                                 overlap=overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +263,8 @@ class TrainHparams:
     n_microbatch: int = 1
     overlap: bool | None = None   # None = follow ZeroConfig.overlap; a bool
     # here overrides the scheme config (launch/train.py --overlap plumbs this)
+    stream_grads: bool | None = None  # None = follow ZeroConfig.stream_grads;
+    # a bool overrides the scheme config (launch/train.py --stream-grads)
 
 
 class ZeroEngine:
@@ -292,10 +272,16 @@ class ZeroEngine:
 
     def __init__(self, specs: dict[str, LeafSpec], cfg: ZeroConfig, mesh: Mesh,
                  hp: TrainHparams | None = None):
-        if hp is not None and hp.overlap is not None \
-                and hp.overlap != cfg.overlap:
-            import dataclasses
-            cfg = dataclasses.replace(cfg, overlap=hp.overlap)
+        if hp is not None:
+            over = {}
+            if hp.overlap is not None and hp.overlap != cfg.overlap:
+                over["overlap"] = hp.overlap
+            if hp.stream_grads is not None \
+                    and hp.stream_grads != cfg.stream_grads:
+                over["stream_grads"] = hp.stream_grads
+            if over:
+                import dataclasses
+                cfg = dataclasses.replace(cfg, **over)
         cfg.validate_dependency_rule()
         for a, size in cfg.axis_sizes:
             assert a in mesh.axis_names and mesh.shape[a] == size, \
@@ -323,16 +309,35 @@ class ZeroEngine:
         ls = self._layer_spec(spec)
         cfg = self.leaf_cfg[spec.name] if spec.name in self.leaf_cfg \
             else self.cfg.for_leaf(ls.logical_size)
+        # streaming variants exist only for stacked leaves: a stacked leaf's
+        # per-layer slice is consumed exactly once per pass, so its stage-2
+        # quantization sees the same values as the seed path (bitwise at
+        # n_microbatch=1); a shared non-stacked leaf (tied embeddings) can
+        # be used twice per pass and stays on the primary-layout path
+        stream = bool(spec.stack)
         if spec.kind == MATMUL:
-            return _LeafFns(spec, make_zero_matmul(ls, cfg),
-                            make_zero_gather_q(ls, cfg),
-                            issue=make_gather_issue(ls, cfg),
-                            mm_pre=make_zero_matmul_pre(ls, cfg),
-                            full_pre=make_zero_gather_q_pre(ls, cfg))
+            return _LeafFns(
+                spec, make_zero_matmul(ls, cfg),
+                make_zero_gather_q(ls, cfg),
+                issue=make_gather_issue(ls, cfg),
+                mm_pre=make_zero_matmul_pre(ls, cfg),
+                full_pre=make_zero_gather_q_pre(ls, cfg),
+                mm_stream=make_zero_matmul_stream(ls, cfg) if stream else None,
+                mm_stream_pre=make_zero_matmul_stream_pre(ls, cfg)
+                if stream else None,
+                full_stream=make_zero_gather_q_stream(ls, cfg)
+                if stream else None,
+                full_stream_pre=make_zero_gather_q_stream_pre(ls, cfg)
+                if stream else None)
         if spec.kind == GATHER_Q:
-            return _LeafFns(spec, None, make_zero_gather_q(ls, cfg),
-                            issue=make_gather_issue(ls, cfg),
-                            full_pre=make_zero_gather_q_pre(ls, cfg))
+            return _LeafFns(
+                spec, None, make_zero_gather_q(ls, cfg),
+                issue=make_gather_issue(ls, cfg),
+                full_pre=make_zero_gather_q_pre(ls, cfg),
+                full_stream=make_zero_gather_q_stream(ls, cfg)
+                if stream else None,
+                full_stream_pre=make_zero_gather_q_stream_pre(ls, cfg)
+                if stream else None)
         if spec.kind == PLAIN:
             return _LeafFns(spec, None, make_plain_gather(ls, cfg))
         raise ValueError(spec.kind)
@@ -402,19 +407,57 @@ class ZeroEngine:
     def padded_param_count(self) -> int:
         return sum(self._pad[n] * (s.stack or 1) for n, s in self.specs.items())
 
+    def stream_leaf_names(self) -> tuple[str, ...]:
+        """Leaves on the streaming grad path (stacked MATMUL/GATHER_Q):
+        their microbatch gradients accumulate in fp32 os-shard layout."""
+        return tuple(n for n in sorted(self.specs)
+                     if self.specs[n].stack
+                     and self.specs[n].kind in (MATMUL, GATHER_Q))
+
+    def _prefetch_slot_bytes(self) -> int:
+        """One slot of the 2-slot gather-prefetch buffer (DESIGN.md §3): the
+        largest single layer's gathered wire-format weights — INT8 payload +
+        f32 scales when quantized, compute dtype otherwise — summed over
+        that layer's prefetchable leaves."""
+        per_kind: dict[str, int] = {}
+        bytes_per = jnp.dtype(self.cfg.compute_dtype).itemsize
+        for n, s in self.specs.items():
+            if not s.stack or self.fns[n].issue is None:
+                continue
+            kind = n.split(".", 1)[0]
+            pad = self._pad[n]
+            lcfg = self.leaf_cfg[n]
+            b = pad + 4 * pad // lcfg.quant_block \
+                if lcfg.quantize_weights else bytes_per * pad
+            per_kind[kind] = per_kind.get(kind, 0) + b
+        return max(per_kind.values(), default=0)
+
     def memory_report(self) -> dict[str, float]:
-        """Per-device training-state bytes (paper Tables V/VI analogue)."""
+        """Per-device training-state bytes (paper Tables V/VI analogue).
+
+        ``grad_buffer`` is exact per-leaf accounting of what the step
+        allocates: streamed leaves (``stream_leaf_names``) at fp32 os-shard
+        layout, everything else at the fp32 primary-layout accumulation —
+        one shared formula with ``benchmarks/memory_table.py`` and
+        ``topo.cost`` (partition.grad_buffer_bytes). ``prefetch_buffer`` is
+        the 2-slot gathered-weight buffer the §3 overlap schedule keeps
+        live (0 when overlap is off)."""
         cfg = self.cfg
         psi = self.padded_param_count()
         bytes_per = jnp.dtype(cfg.compute_dtype).itemsize
         primary = bytes_per * psi // cfg.w_degree
         sec = 0 if cfg.sec_degree is None else \
             (psi // cfg.sec_degree + 4 * psi // (cfg.quant_block * cfg.sec_degree))
-        grads_buf = 4 * psi // cfg.w_degree       # fp32 accumulation, primary layout
+        stream = set(self.stream_leaf_names()) if cfg.stream_grads else set()
+        grads_buf = sum(
+            grad_buffer_bytes(cfg, self._pad[n] * (s.stack or 1),
+                              streaming=(n in stream))
+            for n, s in self.specs.items())
         optimizer = 12 * psi // cfg.os_degree
+        prefetch = prefetch_buffer_bytes(cfg, self._prefetch_slot_bytes())
         return dict(primary=primary, secondary=sec, grad_buffer=grads_buf,
-                    optimizer=optimizer,
-                    total=primary + sec + grads_buf + optimizer)
+                    optimizer=optimizer, prefetch_buffer=prefetch,
+                    total=primary + sec + grads_buf + optimizer + prefetch)
 
     # -- init -----------------------------------------------------------------
 
@@ -480,26 +523,118 @@ class ZeroEngine:
 
     # -- the train step ---------------------------------------------------------
 
+    # -- post-backward helpers (shared by both grad regimes) -------------------
+
+    def _zero_sinks(self):
+        """fp32 optimizer-shard gradient sinks for the streamed leaves: the
+        zeros whose cotangent stack IS the os-layout accumulation buffer."""
+        return {n: jnp.zeros(_storage_shape(self.specs[n],
+                                            self.os_shard_len(n)),
+                             jnp.float32)
+                for n in self.stream_leaf_names()}
+
+    def _to_os(self, name: str, g):
+        """Stage 2 + 3 for a primary-layout grad: reduce-scatter over the
+        extra-grad axes, then the cross-replica sync (seed path; streamed
+        leaves arrive here already reduced)."""
+        lcfg = self.leaf_cfg[name]
+        g = g.astype(jnp.float32)
+        flat = g.reshape(-1, g.shape[-1]) if g.ndim > 1 else g[None]
+
+        def one(row):
+            row = col.reduce_scatter_flat(row, lcfg.axes.extra_grad, lcfg)
+            return col.cross_replica_grad(row, lcfg)
+
+        out = jax.vmap(one)(flat)
+        return out if g.ndim > 1 else out[0]
+
+    def _grads_to_os(self, g_primary: dict, g_os: dict) -> dict:
+        """Assemble the full optimizer-shard grad dict in sorted-leaf order
+        (the order the grad-norm fold below depends on): streamed leaves
+        pass through, primary-layout leaves run the seed stage-2/3 chain."""
+        return {n: g_os[n] if n in g_os else self._to_os(n, g_primary[n])
+                for n in sorted(self.specs)}
+
+    def _apply_updates(self, state, os_grads: dict):
+        """AdamW on the master shards + the update all-gather, vectorized
+        over stacked leaves (paper §V-C/D).
+
+        ``adamw_update`` is elementwise and runs on the whole (layers,
+        shard) leaf at once; ``collectives.update_all_gather`` tiles the
+        last axis directly, so stacked leaves rebuild their bf16 primaries
+        with one batched collective instead of a per-row vmap (same data
+        movement, bitwise-identical values)."""
+        from ..optim.adamw import adamw_update
+        cfg, hp = self.cfg, self.hp
+        step = state["step"] + 1
+        lr = self._lr(state["step"])
+        b1, b2 = hp.betas
+        cdt = jnp.dtype(cfg.compute_dtype)
+        new_m, new_v, new_master, new_prim = {}, {}, {}, {}
+        for n in sorted(self.specs):
+            wd = hp.weight_decay \
+                if self.specs[n].kind in (MATMUL, GATHER_Q) else 0.0
+            master, m, v = adamw_update(
+                state["master"][n], state["opt_m"][n], state["opt_v"][n],
+                os_grads[n], step=step, lr=lr, beta1=b1, beta2=b2,
+                eps=hp.eps, weight_decay=wd)
+            new_m[n], new_v[n], new_master[n] = m, v, master
+            new_prim[n] = col.update_all_gather(master, self.leaf_cfg[n], cdt)
+        return dict(primaries=new_prim, master=new_master,
+                    opt_m=new_m, opt_v=new_v, step=step), lr
+
     def make_train_step(self, loss_fn: Callable, batch_specs: dict[str, P]):
-        """loss_fn(view, batch) -> (loss_sum, token_count). Returns jit'd step."""
+        """loss_fn(view, batch) -> (loss_sum, token_count). Returns jit'd step.
+
+        Two gradient regimes (DESIGN.md §8):
+
+        * seed (``stream_grads=False``): differentiate w.r.t. the primaries;
+          microbatch grads accumulate in fp32 **primary layout**
+          (4*psi/w_degree), then one stage-2 reduce-scatter + cross-replica
+          sync per step lifts them to optimizer-shard layout (``_to_os``).
+        * streaming (``stream_grads=True``): stacked-leaf cotangents leave
+          the backward already reduced — differentiate w.r.t. the os-shard
+          **sinks** (plus the few non-stacked/PLAIN primaries), so the
+          accumulation buffer is fp32 os-shard layout (4*psi/os_degree) and
+          the per-layer grad collectives overlap the backward. Bitwise
+          identical to the seed regime at n_microbatch=1; at n_microbatch>1
+          the stage-2 quantization applies per microbatch (within
+          block-quant tolerance of the seed path, still bitwise across
+          kernel impls and process layouts).
+        """
         cfg = self.cfg
         hp = self.hp
         mesh = self.mesh
         state_specs = self.state_in_specs()
+        stream = cfg.stream_grads
+        snames = set(self.stream_leaf_names()) if stream else set()
 
         def local_step(state, batch):
             primaries = state["primaries"]
 
-            def mb_loss(prims, mb):
-                view = ParamView(self.fns, prims, overlap=cfg.overlap)
+            def mb_loss(diff, mb):
+                if stream:
+                    legacy_p, sinks = diff
+                    prims = dict(primaries)
+                    prims.update(legacy_p)
+                else:
+                    prims, sinks = diff, None
+                view = ParamView(self.fns, prims, overlap=cfg.overlap,
+                                 sinks=sinks)
                 loss_sum, tok = loss_fn(view, mb)
                 gtok = lax.psum(tok.astype(jnp.float32), cfg.axes.all)
                 return loss_sum.astype(jnp.float32) / jnp.maximum(gtok, 1.0), gtok
 
+            if stream:
+                diff0 = ({n: p for n, p in primaries.items()
+                          if n not in snames}, self._zero_sinks())
+            else:
+                diff0 = primaries
+
             n_mb = hp.n_microbatch
             if n_mb == 1:
                 (loss, gtok), grads = jax.value_and_grad(mb_loss, has_aux=True)(
-                    primaries, batch)
+                    diff0, batch)
             else:
                 def split(x):
                     return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
@@ -508,13 +643,13 @@ class ZeroEngine:
                 def acc(carry, mb):
                     gacc, lacc, tacc = carry
                     (l, t), g = jax.value_and_grad(mb_loss, has_aux=True)(
-                        primaries, mb)
+                        diff0, mb)
                     gacc = jax.tree.map(
                         lambda a, b: a + b.astype(jnp.float32), gacc, g)
                     return (gacc, lacc + l, tacc + t), None
 
                 g0 = jax.tree.map(
-                    lambda p: jnp.zeros(p.shape, jnp.float32), primaries)
+                    lambda p: jnp.zeros(p.shape, jnp.float32), diff0)
                 (grads, loss, gtok), _ = lax.scan(
                     acc, (g0, jnp.zeros((), jnp.float32),
                           jnp.zeros((), jnp.float32)), mbs)
@@ -531,21 +666,8 @@ class ZeroEngine:
             # any summation order.
             loss_rep = col.det_psum(loss, cfg.axes.all)
 
-            # stage 2 + 3: primary-layout grads -> optimizer-shard grads
-            def to_os(name, g):
-                lcfg = self.leaf_cfg[name]
-                g = g.astype(jnp.float32)
-                flat = g.reshape(-1, g.shape[-1]) if g.ndim > 1 else g[None]
-
-                def one(row):
-                    row = col.reduce_scatter_flat(row, lcfg.axes.extra_grad,
-                                                  lcfg)
-                    return col.cross_replica_grad(row, lcfg)
-
-                out = jax.vmap(one)(flat)
-                return out if g.ndim > 1 else out[0]
-
-            os_grads = {n: to_os(n, g) for n, g in grads.items()}
+            g_legacy, g_sinks = grads if stream else (grads, {})
+            os_grads = self._grads_to_os(g_legacy, g_sinks)
 
             # grad-norm clip (global: os shards partition the full gradient).
             # det_psum: gnorm feeds the clip scale applied to every gradient,
@@ -556,29 +678,7 @@ class ZeroEngine:
             scale = jnp.minimum(1.0, hp.grad_clip / (gnorm + 1e-6))
             os_grads = {n: g * scale for n, g in os_grads.items()}
 
-            # AdamW on the master shard (pure per-shard update: paper §V-C)
-            from ..optim.adamw import adamw_update
-            step = state["step"] + 1
-            lr = self._lr(state["step"])
-            b1, b2 = hp.betas
-            new_m, new_v, new_master, new_prim = {}, {}, {}, {}
-            for n in sorted(self.specs):
-                wd = hp.weight_decay if self.specs[n].kind in (MATMUL, GATHER_Q) else 0.0
-                master, m, v = adamw_update(
-                    state["master"][n], state["opt_m"][n], state["opt_v"][n],
-                    os_grads[n], step=step, lr=lr, beta1=b1, beta2=b2,
-                    eps=hp.eps, weight_decay=wd)
-                new_m[n], new_v[n], new_master[n] = m, v, master
-                # update all-gather: os shard -> primary shard (bf16)
-                ms = master.reshape(-1, master.shape[-1]) if master.ndim > 1 else master[None]
-                lcfg = self.leaf_cfg[n]
-                gathered = jax.vmap(
-                    lambda row: col.update_all_gather(row, lcfg,
-                                                      jnp.dtype(cfg.compute_dtype)))(ms)
-                new_prim[n] = gathered if master.ndim > 1 else gathered[0]
-
-            new_state = dict(primaries=new_prim, master=new_master,
-                             opt_m=new_m, opt_v=new_v, step=step)
+            new_state, lr = self._apply_updates(state, os_grads)
             # gtok: global token count summed over every microbatch (with
             # n_mb == 1 it is the single microbatch's global count). Both it
             # and loss_rep/gnorm are psummed over cfg.axes.all — which

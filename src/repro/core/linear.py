@@ -26,6 +26,16 @@ accumulation (paper §V-B/C).
 ``zero_gather_q`` is the same machinery for weights consumed by non-matmul
 ops (embedding lookups, scan parameters): quantized gather forward, quantized
 reduce-scatter backward.
+
+The ``*_stream`` variants (DESIGN.md §8) take an extra optimizer-shard
+**sink** argument: their backward runs the *full* reduce chain — stage-1 RS
+over W (issue/wait split of the INT4 a2a via ``core/schedule.py``), the
+seed path's cast through the primary dtype, stage-2 RS over E and the
+cross-replica sync — inside the (reverse) scan step, and emits the
+fully-reduced fp32 os-layout row as the sink's cotangent. The primary gets
+an exact-zero cotangent, so the engine can accumulate microbatch gradients
+in os-shard layout (4*psi/os_degree) instead of the primary-layout pytree
+(4*psi/w_degree).
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ from jax import lax
 
 from ..kernels import ops
 from . import collectives as col
+from . import schedule as sched
 from .partition import LeafSpec, ZeroConfig, padded_flat_size
 
 
@@ -97,14 +108,15 @@ def _gather_full_q(primary, spec: LeafSpec, cfg: ZeroConfig):
 
 
 def _regather_bwd(primary, sec_q, sec_s, spec: LeafSpec, cfg: ZeroConfig):
-    """Backward weight re-materialization (secondary if present, else primary)."""
+    """Backward weight re-materialization (secondary if present, else primary).
+
+    issue (schedule.regather_issue: ends at the collective) + wait (local
+    dequant) — op-for-op the fused quant_all_gather_int8 / gather_secondary.
+    """
     n = spec.logical_size
-    if sec_q is not None:
-        full_flat = col.gather_secondary(sec_q, sec_s, cfg.axes.secondary, cfg,
-                                         _dtype(cfg))
-    elif cfg.quantize_weights:
-        full_flat, _, _ = col.quant_all_gather_int8(primary, cfg.axes.weight,
-                                                    cfg, _dtype(cfg))
+    if sec_q is not None or cfg.quantize_weights:
+        qf, sf = sched.regather_issue(primary, sec_q, sec_s, cfg)
+        full_flat = sched.regather_wait(qf, sf, cfg, _dtype(cfg))
     else:
         full_flat = col.all_gather_flat(primary, cfg.axes.weight).astype(_dtype(cfg))
     return lax.slice(full_flat, (0,), (n,)).reshape(spec.shape)
@@ -113,18 +125,49 @@ def _regather_bwd(primary, sec_q, sec_s, spec: LeafSpec, cfg: ZeroConfig):
 def _regather_bwd_q(primary, sec_q, sec_s, cfg: ZeroConfig):
     """Backward re-gather in wire format -> (qf, sf); same collectives as
     ``_regather_bwd``, dequant deferred to the fused dX matmul."""
-    if sec_q is not None:
-        return col.gather_secondary_q(sec_q, sec_s, cfg.axes.secondary, cfg)
-    return col.gather_issue_int8(primary, cfg.axes.weight, cfg)
+    return sched.regather_issue(primary, sec_q, sec_s, cfg)
+
+
+def _grad_stage1(dw, spec: LeafSpec, cfg: ZeroConfig):
+    """Stage-1: full dense weight grad -> primary-layout fp32 shard.
+
+    The INT4 a2a reduce-scatter over the W axes, via the issue/wait split
+    (schedule.py machine 3) — composition is bitwise the fused
+    ``reduce_scatter_flat``; the split lets XLA overlap the a2a with the
+    surrounding backward matmuls (nothing downstream of the issue depends
+    on this layer's compute)."""
+    padded = padded_flat_size(spec.logical_size, cfg)
+    flat = _pad_flat(dw, padded)
+    tok = sched.grad_rs_issue(flat, cfg.axes.weight, cfg)
+    return sched.grad_rs_wait(tok, cfg, out_dtype=jnp.float32)
 
 
 def _grad_to_primary_shard(dw, spec: LeafSpec, cfg: ZeroConfig, primary_dtype):
     """Stage-1: full dense weight grad -> primary-shard cotangent (INT4 a2a RS)."""
-    padded = padded_flat_size(spec.logical_size, cfg)
-    flat = _pad_flat(dw, padded)
-    shard = col.reduce_scatter_flat(flat, cfg.axes.weight, cfg,
-                                    out_dtype=jnp.float32)
-    return shard.astype(primary_dtype)
+    return _grad_stage1(dw, spec, cfg).astype(primary_dtype)
+
+
+def _grad_to_os_shard(dw, spec: LeafSpec, cfg: ZeroConfig, primary_dtype):
+    """The streaming tap (DESIGN.md §8): dense weight grad -> fully-reduced
+    fp32 optimizer-shard row, emitted inside the backward.
+
+    Op-for-op the seed pipeline for one layer: stage-1 RS over W, the cast
+    through the primary dtype (the seed path accumulates the primary-layout
+    cotangent in that dtype before ``to_os`` lifts it back to f32 — kept so
+    streaming is bitwise identical at n_microbatch=1), stage-2 RS over E
+    (issue/wait split), cross-replica sync over R."""
+    g1 = _grad_stage1(dw, spec, cfg)
+    g1 = g1.astype(primary_dtype).astype(jnp.float32)
+    tok = sched.grad_rs_issue(g1, cfg.axes.extra_grad, cfg)
+    g2 = sched.grad_rs_wait(tok, cfg, out_dtype=jnp.float32)
+    return col.cross_replica_grad(g2, cfg, jnp.float32)
+
+
+def _zero_primary_cotangent(spec: LeafSpec, cfg: ZeroConfig):
+    """Exact-zero cotangent for the primary arg of the ``*_stream`` VJPs
+    (the true gradient leaves through the sink; XLA drops these zeros)."""
+    shard = padded_flat_size(spec.logical_size, cfg) // cfg.w_degree
+    return jnp.zeros((shard,), _dtype(cfg))
 
 
 def _mm_apply(x, w, transpose, cfg: ZeroConfig):
@@ -150,12 +193,14 @@ def _mm_apply_q(x, qf, sf, transpose, spec: LeafSpec, cfg: ZeroConfig):
     return y2.reshape(x.shape[:-1] + (out_dim,))
 
 
-def _mm_bwd(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
-    """Shared matmul backward for the inline and prefetched VJPs.
+def _mm_bwd_core(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
+    """Shared matmul backward math for every VJP flavor (inline, prefetched,
+    streaming): returns ``(gx, dw)`` with ``dw`` the dense logical-shape
+    weight cotangent, *before* any reduce-scatter.
 
-    Single implementation on purpose: overlap on/off must stay
-    bitwise-identical (test_overlap.py), so there is exactly one copy of the
-    re-gather / dX / dW math to keep in sync.
+    Single implementation on purpose: overlap/streaming on/off must stay
+    bitwise-identical (test_overlap.py, test_stream_grads.py), so there is
+    exactly one copy of the re-gather / dX / dW math to keep in sync.
     """
     x, primary, sec_q, sec_s = res
     if _fusable(spec, cfg):
@@ -174,9 +219,19 @@ def _mm_bwd(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
     dw2 = jnp.matmul(x2.T, g2)
     if transpose:
         dw2 = dw2.T
-    dw_shard = _grad_to_primary_shard(dw2.reshape(spec.shape), spec, cfg,
-                                      _dtype(cfg))
-    return gx, dw_shard
+    return gx, dw2.reshape(spec.shape)
+
+
+def _mm_bwd(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
+    """Inline/prefetched backward: primary-shard weight cotangent."""
+    gx, dw = _mm_bwd_core(res, g, transpose, spec, cfg)
+    return gx, _grad_to_primary_shard(dw, spec, cfg, _dtype(cfg))
+
+
+def _mm_bwd_stream(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
+    """Streaming backward: fully-reduced fp32 os-shard weight cotangent."""
+    gx, dw = _mm_bwd_core(res, g, transpose, spec, cfg)
+    return gx, _grad_to_os_shard(dw, spec, cfg, _dtype(cfg))
 
 
 def make_zero_matmul(spec: LeafSpec, cfg: ZeroConfig):
@@ -340,6 +395,129 @@ def make_zero_gather_q_pre(spec: LeafSpec, cfg: ZeroConfig):
         del res
         return (_grad_to_primary_shard(g, spec, cfg, _dtype(cfg)),
                 _buf_zero_cotangent(spec, cfg))
+
+    full.defvjp(fwd, bwd)
+    return full
+
+
+# ---------------------------------------------------------------------------
+# Streaming-grad variants (DESIGN.md §8)
+#
+# Same forwards as the inline/prefetched primitives, plus an optimizer-shard
+# ``sink`` argument that is *ignored* by the forward: its only role is to
+# give the backward a leaf to hang the fully-reduced fp32 os-layout
+# cotangent on.  The scan stacks those rows into the (layers, os_shard)
+# gradient accumulation — the primary's cotangent is exact zero (and DCE'd:
+# the engine never differentiates w.r.t. the primaries in streaming mode),
+# so the 4*psi/w_degree primary-layout cotangent stack is never built.
+# ---------------------------------------------------------------------------
+
+def make_zero_matmul_stream(spec: LeafSpec, cfg: ZeroConfig):
+    """mm(x, primary, sink) with the streaming (os-shard cotangent) VJP."""
+    assert len(spec.shape) >= 2
+    fuse = _fusable(spec, cfg)
+
+    @partial(jax.custom_vjp, nondiff_argnums=(3,))
+    def mm(x, primary, sink, transpose=False):
+        if fuse:
+            qf, sf, _, _ = _gather_full_q(primary, spec, cfg)
+            return _mm_apply_q(x, qf, sf, transpose, spec, cfg)
+        w, _, _ = _gather_full(primary, spec, cfg)
+        return _mm_apply(x, w, transpose, cfg)
+
+    def fwd(x, primary, sink, transpose):
+        if fuse:
+            qf, sf, sec_q, sec_s = _gather_full_q(primary, spec, cfg)
+            y = _mm_apply_q(x, qf, sf, transpose, spec, cfg)
+        else:
+            w, sec_q, sec_s = _gather_full(primary, spec, cfg)
+            y = _mm_apply(x, w, transpose, cfg)
+        if sec_q is None:
+            return y, (x, primary, None, None)
+        return y, (x, None, sec_q, sec_s)
+
+    def bwd(transpose, res, g):
+        gx, os_row = _mm_bwd_stream(res, g, transpose, spec, cfg)
+        return gx, _zero_primary_cotangent(spec, cfg), os_row
+
+    mm.defvjp(fwd, bwd)
+    return mm
+
+
+def make_zero_matmul_stream_pre(spec: LeafSpec, cfg: ZeroConfig):
+    """mm(x, primary, buf, sink): prefetched forward + streaming backward."""
+    assert len(spec.shape) >= 2
+    fuse = _fusable(spec, cfg)
+
+    def _apply(x, buf, transpose):
+        if fuse:
+            qf, sf = buf
+            y = _mm_apply_q(x, qf, sf, transpose, spec, cfg)
+            if cfg.axes.secondary is not None:
+                sec_q, sec_s = col.secondary_slice(qf, sf, cfg.axes.secondary,
+                                                   cfg)
+            else:
+                sec_q = sec_s = None
+            return y, sec_q, sec_s
+        w, sec_q, sec_s = _consume_buf(buf, spec, cfg)
+        return _mm_apply(x, w, transpose, cfg), sec_q, sec_s
+
+    @partial(jax.custom_vjp, nondiff_argnums=(4,))
+    def mm(x, primary, buf, sink, transpose=False):
+        y, _, _ = _apply(x, buf, transpose)
+        return y
+
+    def fwd(x, primary, buf, sink, transpose):
+        y, sec_q, sec_s = _apply(x, buf, transpose)
+        if sec_q is None:
+            return y, (x, primary, None, None)
+        return y, (x, None, sec_q, sec_s)
+
+    def bwd(transpose, res, g):
+        gx, os_row = _mm_bwd_stream(res, g, transpose, spec, cfg)
+        return (gx, _zero_primary_cotangent(spec, cfg),
+                _buf_zero_cotangent(spec, cfg), os_row)
+
+    mm.defvjp(fwd, bwd)
+    return mm
+
+
+def make_zero_gather_q_stream(spec: LeafSpec, cfg: ZeroConfig):
+    """full(primary, sink) -> dense tensor with the streaming VJP."""
+
+    @jax.custom_vjp
+    def full(primary, sink):
+        w, _, _ = _gather_full(primary, spec, cfg)
+        return w
+
+    def fwd(primary, sink):
+        return full(primary, sink), ()
+
+    def bwd(res, g):
+        del res
+        return (_zero_primary_cotangent(spec, cfg),
+                _grad_to_os_shard(g, spec, cfg, _dtype(cfg)))
+
+    full.defvjp(fwd, bwd)
+    return full
+
+
+def make_zero_gather_q_stream_pre(spec: LeafSpec, cfg: ZeroConfig):
+    """full(primary, buf, sink): prefetched forward + streaming backward."""
+
+    @jax.custom_vjp
+    def full(primary, buf, sink):
+        w, _, _ = _consume_buf(buf, spec, cfg)
+        return w
+
+    def fwd(primary, buf, sink):
+        return full(primary, buf, sink), ()
+
+    def bwd(res, g):
+        del res
+        return (_zero_primary_cotangent(spec, cfg),
+                _buf_zero_cotangent(spec, cfg),
+                _grad_to_os_shard(g, spec, cfg, _dtype(cfg)))
 
     full.defvjp(fwd, bwd)
     return full

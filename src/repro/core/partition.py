@@ -65,6 +65,13 @@ class ZeroConfig:
     overlap: bool = False               # double-buffered prefetch of layer i+1's
     # weight all-gather during layer i's compute (DESIGN.md §3). Schedule-only:
     # per-step comm volume and forward numerics are unchanged (test_overlap.py).
+    stream_grads: bool = False          # streaming gradient path (DESIGN.md §8):
+    # stacked-leaf weight cotangents run the full reduce chain (stage-1 RS
+    # over W -> stage-2 RS over E -> cross-replica over R) *inside* the
+    # reverse scan step and accumulate in fp32 optimizer-shard layout, so the
+    # per-device grad buffer shrinks from 4*psi/w_degree to ~4*psi/os_degree
+    # and the per-layer grad collectives overlap the backward matmuls.
+    # Layout-neutral: not part of fingerprint() (checkpoints interchange).
     impl: str | None = None             # kernel impl (jnp | pallas |
     # pallas_interpret). None inherits the process default
     # (kernels.ops.set_default_impl — the launchers' --kernel-impl flag and
@@ -234,9 +241,43 @@ def weight_memory_bytes(cfg: ZeroConfig, psi: int) -> int:
     return primary + sec
 
 
-def grad_memory_bytes(cfg: ZeroConfig, psi: int) -> int:
-    """Paper Table VI: per-device gradient accumulation buffer (fp32 here)."""
-    return 4 * psi // cfg.g_degree
+def grad_memory_bytes(cfg: ZeroConfig, psi: int, *,
+                      grad_bytes: int = 4) -> int:
+    """Paper Table VI: per-device gradient buffer at the *grad-shard* degree.
+
+    ``grad_bytes``: 4 = this repo's fp32 accumulation, 2 = the paper's fp16
+    accounting (benchmarks/memory_table.py prints both, same formula)."""
+    return grad_bytes * psi // cfg.g_degree
+
+
+def grad_buffer_bytes(cfg: ZeroConfig, psi: int, *,
+                      streaming: bool | None = None,
+                      grad_bytes: int = 4) -> int:
+    """Bytes of the gradient buffer the engine *actually allocates*.
+
+    The seed path accumulates microbatch gradients in **primary layout**
+    (``grad_bytes * psi / w_degree`` — the full per-layer cotangent stack,
+    pre stage-2), strictly more than the paper's Table VI grad-shard figure
+    whenever E is non-trivial. The streaming path (``ZeroConfig.
+    stream_grads``, DESIGN.md §8) reduces each layer's cotangent to
+    **optimizer-shard layout inside the backward**, shrinking the buffer to
+    ``grad_bytes * psi / os_degree``. One formula for ``ZeroEngine.
+    memory_report``, ``topo.cost`` and ``benchmarks/memory_table.py`` so the
+    three can never drift (tests/test_stream_grads.py cross-checks)."""
+    if streaming is None:
+        streaming = cfg.stream_grads
+    deg = cfg.os_degree if streaming else cfg.w_degree
+    return grad_bytes * psi // deg
+
+
+def prefetch_buffer_bytes(cfg: ZeroConfig, layer_bytes: int) -> int:
+    """Per-device bytes of the 2-slot gather-prefetch buffer (DESIGN.md §3).
+
+    ``layer_bytes`` is one layer's worth of gathered weights in wire format
+    (INT8 payload + f32 scales when quantized, compute dtype otherwise) —
+    ``ZeroEngine.memory_report`` computes it per scheme; zero when overlap
+    is off."""
+    return 2 * layer_bytes if cfg.overlap else 0
 
 
 def optimizer_memory_bytes(cfg: ZeroConfig, psi: int) -> int:

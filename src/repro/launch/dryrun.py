@@ -170,6 +170,8 @@ def main():
     ap.add_argument("--cross-replica", default="",
                     choices=["", "allreduce", "reduce_scatter"])
     ap.add_argument("--quant-update", action="store_true")
+    ap.add_argument("--stream-grads", action="store_true",
+                    help="lower the streaming gradient path (DESIGN.md §8)")
     ap.add_argument("--kernel-impl", default="",
                     choices=["", "jnp", "pallas", "pallas_interpret"],
                     help="quantization-kernel implementation to lower with "
@@ -194,6 +196,8 @@ def main():
         engine_opts["cross_replica"] = args.cross_replica
     if args.quant_update:
         engine_opts["quantize_update_gather"] = True
+    if args.stream_grads:
+        engine_opts["stream_grads"] = True
     if args.kernel_impl:
         engine_opts["impl"] = args.kernel_impl
 

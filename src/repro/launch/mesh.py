@@ -106,8 +106,13 @@ def scheme_config(scheme: str, mesh, *, psi=None, n_layers=None,
         import dataclasses
 
         from ..topo import plan_for_mesh
+        # stream_grads changes the pricing regime (overlappable grad RS,
+        # os-layout grad memory), not just the engine: hand it to the
+        # planner so the budget search admits what streaming actually fits
+        stream = bool(over.pop("stream_grads", False))
         cfg = plan_for_mesh(mesh, psi=psi, n_layers=n_layers,
-                            memory_budget=memory_budget, top_k=1)[0].cfg
+                            memory_budget=memory_budget,
+                            stream_grads=stream, top_k=1)[0].cfg
         return dataclasses.replace(cfg, **over) if over else cfg
     from ..core.partition import preset
     tiers = zero_tiers(mesh)

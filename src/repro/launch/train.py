@@ -33,6 +33,12 @@ def main():
     ap.add_argument("--overlap", action="store_true",
                     help="double-buffered prefetch of the per-layer weight "
                          "all-gather (DESIGN.md §3)")
+    ap.add_argument("--stream-grads", action="store_true",
+                    help="streaming gradient path (DESIGN.md §8): per-layer "
+                         "grad reduce-scatter fused into the backward, "
+                         "microbatch grads accumulated in fp32 "
+                         "optimizer-shard layout (grad buffer 4*psi/os "
+                         "instead of 4*psi/w)")
     ap.add_argument("--kernel-impl", default=None,
                     choices=["jnp", "pallas", "pallas_interpret"],
                     help="quantization-kernel implementation (DESIGN.md §5):"
@@ -107,8 +113,8 @@ def main():
     dtype_kw = {"compute_dtype": args.compute_dtype} \
         if args.compute_dtype else {}
     cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block,
-                        overlap=args.overlap, impl=args.kernel_impl,
-                        **dtype_kw, **planner_kw)
+                        overlap=args.overlap, stream_grads=args.stream_grads,
+                        impl=args.kernel_impl, **dtype_kw, **planner_kw)
     if args.scheme == "auto":
         a = cfg.axes
         log0(f"planner choice: w={a.weight} e={a.extra_grad} r={a.replica} "
@@ -116,10 +122,11 @@ def main():
              f"int4g={cfg.quantize_grads}")
     hp = TrainHparams(lr=args.lr, total_steps=args.steps,
                       warmup_steps=max(args.steps // 20, 2),
-                      overlap=args.overlap)
+                      overlap=args.overlap, stream_grads=args.stream_grads)
     eng = ZeroEngine(model.leaf_specs(), cfg, mesh, hp)
     log0(f"arch={arch.name} scheme={cfg.name} mesh={dict(mesh.shape)} "
          f"params={eng.param_count():,} overlap={eng.cfg.overlap} "
+         f"stream_grads={eng.cfg.stream_grads} "
          f"kernel_impl={eng.cfg.impl or 'jnp'} "
          f"processes={dcfg.num_processes} ({dcfg.source})")
     log0(f"per-device state bytes: {eng.memory_report()}")

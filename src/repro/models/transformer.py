@@ -6,7 +6,11 @@ are stored as one stacked leaf group and executed with ``lax.scan`` (uniform
 models) or a Python loop over the pattern (gemma3's 5:1 local:global, jamba's
 mamba/attention interleave). Every weight access goes through the ZeRO
 ``ParamView`` — the per-layer quantized all-gather therefore happens inside
-the scan body, reproducing ZeRO-3's per-module communication schedule.
+the scan body, reproducing ZeRO-3's per-module communication schedule, and
+the layer loops route through ``view.scan_layers``/``loop_layers`` (the
+comm-schedule layer, core/schedule.py) so the engine can rotate its gather
+prefetch buffers and thread the streaming-gradient sinks (DESIGN.md §3/§8)
+through them without the model code knowing either machine exists.
 
 Caches: full-attention KV and MLA latent caches are *sequence-sharded* over
 the mesh's model axes with exact distributed flash-decode; sliding-window
@@ -592,10 +596,11 @@ class LM:
         """Full-sequence pass. Returns (x, aux, caches_by_kind | None).
 
         The layer loops route through ``view.scan_layers``/``loop_layers``
-        (the ZeRO ParamView protocol) so the engine's double-buffered
-        gather prefetch (core/prefetch.py) can rotate its buffers through
-        them; plain views without those methods fall back to the inline
-        scan/loop with identical semantics.
+        (the ZeRO ParamView protocol) so the engine's comm-schedule layer
+        (core/schedule.py) can rotate its gather-prefetch buffers and
+        thread the streaming grad sinks through them; plain views without
+        those methods fall back to the inline scan/loop with identical
+        semantics.
         """
         cfg = self.cfg
         aux0 = jnp.zeros((), jnp.float32)

@@ -16,9 +16,9 @@ emits per train step (DESIGN.md §4):
                      inside every backward pass (linear._grad_to_primary_
                      shard), INT4 all-to-all based when ``quantize_grads``
                      (collectives.a2a_quant_reduce_scatter);
-  per step (after microbatch accumulation):
+  per step (after microbatch accumulation; seed regime):
     grad_rs_e      — stage-2 reduce-scatter of the accumulated primary-layout
-                     grads over the E axes (engine ``to_os``; once per step,
+                     grads over the E axes (engine ``_to_os``; once per step,
                      strictly less communication than per-microbatch);
     cross_replica  — replica-tier gradient sync (allreduce+select, or the
                      beyond-paper reduce_scatter at half volume);
@@ -26,10 +26,19 @@ emits per train step (DESIGN.md §4):
                      (collectives.update_all_gather), INT8-halved when
                      ``quantize_update_gather``.
 
-The two grad-RS stages telescope: ``grad_rs_w + grad_rs_e =
-g_bytes * (dg-1)/dg``, exactly the single-stage Table VIII figure, so byte
-counts stay comparable with ``benchmarks/comm_volume.py`` while the *timing*
-charges each stage at its own tier and cadence.
+With ``Workload.stream_grads`` (the streaming grad path, DESIGN.md §8),
+``grad_rs_e`` and ``cross_replica`` move into the backward layer loop:
+per-microbatch cadence (volume x n_microbatch, latency per layer) but
+*overlappable* with the backward matmuls, so only the update gather stays
+in the exposed post-backward section (``StepCost.exposed_s``), and grad
+memory is charged at os-shard layout (``partition.grad_buffer_bytes``).
+
+In the seed regime the two grad-RS stages telescope: ``grad_rs_w +
+grad_rs_e = g_bytes * (dg-1)/dg``, exactly the single-stage Table VIII
+figure, so byte counts stay comparable with ``benchmarks/comm_volume.py``
+while the *timing* charges each stage at its own tier and cadence (the
+streaming regime trades n_microbatch x the stage-2 bytes for the overlap
+and the memory drop).
 
 Each phase costs ``volume / bottleneck_bandwidth + hops * per_hop_latency``
 where the bottleneck link is the slowest axis the collective spans and
@@ -48,13 +57,17 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from ..core.partition import (ZeroConfig, grad_memory_bytes,
-                              optimizer_memory_bytes, weight_memory_bytes)
+from ..core.partition import (ZeroConfig, grad_buffer_bytes,
+                              grad_memory_bytes, optimizer_memory_bytes,
+                              weight_memory_bytes)
 from .model import Topology
 
 PER_MICROBATCH = ("fwd_allgather", "bwd_allgather", "grad_rs_w")
 PER_STEP = ("grad_rs_e", "cross_replica", "update_gather")
 PHASES = PER_MICROBATCH + PER_STEP
+# phases the streaming grad path (DESIGN.md §8) moves into the backward
+# layer loop: per-microbatch cadence, overlappable with the backward matmuls
+STREAMED = ("grad_rs_e", "cross_replica")
 
 
 @dataclass(frozen=True)
@@ -71,6 +84,12 @@ class Workload:
     # unfused pipeline: every gathered weight is dequantized to bf16 in HBM
     # and re-read by the matmul, and the a2a-received grad chunks round-trip
     # once more before the reduction (step_cost's kernel_s term).
+    stream_grads: bool = False        # streaming grad regime (DESIGN.md §8):
+    # stage-2 RS + cross-replica run per layer per microbatch inside the
+    # backward (volume x n_microbatch, but overlappable) instead of once per
+    # step fully exposed, and grad memory is charged at os-shard layout —
+    # which is what lets the planner's memory-budget search admit schemes it
+    # previously rejected.
 
 
 def phase_volumes(cfg: ZeroConfig, psi: float) -> dict[str, float]:
@@ -140,6 +159,11 @@ class StepCost:
     kernel_s: float = 0.0             # unfused quant/dequant HBM round-trips
     # (zero when Workload.fused_kernels: the dequant rides the matmul's
     # VMEM pipeline and never touches HBM)
+    exposed_s: float = 0.0            # comm seconds that CANNOT hide under
+    # compute: the serial post-backward section (stage-2 RS, cross-replica,
+    # update gather run after the last backward matmul). The streaming grad
+    # regime moves the grad phases into the backward layer loop, leaving
+    # only the update gather exposed — exposed-comm pricing (DESIGN.md §8).
 
     @property
     def comm_total_s(self) -> float:
@@ -150,18 +174,29 @@ class StepCost:
         return self.memory["total"]
 
     def step_s(self, hidden_fraction: float = 0.6) -> float:
-        """Wall-clock with partial compute/comm overlap."""
-        c, m = self.compute_s + self.kernel_s, self.comm_total_s
-        return max(c, m) + (1 - hidden_fraction) * min(c, m)
+        """Wall-clock: overlappable comm partially hides under compute;
+        exposed comm (the serial post-backward phases) adds on top."""
+        c = self.compute_s + self.kernel_s
+        m = self.comm_total_s - self.exposed_s
+        return max(c, m) + (1 - hidden_fraction) * min(c, m) + self.exposed_s
 
 
-def memory_bytes(cfg: ZeroConfig, psi: float) -> dict[str, float]:
-    """Per-device training-state bytes (paper Tables V/VI formulas)."""
+def memory_bytes(cfg: ZeroConfig, psi: float, *,
+                 streaming: bool | None = None) -> dict[str, float]:
+    """Per-device training-state bytes.
+
+    Weights/optimizer follow the paper Table V/VI formulas; grads are
+    charged at the buffer the engine *actually allocates*
+    (``partition.grad_buffer_bytes``): fp32 primary layout on the seed
+    path, fp32 os-shard layout when streaming — the memory-budget lever of
+    the streaming grad regime. ``grads_table`` keeps the paper's Table VI
+    grad-shard figure for reference."""
     weights = weight_memory_bytes(cfg, int(psi))
-    grads = grad_memory_bytes(cfg, int(psi))
+    grads = grad_buffer_bytes(cfg, int(psi), streaming=streaming)
     opt = optimizer_memory_bytes(cfg, int(psi))
-    return dict(weights=weights, grads=grads, optimizer=opt,
-                total=weights + grads + opt)
+    return dict(weights=weights, grads=grads,
+                grads_table=grad_memory_bytes(cfg, int(psi)),
+                optimizer=opt, total=weights + grads + opt)
 
 
 def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
@@ -169,6 +204,11 @@ def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
     """Price one train step of ``wl`` under ``cfg`` on ``topo``."""
     vols = phase_volumes(cfg, wl.psi)
     axes = phase_axes(cfg)
+    # streaming regime: the stage-2 RS and cross-replica sync run per layer
+    # per microbatch inside the backward (overlappable); otherwise they are
+    # once-per-step and fully exposed, like the update gather
+    in_loop = set(PER_MICROBATCH) | (set(STREAMED) if wl.stream_grads
+                                     else set())
     comm = {}
     for phase in PHASES:
         ax = axes[phase]
@@ -178,11 +218,12 @@ def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
             continue
         wire = vols[phase] / topo.bandwidth(ax)
         hops = (group - 1) * topo.latency(ax)
-        if phase in PER_MICROBATCH:
+        if phase in in_loop:
             # inside the layer loop: one collective per layer per microbatch
             comm[phase] = wl.n_microbatch * (wire + wl.n_layers * hops)
         else:
             comm[phase] = wire + hops
+    exposed_s = sum(comm[ph] for ph in PER_STEP if ph not in in_loop)
     tokens_per_device = wl.n_microbatch * wl.tokens_per_device_mb
     compute_s = 6.0 * wl.psi * tokens_per_device / topo.flops_per_device
     kernel_s = 0.0
@@ -199,11 +240,12 @@ def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
         if cfg.quantize_grads:
             kb += wl.n_microbatch * 2 * 4.0 * wl.psi / cfg.w_degree
         kernel_s = kb / topo.hbm_bw
-    mem = memory_bytes(cfg, wl.psi)
+    mem = memory_bytes(cfg, wl.psi, streaming=wl.stream_grads
+                       or cfg.stream_grads)
     budget = topo.hbm_bytes if memory_budget is None else memory_budget
     return StepCost(comm_s=comm, volumes=vols, compute_s=compute_s,
                     memory=mem, fits=mem["total"] <= budget,
-                    kernel_s=kernel_s)
+                    kernel_s=kernel_s, exposed_s=exposed_s)
 
 
 def tflops_per_device(cfg: ZeroConfig, topo: Topology, wl: Workload) -> float:

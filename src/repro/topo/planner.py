@@ -103,6 +103,10 @@ def plan(topo: Topology, wl: Workload, *,
     """
     plans = []
     for cfg in enumerate_candidates(topo, quantize=quantize):
+        if wl.stream_grads:
+            # carry the regime on the config so an engine built from the
+            # chosen plan actually streams (scheme_config("auto"))
+            cfg = dataclasses.replace(cfg, stream_grads=True)
         c = step_cost(cfg, topo, wl, memory_budget=memory_budget)
         plans.append(Plan(cfg, c, c.step_s(wl.hidden_fraction)))
     plans.sort(key=lambda p: (not p.cost.fits, p.step_s,
@@ -121,16 +125,19 @@ def preset_on_topology(scheme: str, topo: Topology, **over) -> ZeroConfig:
 def plan_for_mesh(mesh, *, psi: float | None = None,
                   n_layers: int | None = None,
                   memory_budget: float | None = None,
+                  stream_grads: bool = False,
                   top_k: int | None = None, **topo_kw) -> list[Plan]:
     """Run the planner against a live mesh (``--scheme auto``).
 
     Axis link data comes from ``Topology.from_mesh`` tier defaults unless
     overridden.  ``psi``/``n_layers`` default to the paper's 20B / 44-layer
     evaluation model when the caller has no model at hand.
+    ``stream_grads`` prices (and tags) the streaming grad regime.
     """
     topo = Topology.from_mesh(mesh, **topo_kw)
     wl = Workload(psi=float(psi) if psi else 20e9,
-                  n_layers=int(n_layers) if n_layers else 44)
+                  n_layers=int(n_layers) if n_layers else 44,
+                  stream_grads=stream_grads)
     budget = memory_budget if memory_budget is not None else float("inf")
     # default budget inf: the live mesh is often fake CPU devices — ranking,
     # not feasibility, is the deliverable there; real launches pass a budget
@@ -138,7 +145,8 @@ def plan_for_mesh(mesh, *, psi: float | None = None,
 
 
 def model_workload(model_name: str, *, n_microbatch: int = 4,
-                   tokens_per_device_mb: int = 2048) -> Workload:
+                   tokens_per_device_mb: int = 2048,
+                   stream_grads: bool = False) -> Workload:
     """Workload from a registered architecture (CLI helper).
 
     Accepts registry names with ``_`` or ``-`` separators
@@ -154,7 +162,8 @@ def model_workload(model_name: str, *, n_microbatch: int = 4,
     psi = build_model(arch).param_count()
     return Workload(psi=float(psi), n_layers=arch.n_layers,
                     n_microbatch=n_microbatch,
-                    tokens_per_device_mb=tokens_per_device_mb)
+                    tokens_per_device_mb=tokens_per_device_mb,
+                    stream_grads=stream_grads)
 
 
 def format_plans(plans: list[Plan], presets: dict[str, Plan] | None = None,
@@ -190,6 +199,10 @@ def main(argv=None):
     ap.add_argument("--top", type=int, default=8)
     ap.add_argument("--no-quant", action="store_true",
                     help="restrict the search to unquantized collectives")
+    ap.add_argument("--stream-grads", action="store_true",
+                    help="price the streaming grad regime (DESIGN.md §8): "
+                         "per-layer grad RS overlapped with the backward, "
+                         "grad memory at os-shard layout")
     ap.add_argument("--save-topology", default="",
                     help="write the resolved topology JSON here and exit")
     args = ap.parse_args(argv)
@@ -199,13 +212,17 @@ def main(argv=None):
         print(topo.save(args.save_topology))
         return 0
     wl = model_workload(args.model, n_microbatch=args.n_microbatch,
-                        tokens_per_device_mb=args.tokens_per_device)
+                        tokens_per_device_mb=args.tokens_per_device,
+                        stream_grads=args.stream_grads)
     budget = args.budget_gb * 1e9 if args.budget_gb else None
     plans = plan(topo, wl, memory_budget=budget,
                  quantize=False if args.no_quant else None)
     presets = {}
     for scheme in ("zero3", "zeropp", "zero_topo"):
-        cfg = preset_on_topology(scheme, topo)
+        # presets priced in the same regime so the dominance check compares
+        # like with like
+        cfg = preset_on_topology(scheme, topo,
+                                 stream_grads=args.stream_grads)
         c = step_cost(cfg, topo, wl, memory_budget=budget)
         presets[scheme] = Plan(cfg, c, c.step_s(wl.hidden_fraction))
 

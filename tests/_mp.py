@@ -140,7 +140,7 @@ def _sha(a) -> str:
     return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
 
 
-def _build(impl: str | None):
+def _build(impl: str | None, stream: bool = False):
     import numpy as np
     from repro.core.engine import TrainHparams, ZeroEngine
     from repro.launch.mesh import scheme_config
@@ -150,7 +150,8 @@ def _build(impl: str | None):
     arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128, vocab=256)
     model = build_model(arch)
     cfg = scheme_config("zero_topo", mesh, quant_block=64,
-                        compute_dtype="float32", impl=impl)
+                        compute_dtype="float32", impl=impl,
+                        stream_grads=stream)
     eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
                      TrainHparams(lr=1e-3, total_steps=8, warmup_steps=0))
     batch_np = {"tokens": np.random.default_rng(0).integers(
@@ -169,12 +170,16 @@ def train_step_parity(extra: dict):
     printed here must be IDENTICAL between a 2-process x 4-device cluster
     and the single-process 8-device run: losses/grad-norms bitwise (repr),
     every per-leaf master update bitwise (sha256), and the compiled step's
-    collective census (counts + wire bytes)."""
+    collective census (counts + wire bytes). ``extra["stream"]`` runs the
+    streaming grad path (DESIGN.md §8): the per-layer grad reduce chain
+    inside the backward crosses the process boundary on the E/R axes, so
+    this is the cross-process proof of the streaming tap."""
     import jax
     from jax.sharding import PartitionSpec as P
     from repro.launch import hlo
 
-    mesh, model, eng, batch_np = _build(extra.get("impl"))
+    mesh, model, eng, batch_np = _build(extra.get("impl"),
+                                        bool(extra.get("stream")))
     state = eng.init_state(jax.random.key(0))
     step = eng.make_train_step(model.loss_fn(), {"tokens": P(AX)})
     batch = _sharded_batch(mesh, batch_np)

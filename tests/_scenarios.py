@@ -169,6 +169,25 @@ def collectives_split():
         return jnp.max(jnp.abs(quant - exact)) / bound
 
     assert metric(rs_quant_vs_plain, y).max() <= 1.0
+
+    # a2a-RS issue/wait split (streaming grad path, DESIGN.md §8): the
+    # split halves compose bitwise into the fused reduce-scatter, for the
+    # quantized (a2a) and plain (psum-scatter) paths and for sub-groups
+    from repro.core import schedule as sched
+
+    def rs_split_vs_fused(shard):
+        outs = []
+        for axes in (AX, ("node", "gcd"), ("data",)):
+            for quantized in (False, True):
+                fused = col.reduce_scatter_flat(shard, axes, cfg,
+                                                quantized=quantized)
+                tok = sched.grad_rs_issue(shard, axes, cfg,
+                                          quantized=quantized)
+                split = sched.grad_rs_wait(tok, cfg)
+                outs.append(jnp.max(jnp.abs(fused - split)))
+        return jnp.stack(outs)
+
+    assert metric(rs_split_vs_fused, y).max() == 0.0
     print("SCENARIO_OK collectives_split")
 
 
@@ -207,6 +226,87 @@ def overlap_equivalence():
             out[overlap] = ls
         assert out[False] == out[True], (name, scheme, out)
     print("SCENARIO_OK overlap_equivalence")
+
+
+def stream_grads_equivalence():
+    """Streaming gradient path (DESIGN.md §8) on the 8-device topo mesh:
+
+    * n_microbatch=1: seed vs stream vs stream+overlap are BITWISE
+      identical (losses, grad norms, every per-leaf master shard) with the
+      full quantized zero_topo hot path;
+    * impl="jnp" vs impl="pallas_interpret" with streaming on: bitwise;
+    * n_microbatch=2: the per-microbatch stage-2 quantization reassociates
+      vs the seed's once-per-step pass — within block-quant tolerance;
+    * memory_report: grad_buffer drops to the exact per-leaf
+      grad_buffer_bytes sum (os layout for the stacked leaves).
+    """
+    from repro.core.engine import TrainHparams, ZeroEngine
+    from repro.core.partition import grad_buffer_bytes
+    from repro.models.registry import build_model, get_arch
+
+    jax.config.update("jax_default_matmul_precision", "float32")
+    mesh = _mesh()
+    arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128, vocab=256)
+    model = build_model(arch)
+    rng = np.random.default_rng(0)
+    batch_np = rng.integers(0, arch.vocab, (8, 33), dtype=np.int32)
+    batch_np16 = rng.integers(0, arch.vocab, (16, 33), dtype=np.int32)
+
+    def run(n_mb=1, **over):
+        cfg = _cfg("zero_topo", mesh, compute_dtype="float32", **over)
+        eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                         TrainHparams(lr=1e-3, total_steps=8, warmup_steps=0,
+                                      n_microbatch=n_mb))
+        state = eng.init_state(jax.random.key(0))
+        step = eng.make_train_step(model.loss_fn(), {"tokens": P(AX)})
+        # n_mb microbatches need n_mb rows per device (the local batch is
+        # split along dim 0 inside the step)
+        batch = {"tokens": jax.device_put(
+            jnp.asarray(batch_np if n_mb == 1 else batch_np16),
+            NamedSharding(mesh, P(AX)))}
+        ms = []
+        for _ in range(3):
+            state, m = step(state, batch)
+            ms.append((float(m["loss"]), float(m["grad_norm"])))
+        masters = {n: np.asarray(state["master"][n].addressable_data(0))
+                   for n in sorted(eng.specs)}
+        return eng, ms, masters
+
+    e0, ms0, ma0 = run(stream_grads=False)
+    e1, ms1, ma1 = run(stream_grads=True)
+    _, ms2, ma2 = run(stream_grads=True, overlap=True)
+    assert ms0 == ms1 == ms2, (ms0, ms1, ms2)
+    for n in ma0:
+        np.testing.assert_array_equal(ma0[n], ma1[n], err_msg=n)
+        np.testing.assert_array_equal(ma0[n], ma2[n], err_msg=n)
+
+    # kernel-impl bitwise with streaming on
+    _, msj, maj = run(stream_grads=True, impl="jnp")
+    _, msp, map_ = run(stream_grads=True, impl="pallas_interpret")
+    assert msj == msp, (msj, msp)
+    for n in maj:
+        np.testing.assert_array_equal(maj[n], map_[n], err_msg=n)
+
+    # n_microbatch=2: per-microbatch stage-2 INT4 quantization vs the
+    # seed's single pass over the accumulated grads — same math modulo one
+    # extra quantize round-trip per microbatch, so losses track within the
+    # block-quant tolerance the quantized-vs-exact tests already use
+    _, msa, _ = run(n_mb=2, stream_grads=False)
+    _, msb, _ = run(n_mb=2, stream_grads=True)
+    for (la, ga), (lb, gb) in zip(msa, msb):
+        assert abs(la - lb) / max(abs(la), 1e-9) < 0.02, (msa, msb)
+        assert abs(ga - gb) / max(abs(ga), 1e-9) < 0.05, (msa, msb)
+
+    # memory: the streamed (stacked) leaves drop to os layout — exact
+    # per-leaf accounting, engine vs the shared partition formula
+    rep0, rep1 = e0.memory_report(), e1.memory_report()
+    snames = set(e1.stream_leaf_names())
+    expect = sum(grad_buffer_bytes(e1.cfg, e1._pad[n] * (s.stack or 1),
+                                   streaming=(n in snames))
+                 for n, s in e1.specs.items())
+    assert rep1["grad_buffer"] == expect
+    assert rep1["grad_buffer"] < rep0["grad_buffer"], (rep0, rep1)
+    print("SCENARIO_OK stream_grads_equivalence")
 
 
 def kernel_impl_equivalence():
@@ -555,6 +655,7 @@ def resident_and_sp():
 SCENARIOS = dict(collectives=collectives,
                  collectives_split=collectives_split,
                  overlap_equivalence=overlap_equivalence,
+                 stream_grads_equivalence=stream_grads_equivalence,
                  kernel_impl_equivalence=kernel_impl_equivalence,
                  auto_scheme=auto_scheme,
                  schemes_equivalent=schemes_equivalent,

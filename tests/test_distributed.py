@@ -9,7 +9,8 @@ import pytest
 
 HERE = os.path.dirname(__file__)
 SCENARIOS = ["collectives", "schemes_equivalent", "auto_scheme",
-             "kernel_impl_equivalence", "dp_vs_single", "serve_sharded",
+             "kernel_impl_equivalence", "stream_grads_equivalence",
+             "dp_vs_single", "serve_sharded",
              "hlo_census_real", "multipod_mesh", "resident_and_sp"]
 
 

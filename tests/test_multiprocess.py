@@ -12,15 +12,20 @@ import pytest
 from _mp import run_cluster
 
 
-@pytest.mark.parametrize("kernel_impl", ["jnp", "pallas_interpret"])
-def test_train_step_parity(kernel_impl):
+@pytest.mark.parametrize("kernel_impl,stream", [
+    ("jnp", False), ("pallas_interpret", False),
+    ("jnp", True), ("pallas_interpret", True)])
+def test_train_step_parity(kernel_impl, stream):
     """A 2-process x 4-device train step reproduces the single-process
     8-device step BITWISE: losses, grad norms, every per-leaf master and
     primary update, and the compiled collective census (counts + wire
     bytes). The partitioned program is identical — only the transport under
     the inter-tier collectives changes — so any drift here is a real
-    cross-process bug, not noise."""
-    extra = {"impl": kernel_impl}
+    cross-process bug, not noise. ``stream`` repeats the proof for the
+    streaming grad path (DESIGN.md §8), whose per-layer reduce chain runs
+    its stage-2/cross-replica collectives across the process boundary
+    inside the backward scan."""
+    extra = {"impl": kernel_impl, "stream": stream}
     mp = run_cluster("train_step_parity", n_proc=2, extra=extra)
     sp = run_cluster("train_step_parity", n_proc=1, extra=extra)
     assert mp["losses"] == sp["losses"], (mp["losses"], sp["losses"])

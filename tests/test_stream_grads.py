@@ -1,0 +1,257 @@
+"""Streaming gradient path (ZeroConfig.stream_grads, DESIGN.md §8).
+
+The contract: stacked-leaf weight cotangents leave the backward already in
+fp32 optimizer-shard layout (stage-1 RS over W -> cast -> stage-2 RS over E
+-> cross-replica, all inside the reverse scan step), accumulated per
+microbatch in os layout — and the whole train step stays **bitwise
+identical** to the seed path at n_microbatch=1, for every (overlap, impl)
+combination. Degree-1 numerics run here; 8-device semantics run the
+``stream_grads_equivalence`` subprocess scenario (test_distributed.py) and
+the 2-process cluster parity runs in test_multiprocess.py.
+
+Also owns the memory-accounting cross-check: ``ZeroEngine.memory_report``,
+``benchmarks/memory_table.py`` and ``topo.cost.memory_bytes`` must all
+read the gradient buffer off the same ``partition.grad_buffer_bytes``
+formula, so the table and the engine can never drift again.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine import TrainHparams, ZeroEngine
+from repro.core.partition import (GATHER_Q, MATMUL, grad_buffer_bytes,
+                                  grad_memory_bytes, preset)
+from repro.launch.mesh import make_test_mesh, scheme_config
+from repro.models.registry import build_model, get_arch
+
+AX = ("data", "node", "gcd")
+
+
+def _mesh1():
+    return make_test_mesh(shape=(1, 1, 1), axes=AX)
+
+
+def _build(scheme="zero_topo", *, n_mb=1, arch="qwen2-0.5b", **over):
+    mesh = _mesh1()
+    arch_cfg = get_arch(arch).reduced(n_layers=2, d_model=128, vocab=256) \
+        if arch == "qwen2-0.5b" else get_arch(arch).reduced()
+    model = build_model(arch_cfg)
+    cfg = scheme_config(scheme, mesh, quant_block=32,
+                        compute_dtype="float32", **over)
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                     TrainHparams(lr=1e-3, total_steps=10, warmup_steps=0,
+                                  n_microbatch=n_mb))
+    return mesh, model, eng
+
+
+def _run_steps(model, eng, batch, n=3):
+    step = eng.make_train_step(model.loss_fn(), {"tokens": P()})
+    state = eng.init_state(jax.random.key(0))
+    ms = []
+    for _ in range(n):
+        state, m = step(state, batch)
+        ms.append((float(m["loss"]), float(m["grad_norm"])))
+    return ms, {n_: np.asarray(state["master"][n_]) for n_ in eng.specs}
+
+
+def _batch(model, shape=(2, 33), seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(
+        rng.integers(0, model.arch.vocab, shape), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# bitwise equivalence vs the seed grad path (degree-1; full code path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["zero3", "zero_topo"])
+@pytest.mark.parametrize("n_mb", [1, 2])
+def test_stream_train_step_bitwise_vs_seed(scheme, n_mb):
+    """Losses, grad norms and every per-leaf master shard are bitwise
+    identical between the seed and streaming regimes (n_microbatch=1 and,
+    on the degree-1 mesh where stage-2 quantization is a no-op, >1 too)."""
+    _, m0, e0 = _build(scheme, n_mb=n_mb, stream_grads=False)
+    _, m1, e1 = _build(scheme, n_mb=n_mb, stream_grads=True)
+    batch = _batch(m0)
+    ms0, masters0 = _run_steps(m0, e0, batch)
+    ms1, masters1 = _run_steps(m1, e1, batch)
+    assert ms0 == ms1, (ms0, ms1)
+    for n in masters0:
+        np.testing.assert_array_equal(masters0[n], masters1[n], err_msg=n)
+
+
+def test_stream_with_overlap_bitwise():
+    """stream_grads composes with the gather prefetch: all four (overlap,
+    stream) combinations produce bitwise-identical steps."""
+    outs = {}
+    for overlap in (False, True):
+        for stream in (False, True):
+            _, m, e = _build("zero_topo", overlap=overlap,
+                             stream_grads=stream)
+            outs[(overlap, stream)] = _run_steps(m, e, _batch(m), n=2)[0]
+    base = outs[(False, False)]
+    for k, v in outs.items():
+        assert v == base, (k, v, base)
+
+
+def test_stream_impl_bitwise_jnp_vs_pallas_interpret():
+    """The streaming tap dispatches through the same kernel-impl machinery
+    (quantize_int4/dequantize_int4_sum): jnp vs pallas_interpret stay
+    bitwise identical with streaming on."""
+    _, mj, ej = _build("zero_topo", stream_grads=True, impl="jnp")
+    _, mp_, ep = _build("zero_topo", stream_grads=True,
+                        impl="pallas_interpret")
+    batch = _batch(mj)
+    msj, mastersj = _run_steps(mj, ej, batch)
+    msp, mastersp = _run_steps(mp_, ep, batch)
+    assert msj == msp, (msj, msp)
+    for n in mastersj:
+        np.testing.assert_array_equal(mastersj[n], mastersp[n], err_msg=n)
+
+
+def test_stream_hetero_loop_bitwise():
+    """gemma3's 5:1 local:global pattern routes sinks through loop_layers'
+    per-leaf occurrence counting."""
+    _, m0, e0 = _build("zero_topo", arch="gemma3-1b", stream_grads=False)
+    _, m1, e1 = _build("zero_topo", arch="gemma3-1b", stream_grads=True)
+    batch = _batch(m0)
+    ms0, _ = _run_steps(m0, e0, batch, n=2)
+    ms1, _ = _run_steps(m1, e1, batch, n=2)
+    assert ms0 == ms1, (ms0, ms1)
+
+
+# ---------------------------------------------------------------------------
+# knobs and plumbing
+# ---------------------------------------------------------------------------
+
+def test_stream_leaf_names_are_stacked_matmul_gatherq():
+    _, _, eng = _build("zero_topo", stream_grads=True)
+    names = eng.stream_leaf_names()
+    assert names, "qwen2 must have stacked streamable leaves"
+    for n in names:
+        s = eng.specs[n]
+        assert s.stack and s.kind in (MATMUL, GATHER_Q), n
+    # non-stacked leaves (embeddings, final norm) stay on the seed path
+    for n, s in eng.specs.items():
+        if not s.stack or s.kind not in (MATMUL, GATHER_Q):
+            assert n not in names
+            assert eng.fns[n].mm_stream is None
+            assert eng.fns[n].full_stream is None
+
+
+def test_hparams_override_stream_grads():
+    mesh = _mesh1()
+    arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128, vocab=256)
+    model = build_model(arch)
+    cfg = scheme_config("zero_topo", mesh, quant_block=32)
+    assert not cfg.stream_grads
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                     TrainHparams(stream_grads=True))
+    assert eng.cfg.stream_grads
+    eng2 = ZeroEngine(model.leaf_specs(),
+                      dataclasses.replace(cfg, stream_grads=True), mesh,
+                      TrainHparams(stream_grads=False))
+    assert not eng2.cfg.stream_grads
+    # layout-neutral: fingerprints (checkpoint identity) are unchanged
+    assert eng.scheme_fingerprint() == eng2.scheme_fingerprint()
+
+
+def test_grad_rs_issue_wait_composes_to_reduce_scatter():
+    """schedule.grad_rs_issue + grad_rs_wait == collectives.
+    reduce_scatter_flat, bitwise (degree-1 here; the 8-device version runs
+    in the collectives_split scenario)."""
+    from repro.compat import shard_map
+    from repro.core import collectives as col
+    from repro.core import schedule as sched
+    mesh = _mesh1()
+    cfg = scheme_config("zero_topo", mesh, quant_block=64)
+    x = jax.random.normal(jax.random.key(0), (64 * 4,))
+
+    def check(shard):
+        shard = shard.reshape(-1)
+        fused = col.reduce_scatter_flat(shard, AX, cfg)
+        tok = sched.grad_rs_issue(shard, AX, cfg)
+        split = sched.grad_rs_wait(tok, cfg)
+        return jnp.max(jnp.abs(fused - split))[None]
+
+    sm = shard_map(check, mesh=mesh, in_specs=P(AX), out_specs=P(AX),
+                   check_vma=False)
+    assert float(np.asarray(jax.jit(sm)(x)).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# memory accounting: one formula for engine, table, planner
+# ---------------------------------------------------------------------------
+
+def test_memory_report_grad_and_prefetch_lines():
+    """Degree-1 engine: grad_buffer is the exact per-leaf sum of
+    grad_buffer_bytes and prefetch_buffer appears iff overlap (the 2 slots
+    of gathered INT8 weights the §3 schedule keeps live)."""
+    for overlap in (False, True):
+        _, _, eng = _build("zero_topo", overlap=overlap, stream_grads=True)
+        rep = eng.memory_report()
+        expect = sum(
+            grad_buffer_bytes(eng.cfg, eng._pad[n] * (s.stack or 1),
+                              streaming=(n in eng.stream_leaf_names()))
+            for n, s in eng.specs.items())
+        assert rep["grad_buffer"] == expect
+        if overlap:
+            # 2 slots x (INT8 payload + f32 scales) of the largest layer
+            slot = eng._prefetch_slot_bytes()
+            assert slot > 0
+            assert rep["prefetch_buffer"] == 2 * slot
+        else:
+            assert rep["prefetch_buffer"] == 0
+        assert rep["total"] == rep["primary"] + rep["secondary"] \
+            + rep["grad_buffer"] + rep["optimizer"] + rep["prefetch_buffer"]
+
+
+def test_memory_table_matches_partition_formulas():
+    """benchmarks/memory_table.py reads every gradient figure off the
+    shared partition.py formulas — the cross-check that keeps the table,
+    the engine and the planner from drifting."""
+    from benchmarks.memory_table import scheme_bytes
+    psi = 20_000_000_000
+    sizes = {"data": 48, "node": 4, "gcd": 2}
+    for scheme in ("zero1", "zero2", "zero3", "zeropp", "zero_topo"):
+        cfg = preset(scheme, intra_axes=("node", "gcd"),
+                     inter_axes=("data",), l0_axes=("gcd",), axis_sizes=sizes)
+        # paper accounting: fp16 at the grad-shard degree
+        assert scheme_bytes(scheme, psi, 48)["grads"] == \
+            grad_memory_bytes(cfg, psi, grad_bytes=2)
+        # engine accounting, both regimes
+        assert scheme_bytes(scheme, psi, 48, grad_bytes=4,
+                            streaming=False)["grads"] == \
+            grad_buffer_bytes(cfg, psi, streaming=False)
+        assert scheme_bytes(scheme, psi, 48, grad_bytes=4,
+                            streaming=True)["grads"] == \
+            grad_buffer_bytes(cfg, psi, streaming=True)
+        # and the formulas are the claimed degrees
+        assert grad_buffer_bytes(cfg, psi, streaming=False) == \
+            4 * psi // cfg.w_degree
+        assert grad_buffer_bytes(cfg, psi, streaming=True) == \
+            4 * psi // cfg.os_degree
+        assert grad_buffer_bytes(cfg, psi, streaming=True) <= \
+            grad_buffer_bytes(cfg, psi, streaming=False)
+
+
+def test_cost_model_memory_uses_grad_buffer():
+    """topo.cost.memory_bytes charges grads at the engine's true buffer
+    (third consumer of the shared formula)."""
+    from repro.topo.cost import memory_bytes
+    sizes = {"data": 48, "node": 4, "gcd": 2}
+    cfg = preset("zero_topo", intra_axes=("node", "gcd"),
+                 inter_axes=("data",), l0_axes=("gcd",), axis_sizes=sizes)
+    psi = 20e9
+    assert memory_bytes(cfg, psi, streaming=False)["grads"] == \
+        grad_buffer_bytes(cfg, int(psi), streaming=False)
+    assert memory_bytes(cfg, psi, streaming=True)["grads"] == \
+        grad_buffer_bytes(cfg, int(psi), streaming=True)
+    # cfg.stream_grads is picked up when no explicit regime is passed
+    scfg = dataclasses.replace(cfg, stream_grads=True)
+    assert memory_bytes(scfg, psi)["grads"] == \
+        grad_buffer_bytes(scfg, int(psi), streaming=True)

@@ -182,7 +182,7 @@ def test_phase_axes_match_collective_inventory():
 
 
 def test_memory_matches_partition_tables():
-    from repro.core.partition import (grad_memory_bytes,
+    from repro.core.partition import (grad_buffer_bytes, grad_memory_bytes,
                                       optimizer_memory_bytes,
                                       weight_memory_bytes)
     topo = frontier(48)
@@ -191,9 +191,62 @@ def test_memory_matches_partition_tables():
         cfg = preset_on_topology(scheme, topo)
         m = memory_bytes(cfg, psi)
         assert m["weights"] == weight_memory_bytes(cfg, int(psi))
-        assert m["grads"] == grad_memory_bytes(cfg, int(psi))
+        # grads are charged at the buffer the engine actually allocates
+        # (primary layout on the seed path), not the paper's Table VI
+        # grad-shard figure — that one is kept as grads_table
+        assert m["grads"] == grad_buffer_bytes(cfg, int(psi), streaming=False)
+        assert m["grads"] == 4 * int(psi) // cfg.w_degree
+        assert m["grads_table"] == grad_memory_bytes(cfg, int(psi))
         assert m["optimizer"] == optimizer_memory_bytes(cfg, int(psi))
         assert m["total"] == m["weights"] + m["grads"] + m["optimizer"]
+        # streaming charges grads at os-shard layout: never more, and
+        # strictly less whenever os_degree > w_degree
+        ms = memory_bytes(cfg, psi, streaming=True)
+        assert ms["grads"] == grad_buffer_bytes(cfg, int(psi), streaming=True)
+        assert ms["grads"] == 4 * int(psi) // cfg.os_degree
+        assert ms["grads"] <= m["grads"]
+        if cfg.os_degree > cfg.w_degree:
+            assert ms["grads"] < m["grads"]
+
+
+def test_streaming_workload_pricing():
+    """Workload.stream_grads (DESIGN.md §8): the grad phases move into the
+    overlappable per-microbatch pool (exposed_s shrinks to the update
+    gather), their volume scales with n_microbatch, and the memory-budget
+    search admits schemes the seed regime rejects."""
+    import dataclasses
+    topo = frontier(48)
+    wl = Workload(psi=20e9, n_layers=44, n_microbatch=4)
+    wls = dataclasses.replace(wl, stream_grads=True)
+    cfg = preset_on_topology("zero_topo", topo)
+    seed = step_cost(cfg, topo, wl)
+    strm = step_cost(cfg, topo, wls)
+    # seed: the whole post-backward section is exposed
+    assert seed.exposed_s == pytest.approx(
+        seed.comm_s["grad_rs_e"] + seed.comm_s["cross_replica"]
+        + seed.comm_s["update_gather"])
+    # streaming: only the update gather stays exposed
+    assert strm.exposed_s == pytest.approx(strm.comm_s["update_gather"])
+    # per-microbatch cadence: stage-2 + cross-replica seconds scale ~n_mb
+    # (plus the per-layer latency term)
+    assert strm.comm_s["grad_rs_e"] >= wl.n_microbatch \
+        * seed.comm_s["grad_rs_e"]
+    assert strm.comm_s["cross_replica"] >= wl.n_microbatch \
+        * seed.comm_s["cross_replica"]
+    # per-microbatch phases and volumes are regime-independent
+    for ph in ("fwd_allgather", "bwd_allgather", "grad_rs_w"):
+        assert strm.comm_s[ph] == seed.comm_s[ph]
+    assert strm.volumes == seed.volumes
+    # memory: grads at os layout; a budget between the two admits schemes
+    # only under streaming
+    assert strm.memory["grads"] < seed.memory["grads"]
+    budget = (seed.memory["total"] + strm.memory["total"]) / 2
+    assert not step_cost(cfg, topo, wl, memory_budget=budget).fits
+    assert step_cost(cfg, topo, wls, memory_budget=budget).fits
+    # the planner under that budget picks a fitting plan in the streaming
+    # regime (and tags the chosen config with stream_grads)
+    plans = plan(topo, wls, memory_budget=budget)
+    assert plans[0].cost.fits and plans[0].cfg.stream_grads
 
 
 # ---------------------------------------------------------------------------
