@@ -68,6 +68,14 @@ GATED = {
     "BENCH_memory.json": [
         "paper_table.*", "engine.*", "max_model_2nodes.*", "max_model_tpu.*",
     ],
+    # comm-contract verifier census (repro.analysis.check --grid): the
+    # schedule-tag counts and the per-tier/per-dtype collective inventory of
+    # the compiled train step across the overlap x stream-grads matrix —
+    # any drift is a schedule or wire-format change that must ship with an
+    # updated baseline (emitted by the `analysis` CI leg, not bench-gate)
+    "BENCH_contracts.json": [
+        "model", "scheme", "n_microbatch", "census.*",
+    ],
 }
 
 
@@ -132,17 +140,31 @@ def check_file(baseline: Path, emitted: Path) -> list[str]:
     return problems
 
 
+# legs emit disjoint file sets (bench-gate: kernels/comm/plan/memory;
+# analysis: contracts), so each passes --files for what it actually ran
+_BENCH_GATE_FILES = ("BENCH_kernels.json", "BENCH_comm_volume.json",
+                     "BENCH_plan.json", "BENCH_memory.json")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--emitted", default=".",
                     help="directory holding the freshly-written BENCH_*.json")
     ap.add_argument("--baselines", default="benchmarks/baselines")
+    ap.add_argument("--files", default=",".join(_BENCH_GATE_FILES),
+                    help="comma-separated BENCH file names to gate "
+                         "(default: the bench-gate leg's four)")
     args = ap.parse_args()
     emitted = Path(args.emitted)
     baselines = Path(args.baselines)
+    names = [n for n in args.files.split(",") if n]
+    unknown = [n for n in names if n not in GATED]
+    if unknown:
+        sys.exit(f"no gate spec for {', '.join(unknown)} "
+                 f"(known: {', '.join(sorted(GATED))})")
 
     problems: list[str] = []
-    for name in GATED:
+    for name in names:
         b = baselines / name
         if not b.exists():
             problems.append(f"{b}: baseline missing (seed it from an "
@@ -155,7 +177,7 @@ def main():
         for p in problems:
             print(f"  {p}")
         sys.exit(1)
-    print(f"benchmark baselines OK ({', '.join(sorted(GATED))})")
+    print(f"benchmark baselines OK ({', '.join(sorted(names))})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+"""Static comm-contract verification (DESIGN.md §9).
+
+Three layers, checked before a program ever runs:
+
+  Layer 1 — jaxpr dataflow (``analysis.dataflow``): issue/wait pairing and
+      buffer-rotation safety of the overlap machines, proved on the traced
+      train step with contract tags (``analysis.tags``) marking the
+      schedule-relevant values.
+  Layer 2 — HLO contracts (``analysis.contracts``): every collective in the
+      compiled module classified against the mesh's bandwidth tiers; the
+      dtype-tier policy (quantized wire formats on inter-tier links) and the
+      determinism budget enforced, and the measured wire volume cross-checked
+      against ``topo.cost.phase_volumes``.
+  Layer 3 — source lint (``analysis.lint``): AST rules for the invariants
+      that live in the source rather than the trace (no raw fp ``lax.psum``
+      outside core/collectives.py, kernels stay behind ``kernels.ops``, ...).
+
+CLI entry points:
+
+  python -m repro.analysis.check --model <name> --scheme <scheme>
+  python -m repro.analysis.lint [paths...]
+"""
+from .report import Finding, Report
+
+__all__ = ["Finding", "Report"]

@@ -1,0 +1,151 @@
+"""Comm-contract verifier CLI: trace + compile one train step and prove the
+schedule, dtype-tier, and determinism contracts on it.
+
+    python -m repro.analysis.check --model qwen2-0.5b --scheme zero_topo \
+        [--overlap] [--stream-grads] [--impl jnp] [--n-microbatch 2]
+
+Two passes over the same configuration (separate engines, because the tag
+primitive must not contaminate the compiled-HLO pass through jit caches):
+
+  1. the step is traced under ``tags.tagging()`` and the jaxpr walked by
+     ``dataflow.analyze_jaxpr`` (Layer 1: issue/wait/rotation/sink rules);
+  2. a fresh engine's step is compiled and the HLO checked by
+     ``contracts.check_hlo`` (Layer 2: dtype-tier policy, determinism
+     census, cost-model crosscheck against ``topo/cost.phase_volumes``).
+
+``--grid`` runs the CI matrix (overlap x stream-grads) in one process and
+emits ``BENCH_contracts.json`` (collective counts per tier/dtype class) to
+``$REPRO_BENCH_DIR`` for the bench-gate leg. Exits non-zero on any finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def _build(args, overlap: bool, stream: bool):
+    """One (engine, step, abstract inputs) for the given schedule knobs."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..core.engine import TrainHparams, ZeroEngine
+    from ..launch.mesh import make_test_mesh, scheme_config
+    from ..models.registry import build_model, get_arch
+
+    mesh = make_test_mesh(shape=tuple(args.mesh), axes=tuple(args.axes))
+    cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block,
+                        overlap=overlap, stream_grads=stream,
+                        **({"impl": args.impl} if args.impl else {}))
+    arch = get_arch(args.model)
+    if args.reduced:
+        arch = arch.reduced(n_layers=args.n_layers, d_model=args.d_model,
+                            vocab=args.vocab)
+    model = build_model(arch)
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                     TrainHparams(lr=1e-3, total_steps=8, warmup_steps=0,
+                                  n_microbatch=args.n_microbatch))
+    data_axes = tuple(args.axes)
+    step = eng.make_train_step(model.loss_fn(), {"tokens": P(data_axes)})
+    rows = max(args.n_microbatch, 1) * len(jax.devices())
+    batch = {"tokens": jax.ShapeDtypeStruct(
+        (rows, args.seq), jnp.int32,
+        sharding=NamedSharding(mesh, P(data_axes)))}
+    return mesh, cfg, eng, step, batch
+
+
+def check_one(args, overlap: bool, stream: bool):
+    """Run Layers 1+2 on one configuration; returns the merged Report."""
+    import jax
+
+    from ..core.partition import GATHER_Q, MATMUL, PLAIN
+    from . import contracts, dataflow, tags
+
+    label = (f"{args.model}/{args.scheme}"
+             f"/overlap={overlap}/stream={stream}")
+
+    # Layer 1: tagged trace (its own engine: tags change the jaxpr)
+    mesh, cfg, eng, step, batch = _build(args, overlap, stream)
+    with tags.tagging():
+        jx = jax.make_jaxpr(step)(eng.abstract_state(), batch)
+    report = dataflow.analyze_jaxpr(jx, label=label)
+
+    # Layer 2: untagged compile of a fresh engine
+    mesh, cfg, eng, step, batch = _build(args, overlap, stream)
+    text = step.lower(eng.abstract_state(), batch).compile().as_text()
+    psi_q = sum(eng._pad[n] * (s.stack or 1) for n, s in eng.specs.items()
+                if s.kind in (MATMUL, GATHER_Q))
+    # fp weight gathers up to the combined size of every PLAIN leaf are
+    # legitimate (XLA's all-gather combiner may fuse them into one tuple)
+    plain_max = sum(eng._pad[n] for n, s in eng.specs.items()
+                    if s.kind == PLAIN)
+    report.extend(contracts.check_hlo(
+        text, cfg, mesh, n_microbatch=args.n_microbatch, psi=psi_q,
+        plain_max_elems=plain_max, label=label))
+    return report
+
+
+def _bench_path() -> Path:
+    return Path(os.environ.get("REPRO_BENCH_DIR", ".")) \
+        / "BENCH_contracts.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="qwen2-0.5b")
+    ap.add_argument("--scheme", default="zero_topo")
+    ap.add_argument("--overlap", action="store_true")
+    ap.add_argument("--stream-grads", action="store_true")
+    ap.add_argument("--impl", default=None,
+                    help="kernel impl (jnp | pallas | pallas_interpret)")
+    ap.add_argument("--n-microbatch", type=int, default=2)
+    ap.add_argument("--quant-block", type=int, default=64)
+    ap.add_argument("--mesh", type=lambda s: [int(x) for x in s.split(",")],
+                    default=[2, 2, 2])
+    ap.add_argument("--axes", type=lambda s: s.split(","),
+                    default=["data", "node", "gcd"])
+    ap.add_argument("--seq", type=int, default=33)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shrink the arch to CI size (default on)")
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--grid", action="store_true",
+                    help="run the overlap x stream-grads matrix and emit "
+                         "BENCH_contracts.json")
+    ap.add_argument("--emit-bench", action="store_true",
+                    help="also emit BENCH_contracts.json in single-run mode")
+    args = ap.parse_args(argv)
+
+    n_dev = 1
+    for d in args.mesh:
+        n_dev *= d
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
+
+    combos = [(o, s) for o in (False, True) for s in (False, True)] \
+        if args.grid else [(args.overlap, args.stream_grads)]
+    bench = {}
+    failed = False
+    for overlap, stream in combos:
+        rep = check_one(args, overlap, stream)
+        key = f"overlap={overlap}/stream={stream}"
+        print(f"[{key}] {rep.render()}")
+        bench[key] = dict(sorted(rep.census.items()))
+        failed = failed or not rep.ok
+    if args.grid or args.emit_bench:
+        path = _bench_path()
+        path.write_text(json.dumps(
+            dict(model=args.model, scheme=args.scheme,
+                 n_microbatch=args.n_microbatch, census=bench),
+            indent=2, sort_keys=True))
+        print(f"wrote {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,288 @@
+"""Layer 2: dtype-tier and determinism contracts on compiled HLO.
+
+``launch/hlo.py`` already parses the compiled module into a census of
+collectives; this layer classifies every one of those collectives against
+the mesh's bandwidth tiers (``launch.mesh.zero_tiers``) and enforces the
+paper's wire-format policy (DESIGN.md §9):
+
+  dtype-tier      a large floating-point collective spans the inter tier
+                  (the Slingshot fabric) without an allowlisted reason.
+                  Everything big that crosses the slow links must ride the
+                  quantized wire formats (s8/u8/u4/s4); fp32/bf16 is allowed
+                  only for: small metrics (loss/gnorm/token counts), the
+                  block-quant scale siblings of an int gather, the
+                  cross-replica gradient sync (fp32 by design, paper §V-C),
+                  and phases the config explicitly leaves unquantized
+                  (``quantize_weights/grads/update_gather=False``, PLAIN
+                  leaves which are never quantized).
+  determinism     more small floating-point all-reduces spanning beyond the
+                  replica axes than the token-psum budget (one per
+                  microbatch; XLA may hoist or fold them, so fewer is fine).
+                  The token psums are exact in any summation order (they sum
+                  integers); every other fp metric reduction must go through
+                  ``collectives.det_psum`` — which lowers to all-gather +
+                  local fixed-order sum, never to an all-reduce — so an
+                  extra all-reduce here is a raw ``lax.psum`` whose
+                  summation order the fabric chooses. (Cross-replica grad
+                  syncs span exactly the replica axes and are excluded:
+                  they are the paper's fp32-by-design phase.)
+  cost-model      the measured quantized wire bytes disagree with
+                  ``topo/cost.py``'s ``phase_volumes`` prediction by more
+                  than a factor — the analytic model and the compiled
+                  program have drifted apart. The bound is deliberately
+                  loose (XLA re-gathers under remat, combines collectives,
+                  and hoists loop-invariant ones, all of which move the
+                  measured count around the per-step accounting).
+
+Replica groups are parsed from both HLO spellings — explicit
+``{{0,1},{2,3}}`` lists and the iota form ``[G,D]<=[dims]T(perm)`` — and
+member ids are interpreted as flat positions in the mesh's device grid
+(XLA partition ids follow the sharding's device order, which is
+``mesh.devices.ravel()``), so each group maps to the exact set of mesh axes
+it spans, and from there to a tier.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..launch import hlo
+from ..launch.mesh import zero_tiers
+from .report import Report
+
+# wire formats allowed to cross the inter tier at volume
+INT_WIRE = {"s8", "u8", "s4", "u4", "s2", "u2", "f8e4m3fn", "f8e5m2"}
+FP = {"f64", "f32", "bf16", "f16"}
+# anything at or below this many fp elements is a metric, not a payload
+SMALL_ELEMS = 4096
+
+_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_GROUPS_SIG_RE = re.compile(r"replica_groups=(\[[^<\s]*(?:<=\[[\d,]+\]"
+                            r"(?:T\([\d,]+\))?)?|\{.*?\}\})")
+
+
+def group_members(line: str) -> list[int] | None:
+    """Flat device positions of the first replica group, or None."""
+    m = _EXPLICIT_RE.search(line)
+    if m:
+        return [int(x) for x in m.group(1).split(",") if x.strip() != ""]
+    m = _IOTA_RE.search(line)
+    if m:
+        g, d = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        grid = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            grid = grid.transpose([int(x) for x in m.group(4).split(",")])
+        return [int(x) for x in grid.reshape(g, d)[0]]
+    return None
+
+
+def group_signature(line: str) -> str:
+    m = _GROUPS_SIG_RE.search(line)
+    return m.group(1) if m else ""
+
+
+def spanned_axes(members: list[int], mesh_dims: tuple[int, ...],
+                 axis_names: tuple[str, ...]) -> tuple[str, ...]:
+    """Mesh axes whose coordinate varies across the group members."""
+    coords = np.stack(np.unravel_index(np.asarray(members), mesh_dims),
+                      axis=1)                       # (n_members, n_axes)
+    varies = (coords != coords[0]).any(axis=0)
+    return tuple(a for a, v in zip(axis_names, varies) if v)
+
+
+def _dtype_census(out_type: str) -> dict[str, int]:
+    """elems per dtype family in an output type (tuples flattened)."""
+    out = {"int_elems": 0, "int_bytes": 0, "fp_elems": 0, "fp_bytes": 0,
+           "other_elems": 0}
+    for dt, dims in hlo._SHAPE_RE.findall(out_type):
+        if dt not in hlo._DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * hlo._DTYPE_BYTES[dt]
+        if dt in INT_WIRE:
+            out["int_elems"] += n
+            out["int_bytes"] += b
+        elif dt in FP:
+            out["fp_elems"] += n
+            out["fp_bytes"] += b
+        else:
+            out["other_elems"] += n
+    return out
+
+
+@dataclass
+class Classified:
+    """One collective, classified for the policy checks."""
+    rec: hlo.CollectiveRecord
+    spans: tuple[str, ...]
+    tier: str                 # "l0" | "intra" | "inter" | "none"
+    dclass: str               # "int" | "fp" | "other"
+    fp_elems: int
+    int_elems: int
+
+    @property
+    def sig(self) -> str:
+        return group_signature(self.rec.line)
+
+
+def classify(analysis: hlo.HLOAnalysis, mesh) -> list[Classified]:
+    """Tier- and dtype-classify every collective record against the mesh."""
+    tiers = zero_tiers(mesh)
+    mesh_dims = tuple(mesh.shape[a] for a in mesh.axis_names)
+    n_dev = int(np.prod(mesh_dims))
+    out = []
+    for rec in analysis.records:
+        members = group_members(rec.line)
+        if members is None or len(members) <= 1:
+            continue
+        if max(members) >= n_dev:
+            # ids outside the mesh grid (multi-host global ids shifted by a
+            # process offset still index the same grid modulo n_dev)
+            members = [m % n_dev for m in members]
+        spans = spanned_axes(members, mesh_dims, tuple(mesh.axis_names))
+        if set(spans) & set(tiers["inter"]):
+            tier = "inter"
+        elif set(spans) & (set(tiers["intra"]) - set(tiers["l0"])):
+            tier = "intra"
+        elif spans:
+            tier = "l0"
+        else:
+            tier = "none"
+        c = _dtype_census(rec.out_type)
+        if c["int_bytes"] and c["int_bytes"] >= c["fp_bytes"]:
+            dclass = "int"
+        elif c["fp_bytes"]:
+            dclass = "fp"
+        else:
+            dclass = "other"
+        out.append(Classified(rec, spans, tier, dclass,
+                              c["fp_elems"], c["int_elems"]))
+    return out
+
+
+def _justify_fp(c: Classified, cfg, int_sibling_elems: dict[str, int],
+                plain_max_elems: int) -> str | None:
+    """Why a floating-point inter-tier collective is allowed, or None."""
+    if c.fp_elems <= SMALL_ELEMS:
+        return "small-metric"
+    # block-quant scales riding next to an int payload over the same group
+    sib = int_sibling_elems.get((c.rec.opcode, c.sig), 0)
+    if sib and sib >= c.fp_elems * max(2, cfg.quant_block // 2):
+        return "quant-scales"
+    spans = set(c.spans)
+    axes = cfg.axes
+    if c.rec.opcode in ("all-reduce", "reduce-scatter") \
+            and spans <= set(axes.replica):
+        return "cross-replica-sync"     # fp32 by design (paper §V-C)
+    weighty = set(axes.weight) | set(axes.secondary or ())
+    if c.rec.opcode == "all-gather":
+        if spans <= set(axes.extra_grad) | set(axes.replica) \
+                and not cfg.quantize_update_gather:
+            return "update-gather-unquantized"
+        if spans <= weighty:
+            if not cfg.quantize_weights:
+                return "weights-unquantized-by-config"
+            if c.fp_elems <= plain_max_elems:
+                return "plain-leaf"     # norms/biases are never quantized
+    if c.rec.opcode in ("all-reduce", "reduce-scatter", "all-to-all") \
+            and spans <= set(axes.grad) | set(axes.replica) \
+            and not cfg.quantize_grads:
+        return "grads-unquantized-by-config"
+    return None
+
+
+def check_hlo(text: str, cfg, mesh, *, n_microbatch: int = 1,
+              psi: float | None = None, plain_max_elems: int = 0,
+              cost_factor: float = 2.5, label: str = "hlo") -> Report:
+    """Run the Layer-2 contracts on one compiled HLO module.
+
+    ``plain_max_elems`` is the largest padded PLAIN (never-quantized) leaf,
+    so fp weight gathers of at most that size are exempt from the dtype-tier
+    rule; ``psi`` (the padded parameter count) enables the cost-model
+    crosscheck against ``topo/cost.phase_volumes``, which must agree with
+    the measured wire bytes within a factor of ``cost_factor``.
+    """
+    report = Report()
+    analysis = hlo.analyze(text)
+    classified = classify(analysis, mesh)
+
+    # index: biggest int payload per (opcode, replica-group signature), for
+    # recognizing the fp scale gathers that ride alongside an int gather
+    int_sibling: dict[tuple[str, str], int] = {}
+    for c in classified:
+        if c.dclass == "int":
+            key = (c.rec.opcode, c.sig)
+            int_sibling[key] = max(int_sibling.get(key, 0), c.int_elems)
+
+    # ---- dtype-tier policy ---------------------------------------------
+    for c in classified:
+        where = f"{label}:%{c.rec.name}"
+        key = f"collectives/{c.rec.opcode}/{c.tier}/{c.dclass}"
+        report.census[key] = report.census.get(key, 0) + round(c.rec.mult)
+        if c.tier != "inter" or c.dclass != "fp":
+            continue
+        why = _justify_fp(c, cfg, int_sibling, plain_max_elems)
+        if why is None:
+            report.add(
+                "dtype-tier", where,
+                f"{c.rec.opcode} of {c.fp_elems} fp elements spans the "
+                f"inter tier (axes {c.spans}) un-quantized and matches no "
+                f"allowlist class — inter-tier payloads must ride the "
+                f"s8/u8/u4 wire formats")
+
+    # ---- determinism: small fp all-reduce census ------------------------
+    # Cross-replica grad syncs span exactly the replica axes and are fp32 by
+    # design; beyond them, the only legitimate small fp all-reduces are the
+    # integer-token psums — at most one per microbatch, and usually fewer
+    # because XLA constant-folds the token counts and hoists the merged
+    # psum out of the microbatch loop.
+    replica = set(cfg.axes.replica)
+    small_ar = sum(round(c.rec.mult) for c in classified
+                   if c.rec.opcode == "all-reduce" and c.dclass == "fp"
+                   and c.fp_elems <= SMALL_ELEMS
+                   and not set(c.spans) <= replica)
+    if small_ar > n_microbatch:
+        report.add(
+            "determinism", label,
+            f"{small_ar} small floating-point all-reduce(s) beyond the "
+            f"replica axes, budget {n_microbatch} (one integer-token psum "
+            f"per microbatch): every other fp reduction must lower through "
+            f"det_psum's all-gather, so an extra all-reduce is a raw "
+            f"lax.psum whose summation order the fabric chooses")
+    report.census["collectives/small_fp_allreduce"] = small_ar
+
+    # ---- cost-model crosscheck ------------------------------------------
+    measured_int = sum(c.rec.wire * c.rec.mult for c in classified
+                      if c.dclass == "int")
+    report.census["wire/int_bytes"] = round(measured_int)
+    if psi:
+        from ..topo.cost import phase_volumes
+        vols = phase_volumes(cfg, psi)
+        pred = 0.0
+        if cfg.quantize_weights:
+            pred += n_microbatch * (vols["fwd_allgather"]
+                                    + vols["bwd_allgather"])
+        if cfg.quantize_grads:
+            pred += n_microbatch * vols["grad_rs_w"]
+            pred += (n_microbatch if cfg.stream_grads else 1) \
+                * vols["grad_rs_e"]
+        if cfg.quantize_update_gather:
+            pred += vols["update_gather"]
+        report.census["wire/int_bytes_predicted"] = round(pred)
+        if pred > 0 and not (pred / cost_factor <= measured_int
+                             <= pred * cost_factor):
+            report.add(
+                "cost-model", label,
+                f"measured quantized wire bytes {measured_int:.3g} vs "
+                f"phase_volumes prediction {pred:.3g} disagree by more "
+                f"than {cost_factor}x: the analytic cost model and the "
+                f"compiled program have drifted apart")
+    return report

@@ -1,0 +1,314 @@
+"""Layer 1: jaxpr dataflow verification of the schedule contracts.
+
+Walks a traced program (the train step traced under ``tags.tagging()``) and
+checks the issue/wait discipline of the three overlap machines
+(core/schedule.py):
+
+  gather-wait-without-issue   a wait tag consumes a locally-produced value
+                              that no issue tag produced — the buffer being
+                              dequantized never went through quantize+gather.
+  gather-double-wait          the same buffer value is waited twice in one
+                              scope (the wait is a local dequant; two waits
+                              mean duplicated work or a pairing bug).
+  gather-dead-issue           an issue's result is consumed by nothing and
+                              escapes nowhere — a collective whose bytes are
+                              simply dropped.
+  buffer-overwrite-before-wait  in a scan body, a rotation slot's carry-out
+                              is a fresh issue while the carried-in buffer
+                              is never consumed: the prefetched weights are
+                              overwritten before anything dequantized them
+                              (the buffer-reuse race the 2-slot rotation
+                              must avoid).
+  sink-not-from-xs            a streaming sink consumed inside a scan body
+                              does not ride the scan xs — its cotangent
+                              would not stack per-layer (DESIGN.md §8).
+  sink-multiplicity           one leaf's sink is consumed more than once in
+                              a single scan step — its gradient row would be
+                              double-counted.
+
+Scopes are walked compositionally: every sub-jaxpr (scan/while bodies, pjit,
+remat/checkpoint, custom_vjp calls, cond branches) is analyzed with its
+parent's knowledge of where each operand came from, and returns a summary
+(which inputs it waits/uses, which outputs are fresh issues) so the parent
+can reason about calls without inlining. Cross-scope pairing is deliberately
+permissive — a wait on a value that entered through a scope boundary is
+assumed paired with an issue in some ancestor (the carry-threading of
+``scan_layers`` makes exact cross-scope matching equivalent to re-proving
+the schedule; the rules above catch every *locally provable* break, which
+is what the mutation tests in tests/test_analysis.py pin down).
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+
+from .report import Report
+
+TAG_PRIMITIVE = "contract_tag"
+
+# wait machines accept these issue machines (the fused dX kernel consumes
+# regather buffers through the same gather-wait site)
+COMPATIBLE = {"gather": ("gather", "regather"),
+              "regather": ("gather", "regather"),
+              "grad_rs": ("grad_rs",)}
+
+
+@dataclass
+class Summary:
+    """What a sub-jaxpr does to its inputs/outputs, seen from the caller."""
+    waited_in: set = field(default_factory=set)     # invar positions waited
+    used_in: set = field(default_factory=set)       # invar positions used
+    issued_out: set = field(default_factory=set)    # outvar positions = fresh issue
+    # sinks consumed in this scope (or nested non-scan scopes), keyed by the
+    # invar position their operand entered through (None = locally produced)
+    sink_in: list = field(default_factory=list)     # (pos|None, name)
+
+
+def _is_jaxpr(x) -> bool:
+    return hasattr(x, "eqns") and hasattr(x, "invars")
+
+
+def _as_open(x):
+    """ClosedJaxpr or Jaxpr -> the open Jaxpr (duck-typed across versions)."""
+    return x.jaxpr if hasattr(x, "jaxpr") and _is_jaxpr(x.jaxpr) else x
+
+
+def _sub_jaxprs(eqn):
+    """Every sub-jaxpr hiding in an eqn's params (scan/pjit/remat/cond/
+    custom_vjp/...), version-robustly."""
+    out = []
+    for v in eqn.params.values():
+        if isinstance(v, (list, tuple)):
+            out.extend(_as_open(b) for b in v if _is_jaxpr(_as_open(b)))
+        else:
+            o = _as_open(v)
+            if _is_jaxpr(o):
+                out.append(o)
+    return out
+
+
+def _is_var(v) -> bool:
+    return hasattr(v, "aval") and not hasattr(v, "val")
+
+
+class _Walker:
+    def __init__(self, report: Report):
+        self.report = report
+
+    # origins: "xs" | "carry" | "const" | "boundary" | "local" | "issue"
+
+    def walk(self, jaxpr, path: str, origins: list[str]) -> Summary:
+        """Analyze one scope. ``origins`` aligns with ``jaxpr.invars``."""
+        origin: dict = {}
+        for v, o in zip(jaxpr.invars, origins):
+            origin[v] = o
+        for v in jaxpr.constvars:
+            origin[v] = "const"
+
+        issue_of: dict = {}      # var -> (machine, local: bool); local means
+        # the issue tag is in THIS scope (dead-issue applies); propagated
+        # issue values (a callee's issued output, e.g. a scan's final carry)
+        # may be legitimately dropped — the epilogue/backward decides
+        waited: set = set()      # vars consumed by a wait (incl. via callees)
+        direct_waited: set = set()   # waited by a tag eqn in THIS scope
+        used: set = set()        # vars consumed by anything that matters
+        sink_events: list = []   # (var, name)
+
+        def var_origin(v):
+            if not _is_var(v):
+                return "const"
+            if v in issue_of:
+                return "issue"
+            return origin.get(v, "local")
+
+        for idx, eqn in enumerate(jaxpr.eqns):
+            prim = eqn.primitive.name
+            where = f"{path}/{prim}[{idx}]"
+
+            if prim == TAG_PRIMITIVE:
+                v = eqn.invars[0]
+                role = eqn.params["role"]
+                machine = eqn.params["machine"]
+                name = eqn.params.get("name", "")
+                if role == "issue":
+                    if _is_var(v):
+                        used.add(v)
+                    issue_of[eqn.outvars[0]] = (machine, True)
+                elif role == "wait":
+                    if not _is_var(v):
+                        continue
+                    if v in direct_waited:
+                        self.report.add("gather-double-wait", where,
+                                        f"{machine} buffer waited twice in "
+                                        f"this scope")
+                    o = var_origin(v)
+                    if v in issue_of:
+                        im = issue_of[v][0]
+                        if im not in COMPATIBLE.get(machine, (machine,)):
+                            self.report.add(
+                                "gather-wait-without-issue", where,
+                                f"{machine} wait consumes a value issued by "
+                                f"the {im} machine")
+                    elif o == "local":
+                        self.report.add(
+                            "gather-wait-without-issue", where,
+                            f"{machine} wait consumes a locally-computed "
+                            f"value that no issue produced")
+                    waited.add(v)
+                    direct_waited.add(v)
+                    used.add(v)
+                else:  # sink
+                    sink_events.append((v, name))
+                    if _is_var(v):
+                        used.add(v)
+                continue
+
+            subs = _sub_jaxprs(eqn)
+            if not subs:
+                for v in eqn.invars:
+                    if _is_var(v):
+                        used.add(v)
+                continue
+
+            # call-like eqn: analyze each sub-jaxpr with mapped origins
+            if prim == "scan":
+                self._scan(eqn, subs[0], where, origin, issue_of, waited,
+                           used, var_origin)
+                continue
+
+            for sub in subs:
+                off = len(eqn.invars) - len(sub.invars)
+                if off < 0:   # unmappable; analyze opaquely
+                    self.walk(sub, where, ["boundary"] * len(sub.invars))
+                    for v in eqn.invars:
+                        if _is_var(v):
+                            used.add(v)
+                    continue
+                sub_origins = [var_origin(eqn.invars[off + i])
+                               for i in range(len(sub.invars))]
+                s = self.walk(sub, where, sub_origins)
+                for i in s.used_in:
+                    v = eqn.invars[off + i]
+                    if _is_var(v):
+                        used.add(v)
+                # a callee waiting our var marks it waited (rotation rule),
+                # but is NOT a double-wait candidate: under remat the
+                # backward scope legitimately re-waits the recomputed
+                # forward's buffer
+                for i in s.waited_in:
+                    v = eqn.invars[off + i]
+                    if _is_var(v):
+                        waited.add(v)
+                for v in eqn.invars[:off]:   # unmapped prefix (cond pred, ...)
+                    if _is_var(v):
+                        used.add(v)
+                if len(sub.outvars) == len(eqn.outvars):
+                    for j in s.issued_out:
+                        issue_of.setdefault(eqn.outvars[j], ("gather", False))
+                for pos, name in s.sink_in:
+                    if pos is not None and pos + off >= 0:
+                        sink_events.append((eqn.invars[off + pos], name))
+                    else:
+                        sink_events.append((None, name))
+
+        # ---- scope-level rules ------------------------------------------
+        escaped = set(v for v in jaxpr.outvars if _is_var(v))
+        for v, (machine, local) in issue_of.items():
+            if local and v not in used and v not in escaped:
+                self.report.add(
+                    "gather-dead-issue", path,
+                    f"{machine} issue result is never consumed and never "
+                    f"escapes this scope — the collective's bytes are "
+                    f"dropped")
+
+        # ---- summary for the caller -------------------------------------
+        summ = Summary()
+        pos_of = {v: i for i, v in enumerate(jaxpr.invars) if _is_var(v)}
+        for v in waited:
+            if v in pos_of:
+                summ.waited_in.add(pos_of[v])
+        for v in used:
+            if v in pos_of:
+                summ.used_in.add(pos_of[v])
+        for j, v in enumerate(jaxpr.outvars):
+            if _is_var(v) and v in issue_of:
+                summ.issued_out.add(j)
+        for v, name in sink_events:
+            summ.sink_in.append((pos_of.get(v) if v is not None else None,
+                                 name))
+        return summ
+
+    # -- scan: rotation + sink rules --------------------------------------
+
+    def _scan(self, eqn, body, where, origin, issue_of, waited, used,
+              var_origin):
+        nc = eqn.params.get("num_consts", 0)
+        ncar = eqn.params.get("num_carry", 0)
+        n_in = len(body.invars)
+        kinds = (["const"] * nc + ["carry"] * ncar
+                 + ["xs"] * (n_in - nc - ncar))
+        s = self.walk(body, where, kinds)
+
+        # rotation safety: a carry slot whose carry-out is a fresh issue must
+        # have its carried-in value consumed inside the body
+        body_issue_out = s.issued_out
+        for i in range(ncar):
+            if i in body_issue_out and (nc + i) not in s.used_in:
+                self.report.add(
+                    "buffer-overwrite-before-wait", f"{where}:carry[{i}]",
+                    "rotation slot re-issued while the carried buffer is "
+                    "never consumed — prefetched weights overwritten before "
+                    "their wait")
+
+        # streaming sinks must ride the xs, once per leaf per step
+        names = Counter()
+        for pos, name in s.sink_in:
+            kind = kinds[pos] if pos is not None and pos < len(kinds) \
+                else "local"
+            if kind != "xs":
+                self.report.add(
+                    "sink-not-from-xs", where,
+                    f"streaming sink {name!r} consumed in a scan body does "
+                    f"not ride the scan xs (origin: {kind})")
+            names[name] += 1
+        for name, k in names.items():
+            if k > 1:
+                self.report.add(
+                    "sink-multiplicity", where,
+                    f"streaming sink {name!r} consumed {k} times in one "
+                    f"scan step — its gradient row would be double-counted")
+
+        # caller-side bookkeeping: the scan consumes its operands; the final
+        # carry of an issued slot is a live issue value for the caller
+        for v in eqn.invars:
+            if _is_var(v):
+                used.add(v)
+        for i in body_issue_out:
+            if i < len(eqn.outvars):
+                issue_of.setdefault(eqn.outvars[i], ("gather", False))
+        for i in s.waited_in:
+            v = eqn.invars[i]
+            if _is_var(v):
+                waited.add(v)
+
+
+def analyze_jaxpr(closed_jaxpr, *, label: str = "step") -> Report:
+    """Run the Layer-1 schedule checks on a closed jaxpr."""
+    report = Report()
+    jaxpr = _as_open(closed_jaxpr)
+    _Walker(report).walk(jaxpr, label, ["boundary"] * len(jaxpr.invars))
+    # census: tag event counts, cheap sanity anchors for the golden report
+    counts = _count_tags(jaxpr)
+    for k, v in counts.items():
+        report.census[f"tags/{k}"] = v
+    return report
+
+
+def _count_tags(jaxpr, counts: Counter | None = None) -> Counter:
+    counts = counts if counts is not None else Counter()
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == TAG_PRIMITIVE:
+            counts[f"{eqn.params['machine']}/{eqn.params['role']}"] += 1
+        for sub in _sub_jaxprs(eqn):
+            _count_tags(sub, counts)
+    return counts

@@ -1,0 +1,258 @@
+"""Layer 3: repo-specific source lint for the comm contracts.
+
+AST-based rules that keep the communication discipline enforceable at the
+source level, where the jaxpr/HLO layers cannot see intent:
+
+  raw-psum       ``lax.psum`` on floating-point values is non-deterministic
+                 across fabric schedules; every fp reduction must go through
+                 ``core/collectives.py`` (``det_psum`` for bitwise-stable
+                 metrics, ``activation_psum`` for serving activations).
+                 Allowed in core/collectives.py itself.
+  pallas-call    ``pl.pallas_call`` outside ``kernels/`` bypasses the
+                 impl-dispatch layer (jnp / pallas / pallas_interpret) and
+                 the interpret-mode CI leg.
+  dequant-math   quantize/dequantize calls outside ``kernels/`` must be
+                 ``ops.``-qualified: the dispatch table in ``kernels/ops.py``
+                 is the only sanctioned entry to the quant math (the
+                 reference formulas live in ``kernels/ref.py``).
+  ops-dispatch   importing a kernel submodule directly (``from ..kernels.x
+                 import ...``) outside ``kernels/`` skips the impl dispatch.
+                 Tracked exemptions below name the hot-path kernels not yet
+                 promoted into ``kernels/ops`` (ROADMAP: flash_attention,
+                 selective_scan); an exemption that no longer matches any
+                 import is itself reported (``stale-exemption``) so the list
+                 cannot rot.
+  version-api    JAX-version-sensitive surfaces (``jax.shard_map``,
+                 ``jax.make_mesh``, ``lax.pvary``, ``AxisType``,
+                 ``jax.experimental.shard_map``, ``jax.core`` /
+                 ``jax.extend``) may be touched only in ``compat.py`` — the
+                 single version shim (its docstring explains each).
+
+Waivers: a violation is silenced by the marker
+
+    # contract: allow[rule-id] -- reason
+
+on the violating line itself, or anywhere in the contiguous block of
+comment-only lines directly above it (so multi-line justifications work).
+
+Run as ``python -m repro.analysis.lint [paths...]`` (default: the installed
+``repro`` package source); exits non-zero on unwaived findings.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+from .report import Report
+
+# quant entry points whose math lives in kernels/: callers use ops.<fn>
+QUANT_FNS = {
+    "quantize_int8", "dequantize_int8", "quantize_int4", "dequantize_int4",
+    "dequantize_int4_sum", "dequantize_int8_sum", "dequant_matmul",
+    "matmul_fusable",
+}
+
+# rule -> path prefixes (relative to the repro package root) where the
+# construct is the implementation, not a violation
+ALLOWED = {
+    "raw-psum": ("core/collectives.py",),
+    "pallas-call": ("kernels/",),
+    "dequant-math": ("kernels/",),
+    "ops-dispatch": ("kernels/",),
+    "version-api": ("compat.py",),
+}
+
+# ops-dispatch tracked exemptions: kernels still dispatched by hand, pending
+# promotion into kernels/ops (ROADMAP "remaining hot-path kernels"). Keyed
+# by file, valued by the kernel submodules it may import directly.
+OPS_DISPATCH_EXEMPT = {
+    "models/layers.py": ("flash_attention",),
+    "models/ssm.py": ("selective_scan",),
+}
+
+_WAIVER_RE = re.compile(r"#\s*contract:\s*allow\[([\w-]+)\]")
+
+VERSION_ATTRS = {("jax", "shard_map"), ("jax", "make_mesh"),
+                 ("jax", "core"), ("jax", "extend"), ("lax", "pvary"),
+                 ("jax", "experimental")}
+VERSION_MODULES = ("jax.core", "jax.extend", "jax.experimental.shard_map")
+
+
+def _dotted(node) -> str:
+    """Best-effort dotted name of a call target ('jax.lax.psum', 'psum')."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ".".join(reversed(parts)) if parts else ""
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self):
+        self.raw = []                 # (rule, lineno, message)
+        self.kernel_imports = []      # (submodule, lineno)
+
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func)
+        last = name.rsplit(".", 1)[-1]
+        if last == "psum":
+            self.raw.append((
+                "raw-psum", node.lineno,
+                "raw lax.psum: fp reductions must go through "
+                "core/collectives (det_psum / activation_psum)"))
+        elif last == "pallas_call":
+            self.raw.append((
+                "pallas-call", node.lineno,
+                "pl.pallas_call outside kernels/ bypasses the impl-dispatch "
+                "layer"))
+        elif last in QUANT_FNS:
+            qual = name.rsplit(".", 1)[0] if "." in name else ""
+            if qual.rsplit(".", 1)[-1] != "ops":
+                self.raw.append((
+                    "dequant-math", node.lineno,
+                    f"{last}() must be called through the kernels/ops "
+                    f"dispatch table (ops.{last})"))
+        self.generic_visit(node)
+
+    def _kernel_submodule(self, module: str, level: int) -> str | None:
+        """'foo' if this import reaches kernels.foo, else None."""
+        mod = module or ""
+        if level > 0:                      # relative: ..kernels.x
+            if mod == "kernels" or mod.startswith("kernels."):
+                pass
+            else:
+                return None
+        elif not (mod == "repro.kernels" or mod.startswith("repro.kernels.")):
+            return None
+        tail = mod.split("kernels", 1)[1].lstrip(".")
+        return tail.split(".")[0] if tail else ""
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        sub = self._kernel_submodule(node.module, node.level)
+        if sub is not None:
+            if sub == "":
+                # from ..kernels import X: only the ops dispatch table
+                for a in node.names:
+                    if a.name != "ops":
+                        self.kernel_imports.append((a.name, node.lineno))
+            elif sub != "ops":
+                self.kernel_imports.append((sub, node.lineno))
+        mod = node.module or ""
+        if mod in VERSION_MODULES or mod.startswith("jax.extend") \
+                or mod.startswith("jax.core"):
+            self.raw.append((
+                "version-api", node.lineno,
+                f"import from {mod!r} outside compat.py (the version shim)"))
+        elif mod == "jax.sharding":
+            for a in node.names:
+                if a.name == "AxisType":
+                    self.raw.append((
+                        "version-api", node.lineno,
+                        "AxisType import outside compat.py"))
+        self.generic_visit(node)
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            if a.name.startswith("repro.kernels.") \
+                    and a.name.split(".")[2] != "ops":
+                self.kernel_imports.append((a.name.split(".")[2],
+                                            node.lineno))
+            if a.name in VERSION_MODULES or a.name.startswith("jax.extend"):
+                self.raw.append((
+                    "version-api", node.lineno,
+                    f"import of {a.name!r} outside compat.py"))
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if isinstance(node.value, ast.Name) \
+                and (node.value.id, node.attr) in VERSION_ATTRS:
+            self.raw.append((
+                "version-api", node.lineno,
+                f"{node.value.id}.{node.attr} is version-sensitive; use the "
+                f"compat shim"))
+        self.generic_visit(node)
+
+
+def _waived(lines: list[str], lineno: int, rule: str) -> bool:
+    """Marker on the line, or in the comment-only block directly above."""
+    def has(ln: int) -> bool:
+        if not (1 <= ln <= len(lines)):
+            return False
+        return any(m == rule for m in _WAIVER_RE.findall(lines[ln - 1]))
+
+    if has(lineno):
+        return True
+    ln = lineno - 1
+    while 1 <= ln <= len(lines) and lines[ln - 1].strip().startswith("#"):
+        if has(ln):
+            return True
+        ln -= 1
+    return False
+
+
+def lint_file(path: Path, rel: str, report: Report) -> None:
+    src = path.read_text()
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        report.add("parse-error", f"{rel}:{e.lineno}", str(e))
+        return
+    v = _Visitor()
+    v.visit(tree)
+
+    exempt = OPS_DISPATCH_EXEMPT.get(rel, ())
+    used_exempt = set()
+    for sub, lineno in v.kernel_imports:
+        if sub in exempt:
+            used_exempt.add(sub)
+            continue
+        v.raw.append((
+            "ops-dispatch", lineno,
+            f"direct import of kernels.{sub} outside kernels/ skips the "
+            f"impl-dispatch table (kernels/ops.py)"))
+    for sub in exempt:
+        if sub not in used_exempt:
+            report.add(
+                "stale-exemption", rel,
+                f"ops-dispatch exemption for kernels.{sub} matches no "
+                f"import — remove it from OPS_DISPATCH_EXEMPT")
+
+    for rule, lineno, msg in v.raw:
+        if any(rel == p or rel.startswith(p) for p in ALLOWED.get(rule, ())):
+            continue
+        if _waived(lines, lineno, rule):
+            continue
+        report.add(rule, f"{rel}:{lineno}", msg)
+
+
+def lint_paths(paths: list[str] | None = None) -> Report:
+    """Lint .py files under ``paths`` (default: the repro package source)."""
+    root = Path(__file__).resolve().parents[1]        # .../repro
+    targets = [Path(p) for p in paths] if paths else [root]
+    report = Report()
+    for t in targets:
+        files = sorted(t.rglob("*.py")) if t.is_dir() else [t]
+        for f in files:
+            try:
+                rel = str(f.resolve().relative_to(root)).replace("\\", "/")
+            except ValueError:
+                rel = f.name
+            lint_file(f, rel, report)
+    return report
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    report = lint_paths(args or None)
+    print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,48 @@
+"""Finding/Report containers shared by all three analysis layers.
+
+A ``Finding`` is one contract violation: a rule id (stable, documented in
+DESIGN.md §9), a human-readable location (source file:line, HLO instruction,
+or jaxpr scope path), and a message. A ``Report`` aggregates findings plus
+the census counters the CI baseline gates on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str        # stable rule id, e.g. "gather-wait-without-issue"
+    where: str       # location: "file.py:123", "hlo:all-reduce.5", "scan[0]"
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.where}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class Report:
+    findings: list[Finding] = field(default_factory=list)
+    census: dict[str, int] = field(default_factory=dict)
+
+    def add(self, rule: str, where: str, message: str) -> None:
+        self.findings.append(Finding(rule, where, message))
+
+    def extend(self, other: "Report") -> None:
+        self.findings.extend(other.findings)
+        for k, v in other.census.items():
+            self.census[k] = self.census.get(k, 0) + v
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def rules(self) -> set[str]:
+        return {f.rule for f in self.findings}
+
+    def render(self) -> str:
+        if self.ok:
+            return "OK: all contracts hold"
+        lines = [f"{len(self.findings)} contract violation(s):"]
+        lines += [f"  {f}" for f in self.findings]
+        return "\n".join(lines)

@@ -1,0 +1,82 @@
+"""Contract tags: trace-visible markers on the schedule's issue/wait values.
+
+The schedule contracts (issue before wait, one wait per issue, rotation slot
+not overwritten before its wait) are properties of *values* flowing through
+the traced program, but a jaxpr walker cannot tell a quantized gather payload
+from any other int8 array. ``tag(x, role=..., machine=...)`` threads the
+value through a no-op primitive whose params name the contract role, so the
+dataflow layer (``analysis.dataflow``) can pair issues with waits by
+following actual data dependencies instead of pattern-matching shapes.
+
+Tags are OFF by default — ``tag`` is the identity function unless tracing
+happens under the ``tagging()`` context manager, so the production train
+step's jaxpr (and therefore its HLO, its jit cache key, and every CI
+bitwise check) is byte-identical to the untagged build.
+
+Transformation behaviour of the primitive:
+
+  - impl / abstract eval: identity.
+  - JVP: primal stays tagged, tangent passes through UNtagged. The backward
+    pass re-issues its own collectives (regather, grad-RS) which carry their
+    own tags; tagging cotangents of a forward tag would mislabel them.
+  - batching: vectorized identity (vmap just maps through).
+  - lowering: identity (defensive — tagged programs are meant for tracing
+    and jaxpr inspection, but compiling one must not crash).
+"""
+from __future__ import annotations
+
+import threading
+from functools import partial
+
+import jax
+
+from ..compat import new_primitive
+
+ROLES = ("issue", "wait", "sink")
+MACHINES = ("gather", "regather", "grad_rs", "stream")
+
+contract_tag_p = new_primitive("contract_tag")
+contract_tag_p.def_impl(lambda x, **_: x)
+contract_tag_p.def_abstract_eval(lambda x, **_: x)
+
+from jax.interpreters import ad, batching, mlir  # noqa: E402
+
+ad.defjvp(contract_tag_p, lambda g, x, **_: g)
+batching.defvectorized(contract_tag_p)
+mlir.register_lowering(contract_tag_p, lambda ctx, x, **_: [x])
+
+
+_state = threading.local()
+
+
+def enabled() -> bool:
+    return getattr(_state, "on", False)
+
+
+class tagging:
+    """Context manager enabling contract tags for traces opened inside it."""
+
+    def __enter__(self):
+        self._prev = enabled()
+        _state.on = True
+        return self
+
+    def __exit__(self, *exc):
+        _state.on = self._prev
+        return False
+
+
+def tag(x, *, role: str, machine: str, name: str = ""):
+    """Mark every array leaf of ``x`` with a contract role.
+
+    Identity (returns ``x`` untouched, no primitive bound) unless tracing
+    under ``tagging()``. ``name`` distinguishes concurrent machines — for
+    streamed sinks it is the parameter leaf name, so the sink-multiplicity
+    rule can count per-leaf occurrences.
+    """
+    if not enabled():
+        return x
+    assert role in ROLES, role
+    assert machine in MACHINES, machine
+    bind = partial(contract_tag_p.bind, role=role, machine=machine, name=name)
+    return jax.tree.map(bind, x)

@@ -74,6 +74,20 @@ def pvary(x, axes):
     return x
 
 
+def new_primitive(name: str):
+    """A ``jax.core.Primitive`` across the extend-API migration.
+
+    ``jax.core.Primitive`` moved to ``jax.extend.core`` (the old path warns
+    and is slated for removal); this is the one place that knows which spelling
+    the installed JAX uses.
+    """
+    try:  # jax >= 0.4.34: the supported public surface
+        from jax.extend.core import Primitive
+    except ImportError:  # older releases
+        from jax.core import Primitive
+    return Primitive(name)
+
+
 def enable_cpu_collectives(impl: str = "gloo") -> bool:
     """Select the cross-process collectives backend for the CPU client.
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..analysis.tags import tag as _tag
 from ..compat import pvary as _compat_pvary
 from ..kernels import ops
 from .partition import ZeroConfig
@@ -55,6 +56,23 @@ def det_psum(x, axes: AxisTuple):
         return x
     g = lax.all_gather(x, tuple(axes))
     return jnp.sum(g, axis=0)
+
+
+def activation_psum(x, axes: AxisTuple, out_dtype=None):
+    """Tensor-parallel activation reduction (serving/inference paths).
+
+    Accumulates in fp32 regardless of the activation dtype — partial matmul
+    products are the classic catastrophic-cancellation site — and is the one
+    sanctioned home for a floating-point ``lax.psum`` on activations: TP
+    activation sums stay on the intra tier by construction (the TP axes are
+    the model axes), so the dtype-tier policy (DESIGN.md §9) does not apply,
+    but routing them through here keeps the raw-psum lint rule's allowlist
+    at exactly one file.
+    """
+    if not axes:
+        return x if out_dtype is None else x.astype(out_dtype)
+    out = lax.psum(x.astype(jnp.float32), tuple(axes))
+    return out if out_dtype is None else out.astype(out_dtype)
 
 
 def all_gather_flat(shard, axes: AxisTuple):
@@ -107,11 +125,12 @@ def gather_issue_int8(shard, axes: AxisTuple, cfg: ZeroConfig):
     if axes:
         q = lax.all_gather(q, tuple(axes), tiled=True)
         s = lax.all_gather(s, tuple(axes), tiled=True)
-    return q, s
+    return _tag((q, s), role="issue", machine="gather")
 
 
 def gather_wait_int8(qf, sf, cfg: ZeroConfig, out_dtype=jnp.bfloat16):
     """Local dequant of a prefetched (q, scales) buffer (no communication)."""
+    qf, sf = _tag((qf, sf), role="wait", machine="gather")
     return ops.dequantize_int8(qf, sf, cfg.quant_block, out_dtype,
                                impl=cfg.impl)
 
@@ -272,11 +291,11 @@ def gather_secondary_q(sec_q, sec_s, axes: AxisTuple, cfg: ZeroConfig):
     without ever materializing the dense weight."""
     qf = lax.all_gather(sec_q, tuple(axes), tiled=True)
     sf = lax.all_gather(sec_s, tuple(axes), tiled=True)
-    return qf, sf
+    return _tag((qf, sf), role="issue", machine="regather")
 
 
 def gather_secondary(sec_q, sec_s, axes: AxisTuple, cfg: ZeroConfig,
                      out_dtype=jnp.bfloat16):
     """Backward weight all-gather from the INT8 secondary partition (intra tier)."""
     qf, sf = gather_secondary_q(sec_q, sec_s, axes, cfg)
-    return ops.dequantize_int8(qf, sf, cfg.quant_block, out_dtype, impl=cfg.impl)
+    return gather_wait_int8(qf, sf, cfg, out_dtype)

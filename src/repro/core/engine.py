@@ -50,6 +50,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..analysis.tags import tag as _contract_tag
 from ..compat import shard_map
 from . import collectives as col
 from . import schedule as sched
@@ -158,6 +159,8 @@ class ParamView:
         buf = self._buf(name)
         sink = self._sink(name)
         if sink is not None:
+            sink = _contract_tag(sink, role="sink", machine="stream",
+                                 name=name)
             if buf is not None and fn.mm_stream_pre is not None:
                 return fn.mm_stream_pre(x, self._p[name], buf, sink, transpose)
             if fn.mm_stream is not None:
@@ -171,6 +174,8 @@ class ParamView:
         buf = self._buf(name)
         sink = self._sink(name)
         if sink is not None:
+            sink = _contract_tag(sink, role="sink", machine="stream",
+                                 name=name)
             if buf is not None and fn.full_stream_pre is not None:
                 return fn.full_stream_pre(self._p[name], buf, sink)
             if fn.full_stream is not None:
@@ -622,6 +627,8 @@ class ZeroEngine:
                 view = ParamView(self.fns, prims, overlap=cfg.overlap,
                                  sinks=sinks)
                 loss_sum, tok = loss_fn(view, mb)
+                # contract: allow[raw-psum] -- integer token counts in f32:
+                # exact in any summation order, no det_psum needed
                 gtok = lax.psum(tok.astype(jnp.float32), cfg.axes.all)
                 return loss_sum.astype(jnp.float32) / jnp.maximum(gtok, 1.0), gtok
 
@@ -718,6 +725,7 @@ class ZeroEngine:
             # gtok: integer-valued, exact under any order; loss: det_psum so
             # eval losses match bitwise across process layouts (train step
             # rationale above)
+            # contract: allow[raw-psum] -- integer token counts, order-exact
             gtok = lax.psum(tok.astype(jnp.float32), self.cfg.axes.all)
             loss = col.det_psum(loss_sum.astype(jnp.float32),
                                 self.cfg.axes.all)

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..analysis.tags import tag as _contract_tag
 from ..kernels import ops
 from . import collectives as col
 from . import schedule as sched
@@ -187,6 +188,9 @@ def _mm_apply_q(x, qf, sf, transpose, spec: LeafSpec, cfg: ZeroConfig):
     k, n = _w_kn(spec)
     out_dim = k if transpose else n
     x2 = x.reshape(-1, x.shape[-1]).astype(_dtype(cfg))
+    # the fused kernel IS the wait of this buffer's issue (no explicit
+    # gather_wait_int8 on the fused path) — mark it for analysis.dataflow
+    qf, sf = _contract_tag((qf, sf), role="wait", machine="gather")
     y2 = ops.dequant_matmul(x2, qf, sf, (k, n), cfg.quant_block,
                             transpose=transpose, dtype=_dtype(cfg),
                             impl=cfg.impl)

@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..analysis.tags import tag as _tag
 from . import collectives as col
 from .partition import ZeroConfig
 
@@ -120,12 +121,14 @@ def grad_rs_issue(flat, axes: AxisTuple, cfg: ZeroConfig, *,
     group size and quantization width ride the token, so mismatched
     issue/wait pairs cannot silently decode the wrong wire format."""
     if not axes or cfg.size(axes) == 1:
-        return ("nop", flat)
+        return ("nop", _tag(flat, role="issue", machine="grad_rs"))
     if quantized is None:
         quantized = cfg.quantize_grads
     if not quantized:
-        return ("rs", lax.psum_scatter(flat, tuple(axes), tiled=True))
-    return ("a2a", col.a2a_rs_issue(flat, axes, cfg, bits),
+        return ("rs", _tag(lax.psum_scatter(flat, tuple(axes), tiled=True),
+                           role="issue", machine="grad_rs"))
+    return ("a2a", _tag(col.a2a_rs_issue(flat, axes, cfg, bits),
+                        role="issue", machine="grad_rs"),
             cfg.size(axes), bits)
 
 
@@ -137,8 +140,9 @@ def grad_rs_wait(token, cfg: ZeroConfig, *, out_dtype=jnp.float32):
     op-for-op — bitwise."""
     kind = token[0]
     if kind in ("nop", "rs"):
-        return token[1].astype(out_dtype)
+        return _tag(token[1], role="wait", machine="grad_rs").astype(out_dtype)
     _, (q2, s2), d, bits = token
+    q2, s2 = _tag((q2, s2), role="wait", machine="grad_rs")
     return col.a2a_rs_wait(q2, s2, d, cfg, bits, out_dtype)
 
 

@@ -241,12 +241,26 @@ class Instr:
 
 
 @dataclass
+class CollectiveRecord:
+    """One collective instruction, kept verbatim for contract checking
+    (analysis/contracts.py): the base opcode, the output type (dtype census),
+    the full HLO line (replica groups), and the loop-trip multiplier."""
+    opcode: str
+    out_type: str
+    line: str
+    name: str
+    mult: float
+    wire: float       # ring wire bytes per execution (before mult)
+
+
+@dataclass
 class HLOAnalysis:
     flops: float = 0.0
     hbm_bytes: float = 0.0
     wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
     counts: dict = field(default_factory=lambda: defaultdict(float))
     groups: dict = field(default_factory=dict)   # (op,d,span) -> [wire,count]
+    records: list = field(default_factory=list)  # [CollectiveRecord]
     unknown_loops: int = 0
 
     def add_group(self, op: str, d: int, span: int, wire: float, m: float):
@@ -388,6 +402,8 @@ def analyze(text: str) -> HLOAnalysis:
                 out.wire_bytes[base] += wire * m
                 out.counts[base] += m
                 out.add_group(base, d, span, wire, m)
+                out.records.append(CollectiveRecord(
+                    base, ins.out_type, line, ins.name, m, wire))
             if base in ("dot", "convolution"):
                 out.flops += _dot_flops(line, ins.out_type, symtab) * m
             if base in _HBM_OPS:

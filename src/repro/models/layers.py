@@ -223,8 +223,10 @@ def flash_decode(q, k_loc, v_loc, pos, *, seq_axes: tuple[str, ...] = (),
     num = jnp.einsum("bgrs,bsgd->bgrd", p, v_loc.astype(jnp.float32))
     den = jnp.sum(p, axis=-1)
     if seq_axes:
+        # contract: allow[raw-psum] -- seq-parallel softmax partials over the
+        # intra-tier seq axes; fp32 throughout, single-process decode path
         num = lax.psum(num, seq_axes)
-        den = lax.psum(den, seq_axes)
+        den = lax.psum(den, seq_axes)  # contract: allow[raw-psum]
     out = num / jnp.maximum(den[..., None], 1e-30)
     return out.reshape(b, h, d).astype(q.dtype)
 

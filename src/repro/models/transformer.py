@@ -388,8 +388,10 @@ def _mla_decode(v, p, cfg, m: KindMeta, x, cache, dc: DecCtx):
     ctx_lat = jnp.einsum("bhs,bsc->bhc", pr, lat_c)
     den = pr.sum(-1)
     if dc.seq_axes:
+        # contract: allow[raw-psum] -- seq-parallel softmax partials over the
+        # intra-tier seq axes; fp32 throughout, single-process decode path
         ctx_lat = lax.psum(ctx_lat, dc.seq_axes)
-        den = lax.psum(den, dc.seq_axes)
+        den = lax.psum(den, dc.seq_axes)  # contract: allow[raw-psum]
     ctx_lat = ctx_lat / jnp.maximum(den[..., None], 1e-30)
     o = jnp.einsum("bhc,chv->bhv", ctx_lat, w_v.astype(jnp.float32))
     out = v.mm(p + "wo", o.reshape(b, 1, h * vh).astype(x.dtype))
@@ -755,6 +757,8 @@ class LM:
         if seq_parallel:
             idx = L._linear_index(seq_axes, axis_sizes)
             x_last = jnp.where(idx == n_sp - 1, x[:, -1:], 0)
+            # contract: allow[raw-psum] -- one-hot selection broadcast (only
+            # one shard contributes non-zeros): order-exact by construction
             x_last = lax.psum(x_last.astype(jnp.float32),
                               seq_axes).astype(x.dtype)
         else:

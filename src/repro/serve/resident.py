@@ -29,6 +29,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
+from ..core import collectives as col
 from ..core.engine import ParamView, ZeroEngine
 from ..core.partition import GATHER_Q, MATMUL, LeafSpec
 from ..models.config import ShapeConfig
@@ -191,8 +192,7 @@ class ResidentView(ParamView):
         safe = jnp.clip(local, 0, rows - 1)
         emb = jnp.take(w, safe, axis=0)
         emb = jnp.where(inb[..., None], emb, 0)
-        return lax.psum(emb.astype(jnp.float32),
-                        self._tp_axes).astype(w.dtype)
+        return col.activation_psum(emb, self._tp_axes, out_dtype=w.dtype)
 
     def expert_ffn(self, prefix: str, e_in):
         """Megatron pairing: gate/up column-sharded (ff), down row-sharded."""
@@ -204,7 +204,7 @@ class ResidentView(ParamView):
         # local ff slice contracts against the matching w_down rows; the
         # ff padding rows of w_down are zero so they contribute nothing
         out = jnp.einsum("ecf,efd->ecd", h, wd)
-        return lax.psum(out.astype(jnp.float32), self._tp_axes)
+        return col.activation_psum(out, self._tp_axes)
 
     def _p_leaf(self, name):
         return self._p[name]

@@ -1,0 +1,109 @@
+"""Multi-device (8 fake CPU devices) verifier scenarios.
+
+Run in a subprocess by test_analysis.py so the main pytest process keeps the
+real single-device view:  python tests/_analysis_scenarios.py <name>
+Each scenario asserts internally and prints "SCENARIO_OK <name>".
+"""
+import json
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax import lax  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.compat import shard_map  # noqa: E402
+
+AX = ("data", "node", "gcd")
+
+
+def _mesh():
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(shape=(2, 2, 2), axes=AX)
+
+
+def _cfg(scheme, mesh, **over):
+    from repro.launch.mesh import scheme_config
+    return scheme_config(scheme, mesh, quant_block=64, **over)
+
+
+def _compile(mesh, fn, x):
+    sm = shard_map(fn, mesh=mesh, in_specs=P(AX), out_specs=P(AX),
+                   check_vma=False)
+    return jax.jit(sm).lower(x).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+
+def verifier_clean():
+    """The full CLI passes on the real train step and pins its censuses."""
+    from repro.analysis import check
+
+    with tempfile.TemporaryDirectory() as td:
+        os.environ["REPRO_BENCH_DIR"] = td
+        rc = check.main(["--emit-bench"])
+        assert rc == 0, f"check CLI failed with rc={rc}"
+        with open(os.path.join(td, "BENCH_contracts.json")) as f:
+            data = json.load(f)
+    census = data["census"]["overlap=False/stream=False"]
+    # Layer-1 schedule census: every issue paired, every wait provenanced
+    # (zero_topo base combo, n_mb=2, 2 layers — pinned, not >=, so a silent
+    # drop of half the schedule cannot pass)
+    assert census["tags/gather/issue"] == 28, census
+    assert census["tags/gather/wait"] == 42, census
+    assert census["tags/grad_rs/issue"] == 18, census
+    assert census["tags/grad_rs/wait"] == 18, census
+    assert census["tags/regather/issue"] == 14, census
+    # Layer-2 determinism census: exactly the one folded token psum crosses
+    # beyond the replica axes
+    assert census["collectives/small_fp_allreduce"] == 1, census
+    assert census["wire/int_bytes"] > 0, census
+
+
+def verifier_mutations():
+    """Hand-built bad programs each trip the exact Layer-2 rule."""
+    from repro.analysis import contracts
+    from repro.core import collectives as col
+
+    mesh = _mesh()
+    x = jnp.ones((8, 16384), jnp.float32)
+
+    # 1. a big fp32 psum across the whole mesh: crosses the inter tier at
+    #    volume with no allowlist class -> dtype-tier
+    text = _compile(mesh, lambda s: lax.psum(s, AX), x)
+    rep = contracts.check_hlo(text, _cfg("zero_topo", mesh), mesh,
+                              n_microbatch=2)
+    assert "dtype-tier" in rep.rules(), rep.render()
+
+    # 2. an fp32 weight all-gather under a config that promises quantized
+    #    weight gathers (zeropp: weight axes = all axes) -> dtype-tier
+    text = _compile(mesh, lambda s: lax.all_gather(s, AX, tiled=True), x)
+    rep = contracts.check_hlo(text, _cfg("zeropp", mesh), mesh,
+                              n_microbatch=2)
+    assert "dtype-tier" in rep.rules(), rep.render()
+    assert rep.census.get("collectives/all-gather/inter/fp", 0) >= 1
+
+    # 3. a raw scalar lax.psum beyond the replica axes vs the same metric
+    #    through det_psum -> determinism fires only for the raw one
+    y = jnp.ones((8, 8), jnp.float32)
+    raw = _compile(mesh, lambda s: s * lax.psum(jnp.sum(s), AX), y)
+    rep = contracts.check_hlo(raw, _cfg("zero_topo", mesh), mesh,
+                              n_microbatch=0)
+    assert "determinism" in rep.rules(), rep.render()
+    det = _compile(mesh, lambda s: s * col.det_psum(jnp.sum(s), AX), y)
+    rep = contracts.check_hlo(det, _cfg("zero_topo", mesh), mesh,
+                              n_microbatch=0)
+    assert rep.ok, rep.render()
+
+
+# ---------------------------------------------------------------------------
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    globals()[name]()
+    print(f"SCENARIO_OK {name}")

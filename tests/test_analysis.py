@@ -1,0 +1,387 @@
+"""Comm-contract verifier (repro.analysis): unit tests + mutation tests.
+
+Single-process units: the Layer-1 jaxpr walker on toy traced programs (each
+schedule rule broken deliberately, asserting the exact rule id), Layer-2
+replica-group parsing / tier classification / policy on synthetic HLO with a
+fake mesh, and the Layer-3 AST linter rules with waivers and tracked
+exemptions. The real-engine clean-grid and compiled-HLO mutation scenarios
+run on 8 fake devices in a subprocess (tests/_analysis_scenarios.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(HERE, "..", "src"))
+
+from repro.analysis import dataflow, lint  # noqa: E402
+from repro.analysis import contracts  # noqa: E402
+from repro.analysis import tags  # noqa: E402
+from repro.core.partition import preset  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: jaxpr dataflow rules on toy programs
+# ---------------------------------------------------------------------------
+
+def _issue(x):
+    return tags.tag(x, role="issue", machine="gather")
+
+
+def _wait(x):
+    return tags.tag(x, role="wait", machine="gather")
+
+
+def _toy_report(mutation):
+    """A 2-slot rotation schedule over a scan, with one deliberate break."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def step(ws, x):
+        def body(carry, w):
+            acc, buf = carry
+            nxt = _issue(w)                    # prefetch next layer
+            if mutation == "drop_wait":
+                acc = acc + x.sum()            # buf overwritten, never waited
+            else:
+                y = _wait(buf)
+                acc = acc + (y * x).sum()
+                if mutation == "double_wait":
+                    acc = acc + _wait(buf).sum()
+                if mutation == "wait_no_issue":
+                    acc = acc + _wait(w * 2.0).sum()
+            return (acc, nxt), None
+
+        buf0 = _issue(ws[0])
+        (acc, _), _ = lax.scan(body, (jnp.float32(0.0), buf0), ws)
+        return acc
+
+    with tags.tagging():
+        jx = jax.make_jaxpr(step)(jnp.ones((3, 4)), jnp.ones(4))
+    return dataflow.analyze_jaxpr(jx, label="toy")
+
+
+def test_toy_clean():
+    rep = _toy_report("clean")
+    assert rep.ok, rep.render()
+    assert rep.census["tags/gather/issue"] == 2    # body + prologue
+    assert rep.census["tags/gather/wait"] == 1
+
+
+@pytest.mark.parametrize("mutation,rule", [
+    ("drop_wait", "buffer-overwrite-before-wait"),
+    ("double_wait", "gather-double-wait"),
+    ("wait_no_issue", "gather-wait-without-issue"),
+])
+def test_toy_mutations(mutation, rule):
+    rep = _toy_report(mutation)
+    assert rule in rep.rules(), (mutation, rep.render())
+
+
+def test_dead_issue():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        _ = _issue(x)                          # bytes dropped on the floor
+        return x * 2.0
+
+    with tags.tagging():
+        jx = jax.make_jaxpr(f)(jnp.ones(4))
+    rep = dataflow.analyze_jaxpr(jx)
+    assert rep.rules() == {"gather-dead-issue"}, rep.render()
+
+
+@pytest.mark.parametrize("mutation,rule", [
+    ("clean", None),
+    ("from_carry", "sink-not-from-xs"),
+    ("twice", "sink-multiplicity"),
+])
+def test_sink_rules(mutation, rule):
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def step(ws, x):
+        def body(c, w):
+            if mutation == "from_carry":
+                s = tags.tag(c, role="sink", machine="stream", name="leaf")
+            else:
+                s = tags.tag(w, role="sink", machine="stream", name="leaf")
+            c = c + (s * 1.0).sum()
+            if mutation == "twice":
+                s2 = tags.tag(w, role="sink", machine="stream", name="leaf")
+                c = c + s2.sum()
+            return c, None
+
+        c, _ = lax.scan(body, x.sum(), ws)
+        return c
+
+    with tags.tagging():
+        jx = jax.make_jaxpr(step)(jnp.ones((3, 4)), jnp.ones(4))
+    rep = dataflow.analyze_jaxpr(jx)
+    if rule is None:
+        assert rep.ok, rep.render()
+    else:
+        assert rule in rep.rules(), rep.render()
+
+
+def test_tags_disabled_are_identity():
+    """Outside the tagging() context the tag is a no-op: the traced program
+    contains no contract_tag primitives (the hot path stays byte-identical
+    when the verifier is not looking)."""
+    import jax
+    import jax.numpy as jnp
+
+    jx = jax.make_jaxpr(lambda x: _wait(_issue(x)).sum())(jnp.ones(4))
+    prims = {e.primitive.name for e in jx.jaxpr.eqns}
+    assert dataflow.TAG_PRIMITIVE not in prims
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: replica-group parsing, tier classification, policy
+# ---------------------------------------------------------------------------
+
+AXES = ("data", "node", "gcd")
+
+
+def _fake_mesh():
+    """Duck-typed mesh: classify() only touches axis_names/shape/devices."""
+    return SimpleNamespace(axis_names=AXES,
+                           shape={"data": 2, "node": 2, "gcd": 2},
+                           devices=np.zeros((2, 2, 2)))
+
+
+def _cfg(**over):
+    return preset("zero_topo", intra_axes=("node", "gcd"),
+                  inter_axes=("data",), l0_axes=("gcd",),
+                  axis_sizes={"data": 2, "node": 2, "gcd": 2},
+                  quant_block=64, **over)
+
+
+def test_group_members_explicit():
+    assert contracts.group_members(
+        "x = f32[8] all-gather(y), replica_groups={{0,1},{2,3}}") == [0, 1]
+
+
+def test_group_members_iota():
+    # arange(8).reshape(2,2,2).transpose(1,2,0) -> first row [0, 4]
+    line = "x = f32[8] all-gather(y), replica_groups=[4,2]<=[2,2,2]T(1,2,0)"
+    assert contracts.group_members(line) == [0, 4]
+    line = "x = f32[8] all-gather(y), replica_groups=[4,2]<=[8]"
+    assert contracts.group_members(line) == [0, 1]
+
+
+def test_spanned_axes_and_tiers():
+    dims = (2, 2, 2)
+    assert contracts.spanned_axes([0, 1], dims, AXES) == ("gcd",)
+    assert contracts.spanned_axes([0, 2], dims, AXES) == ("node",)
+    assert contracts.spanned_axes([0, 4], dims, AXES) == ("data",)
+    assert contracts.spanned_axes([0, 1, 2, 3], dims, AXES) == ("node", "gcd")
+
+
+def _hlo(body: str) -> str:
+    return textwrap.dedent(f"""\
+    HloModule toy
+
+    ENTRY %main (p0: f32[131072]) -> f32[131072] {{
+    {body}
+    }}
+    """)
+
+
+def test_dtype_tier_violation_and_quantized_pass():
+    mesh, cfg = _fake_mesh(), _cfg()
+    # big fp all-reduce spanning all axes: inter tier, no allowlist class
+    # (zero_topo quantizes grads, so grads-unquantized does not apply)
+    bad = _hlo("  %ar = f32[131072]{0} all-reduce(%p0), "
+               "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add")
+    rep = contracts.check_hlo(bad, cfg, mesh, n_microbatch=0)
+    assert "dtype-tier" in rep.rules(), rep.render()
+    # the same payload on the s8 wire passes
+    good = _hlo("  %ag = s8[131072]{0} all-gather(%q), "
+                "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}")
+    rep = contracts.check_hlo(good, cfg, mesh, n_microbatch=0)
+    assert rep.ok, rep.render()
+    assert rep.census["collectives/all-gather/inter/int"] == 1
+
+
+def test_fp_allowlist_classes():
+    mesh = _fake_mesh()
+    # cross-replica sync: fp32 all-reduce over the replica axes only
+    crs = _hlo("  %ar = f32[131072]{0} all-reduce(%p0), "
+               "replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add")
+    rep = contracts.check_hlo(crs, _cfg(), mesh, n_microbatch=0)
+    assert rep.ok, rep.render()
+    # update all-gather over E+R: fp allowed only while the config leaves it
+    # unquantized
+    upd = _hlo("  %ag = f32[131072]{0} all-gather(%p0), "
+               "replica_groups={{0,2,4,6},{1,3,5,7}}, dimensions={0}")
+    assert contracts.check_hlo(upd, _cfg(), mesh, n_microbatch=0).ok
+    rep = contracts.check_hlo(upd, _cfg(quantize_update_gather=True), mesh,
+                              n_microbatch=0)
+    assert "dtype-tier" in rep.rules(), rep.render()
+    # scale sibling: small fp rides with a big int payload over the same group
+    pair = _hlo("  %ag = s8[131072]{0} all-gather(%q), "
+                "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}\n"
+                "  %sc = f32[8192]{0} all-gather(%s), "
+                "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}")
+    rep = contracts.check_hlo(pair, _cfg(), mesh, n_microbatch=0)
+    assert rep.ok, rep.render()
+
+
+def test_determinism_census():
+    mesh, cfg = _fake_mesh(), _cfg()
+    # a small fp all-reduce beyond the replica axes is only legitimate as a
+    # token psum; with a budget of zero, one is a raw lax.psum that must be
+    # rewritten through det_psum
+    psum = _hlo("  %ar = f32[1]{0} all-reduce(%p0), "
+                "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add")
+    rep = contracts.check_hlo(psum, cfg, mesh, n_microbatch=0)
+    assert "determinism" in rep.rules(), rep.render()
+    assert rep.census["collectives/small_fp_allreduce"] == 1
+    # under budget is fine: XLA may fold/hoist the per-microbatch psums
+    assert contracts.check_hlo(psum, cfg, mesh, n_microbatch=1).ok
+    # small fp all-reduces spanning only the replica axes are the per-leaf
+    # cross-replica syncs — excluded from the census even at budget zero
+    crs = _hlo("  %ar = f32[1]{0} all-reduce(%p0), "
+               "replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add")
+    rep = contracts.check_hlo(crs, cfg, mesh, n_microbatch=0)
+    assert rep.ok, rep.render()
+    assert rep.census["collectives/small_fp_allreduce"] == 0
+
+
+def test_mixed_tuple_classifies_int():
+    c = contracts._dtype_census("(s8[65536], f32[1024])")
+    assert c["int_bytes"] > c["fp_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: lint rules, waivers, tracked exemptions
+# ---------------------------------------------------------------------------
+
+def _lint_src(tmp_path, src, rel="somewhere/mod.py"):
+    f = tmp_path / "mod.py"
+    f.write_text(textwrap.dedent(src))
+    from repro.analysis.report import Report
+    rep = Report()
+    lint.lint_file(f, rel, rep)
+    return rep
+
+
+def test_lint_raw_psum_and_waiver(tmp_path):
+    rep = _lint_src(tmp_path, """\
+        from jax import lax
+        def f(x):
+            return lax.psum(x, ("data",))
+    """)
+    assert rep.rules() == {"raw-psum"}
+    rep = _lint_src(tmp_path, """\
+        from jax import lax
+        def f(x):
+            # contract: allow[raw-psum] -- integer counts, order-exact
+            return lax.psum(x, ("data",))
+    """)
+    assert rep.ok, rep.render()
+    # marker anywhere in the contiguous comment block above counts
+    rep = _lint_src(tmp_path, """\
+        from jax import lax
+        def f(x):
+            # contract: allow[raw-psum] -- a long justification that
+            # continues on a second comment line
+            return lax.psum(x, ("data",))
+    """)
+    assert rep.ok, rep.render()
+
+
+def test_lint_allowed_locations(tmp_path):
+    src = """\
+        from jax import lax
+        def f(x):
+            return lax.psum(x, ("data",))
+    """
+    assert _lint_src(tmp_path, src, rel="core/collectives.py").ok
+    assert not _lint_src(tmp_path, src, rel="core/engine.py").ok
+
+
+def test_lint_pallas_and_dequant(tmp_path):
+    rep = _lint_src(tmp_path, """\
+        import jax.experimental.pallas as pl
+        from ..kernels import ops
+        def f(x, q, s):
+            y = pl.pallas_call(None)(x)
+            a = ops.dequantize_int8(q, s)     # sanctioned dispatch
+            b = dequantize_int8(q, s)         # raw quant math
+            return y, a, b
+    """)
+    assert rep.rules() == {"pallas-call", "dequant-math"}, rep.render()
+    assert _lint_src(tmp_path, """\
+        import jax.experimental.pallas as pl
+        def k(x):
+            return pl.pallas_call(None)(x)
+    """, rel="kernels/custom.py").ok
+
+
+def test_lint_ops_dispatch_and_exemptions(tmp_path):
+    rep = _lint_src(tmp_path, """\
+        from ..kernels.quant_blockwise import quantize_int8_pallas
+    """)
+    assert rep.rules() == {"ops-dispatch"}
+    # tracked exemption: models/layers.py may import flash_attention
+    rep = _lint_src(tmp_path, """\
+        from ..kernels.flash_attention import flash_attention_pallas
+    """, rel="models/layers.py")
+    assert rep.ok, rep.render()
+    # ... but only that module
+    rep = _lint_src(tmp_path, """\
+        from ..kernels.selective_scan import selective_scan_pallas
+    """, rel="models/layers.py")
+    assert "ops-dispatch" in rep.rules()
+    # a file whose exemption matches no import reports it as stale
+    rep = _lint_src(tmp_path, "x = 1\n", rel="models/ssm.py")
+    assert rep.rules() == {"stale-exemption"}, rep.render()
+
+
+def test_lint_version_api(tmp_path):
+    rep = _lint_src(tmp_path, """\
+        import jax
+        from jax import lax
+        from jax.experimental.shard_map import shard_map
+        from jax.core import Primitive
+        from jax.sharding import AxisType
+        def f():
+            m = jax.make_mesh((2,), ("a",))
+            return jax.shard_map, lax.pvary
+    """)
+    assert rep.rules() == {"version-api"}
+    assert len(rep.findings) == 6, rep.render()
+    assert _lint_src(tmp_path, "import jax\nm = jax.make_mesh((2,), ('a',))\n",
+                     rel="compat.py").ok
+
+
+def test_lint_repo_is_clean():
+    """The shipped package has zero unwaived violations (acceptance gate)."""
+    rep = lint.lint_paths()
+    assert rep.ok, rep.render()
+
+
+# ---------------------------------------------------------------------------
+# 8-device scenarios (subprocess): real engine clean grid, compiled mutations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["verifier_clean", "verifier_mutations"])
+def test_scenario(name):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_analysis_scenarios.py"), name],
+        capture_output=True, text=True, timeout=900, env=env)
+    tail = (r.stdout + r.stderr)[-4000:]
+    assert r.returncode == 0, f"scenario {name} failed:\n{tail}"
+    assert f"SCENARIO_OK {name}" in r.stdout, tail
