@@ -76,6 +76,15 @@ GATED = {
     "BENCH_contracts.json": [
         "model", "scheme", "n_microbatch", "census.*",
     ],
+    # observability structure (repro.obs.calibrate --quick, the `obs` CI
+    # leg): the schedule-site span census, the phased step's segment and
+    # phase inventories, the probe leaf lists and the metrics JSONL schema.
+    # All deterministic structure — wall-clock never appears in this file,
+    # so any drift is a schedule/obs contract change, not machine noise
+    "BENCH_obs.json": [
+        "model", "scheme", "span_census.*", "segments.*", "phases.*",
+        "probe_inventory.*", "jsonl_schema.*",
+    ],
 }
 
 

@@ -538,20 +538,31 @@ class ZeroEngine:
                              jnp.float32)
                 for n in self.stream_leaf_names()}
 
-    def _to_os(self, name: str, g):
-        """Stage 2 + 3 for a primary-layout grad: reduce-scatter over the
-        extra-grad axes, then the cross-replica sync (seed path; streamed
-        leaves arrive here already reduced)."""
+    def _stage2_rs(self, name: str, g):
+        """Stage 2 for a primary-layout grad: reduce-scatter over the
+        extra-grad axes (paper: intra-node a2a INT4 RS). Output is scattered
+        over weight+extra-grad axes but still device-varying over the
+        replica axes — stage 3 below completes the sync."""
         lcfg = self.leaf_cfg[name]
         g = g.astype(jnp.float32)
         flat = g.reshape(-1, g.shape[-1]) if g.ndim > 1 else g[None]
-
-        def one(row):
-            row = col.reduce_scatter_flat(row, lcfg.axes.extra_grad, lcfg)
-            return col.cross_replica_grad(row, lcfg)
-
-        out = jax.vmap(one)(flat)
+        out = jax.vmap(lambda row: col.reduce_scatter_flat(
+            row, lcfg.axes.extra_grad, lcfg))(flat)
         return out if g.ndim > 1 else out[0]
+
+    def _replica_sync(self, name: str, g):
+        """Stage 3: cross-replica sync of a stage-2-scattered grad."""
+        lcfg = self.leaf_cfg[name]
+        flat = g.reshape(-1, g.shape[-1]) if g.ndim > 1 else g[None]
+        out = jax.vmap(lambda row: col.cross_replica_grad(row, lcfg))(flat)
+        return out if g.ndim > 1 else out[0]
+
+    def _to_os(self, name: str, g):
+        """Stage 2 + 3 for a primary-layout grad (seed path; streamed
+        leaves arrive here already reduced). Split into the two stages so
+        the phased traced step (obs/phased.py) can fence each phase while
+        running the identical per-row collectives."""
+        return self._replica_sync(name, self._stage2_rs(name, g))
 
     def _grads_to_os(self, g_primary: dict, g_os: dict) -> dict:
         """Assemble the full optimizer-shard grad dict in sorted-leaf order
@@ -608,14 +619,43 @@ class ZeroEngine:
           kernel impls and process layouts).
         """
         cfg = self.cfg
-        hp = self.hp
         mesh = self.mesh
         state_specs = self.state_in_specs()
         stream = cfg.stream_grads
-        snames = set(self.stream_leaf_names()) if stream else set()
+        local_grads = self._make_local_grads(loss_fn)
 
         def local_step(state, batch):
-            primaries = state["primaries"]
+            grads, loss_rep, gtok = local_grads(state["primaries"], batch)
+
+            g_legacy, g_sinks = grads if stream else (grads, {})
+            os_grads = self._grads_to_os(g_legacy, g_sinks)
+
+            new_state, metrics = self._finish_step(state, os_grads,
+                                                   loss_rep, gtok)
+            return new_state, metrics
+
+        sm = shard_map(
+            local_step, mesh=mesh,
+            in_specs=(state_specs, batch_specs),
+            out_specs=(state_specs, {k: P() for k in
+                                     ("loss", "grad_norm", "lr", "tokens")}),
+            check_vma=False)
+        return jax.jit(sm, donate_argnums=(0,))
+
+    def _make_local_grads(self, loss_fn: Callable) -> Callable:
+        """The microbatch value_and_grad loop of the train step as a
+        reusable *local* function (must run inside shard_map):
+        ``local_grads(primaries, batch) -> (grads, loss_rep, gtok)`` with
+        ``grads`` still in the differentiation layout — a primary dict, or
+        ``(legacy_primaries, os_sinks)`` when streaming. Shared verbatim by
+        ``make_train_step`` and the phased traced step (obs/phased.py), so
+        the two can never diverge."""
+        cfg = self.cfg
+        hp = self.hp
+        stream = cfg.stream_grads
+        snames = set(self.stream_leaf_names()) if stream else set()
+
+        def local_grads(primaries, batch):
 
             def mb_loss(diff, mb):
                 if stream:
@@ -672,36 +712,34 @@ class ZeroEngine:
             # plain psum — token counts are integers in float32, exact in
             # any summation order.
             loss_rep = col.det_psum(loss, cfg.axes.all)
+            return grads, loss_rep, gtok
 
-            g_legacy, g_sinks = grads if stream else (grads, {})
-            os_grads = self._grads_to_os(g_legacy, g_sinks)
+        return local_grads
 
-            # grad-norm clip (global: os shards partition the full gradient).
-            # det_psum: gnorm feeds the clip scale applied to every gradient,
-            # so a transport-dependent reduction order here would make the
-            # entire update drift across process layouts.
-            sq = sum(jnp.sum(jnp.square(g)) for g in os_grads.values())
-            gnorm = jnp.sqrt(col.det_psum(sq, cfg.axes.all))
-            scale = jnp.minimum(1.0, hp.grad_clip / (gnorm + 1e-6))
-            os_grads = {n: g * scale for n, g in os_grads.items()}
+    def _clip_grads(self, os_grads: dict):
+        """Grad-norm clip (global: os shards partition the full gradient).
+        det_psum: gnorm feeds the clip scale applied to every gradient, so
+        a transport-dependent reduction order here would make the entire
+        update drift across process layouts."""
+        sq = sum(jnp.sum(jnp.square(g)) for g in os_grads.values())
+        gnorm = jnp.sqrt(col.det_psum(sq, self.cfg.axes.all))
+        scale = jnp.minimum(1.0, self.hp.grad_clip / (gnorm + 1e-6))
+        return {n: g * scale for n, g in os_grads.items()}, gnorm
 
-            new_state, lr = self._apply_updates(state, os_grads)
-            # gtok: global token count summed over every microbatch (with
-            # n_mb == 1 it is the single microbatch's global count). Both it
-            # and loss_rep/gnorm are psummed over cfg.axes.all — which
-            # includes any process-spanning axis — so the metrics leaving the
-            # step are CLUSTER-global, not process-local; metrics_to_host
-            # fetches them on every process without a second collective.
-            metrics = dict(loss=loss_rep, grad_norm=gnorm, lr=lr, tokens=gtok)
-            return new_state, metrics
+    def _finish_step(self, state, os_grads: dict, loss_rep, gtok):
+        """Post-reduction tail of the train step (local, inside shard_map):
+        clip + AdamW/update-gather + metrics assembly.
 
-        sm = shard_map(
-            local_step, mesh=mesh,
-            in_specs=(state_specs, batch_specs),
-            out_specs=(state_specs, {k: P() for k in
-                                     ("loss", "grad_norm", "lr", "tokens")}),
-            check_vma=False)
-        return jax.jit(sm, donate_argnums=(0,))
+        gtok: global token count summed over every microbatch (with
+        n_mb == 1 it is the single microbatch's global count). Both it and
+        loss_rep/gnorm are psummed over cfg.axes.all — which includes any
+        process-spanning axis — so the metrics leaving the step are
+        CLUSTER-global, not process-local; metrics_to_host fetches them on
+        every process without a second collective."""
+        os_grads, gnorm = self._clip_grads(os_grads)
+        new_state, lr = self._apply_updates(state, os_grads)
+        metrics = dict(loss=loss_rep, grad_norm=gnorm, lr=lr, tokens=gtok)
+        return new_state, metrics
 
     @staticmethod
     def metrics_to_host(metrics) -> dict[str, float]:

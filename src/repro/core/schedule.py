@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..analysis.tags import tag as _tag
+from ..obs import spans as _spans
 from . import collectives as col
 from .partition import ZeroConfig
 
@@ -82,7 +83,11 @@ def issue_buffers(fns, primaries, names):
     in particular no transposed collective — flows back through the scan
     carry (see module docstring).
     """
-    return {n: fns[n].issue(lax.stop_gradient(primaries[n])) for n in names}
+    # obs scope: names this issue site in profiler traces under --trace;
+    # a nullcontext otherwise (spans.scope is dead by default, like _tag)
+    with _spans.scope("gather/issue"):
+        return {n: fns[n].issue(lax.stop_gradient(primaries[n]))
+                for n in names}
 
 
 # ---------------------------------------------------------------------------
@@ -98,15 +103,18 @@ def regather_issue(primary, sec_q, sec_s, cfg: ZeroConfig):
     the weight axes. Ends at the collective — the dense weight is never
     built here.
     """
-    if sec_q is not None:
-        return col.gather_secondary_q(sec_q, sec_s, cfg.axes.secondary, cfg)
-    return col.gather_issue_int8(primary, cfg.axes.weight, cfg)
+    with _spans.scope("regather/issue"):
+        if sec_q is not None:
+            return col.gather_secondary_q(sec_q, sec_s, cfg.axes.secondary,
+                                          cfg)
+        return col.gather_issue_int8(primary, cfg.axes.weight, cfg)
 
 
 def regather_wait(qf, sf, cfg: ZeroConfig, out_dtype=jnp.bfloat16):
     """Local dequant of a re-gathered wire buffer (unfused fallback; the
     fused dX kernel consumes the wire format directly and skips this)."""
-    return col.gather_wait_int8(qf, sf, cfg, out_dtype)
+    with _spans.scope("regather/wait"):
+        return col.gather_wait_int8(qf, sf, cfg, out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -120,16 +128,18 @@ def grad_rs_issue(flat, axes: AxisTuple, cfg: ZeroConfig, *,
     itself otherwise). Returns an opaque token for ``grad_rs_wait`` — the
     group size and quantization width ride the token, so mismatched
     issue/wait pairs cannot silently decode the wrong wire format."""
-    if not axes or cfg.size(axes) == 1:
-        return ("nop", _tag(flat, role="issue", machine="grad_rs"))
-    if quantized is None:
-        quantized = cfg.quantize_grads
-    if not quantized:
-        return ("rs", _tag(lax.psum_scatter(flat, tuple(axes), tiled=True),
-                           role="issue", machine="grad_rs"))
-    return ("a2a", _tag(col.a2a_rs_issue(flat, axes, cfg, bits),
-                        role="issue", machine="grad_rs"),
-            cfg.size(axes), bits)
+    with _spans.scope("grad_rs/issue"):
+        if not axes or cfg.size(axes) == 1:
+            return ("nop", _tag(flat, role="issue", machine="grad_rs"))
+        if quantized is None:
+            quantized = cfg.quantize_grads
+        if not quantized:
+            return ("rs",
+                    _tag(lax.psum_scatter(flat, tuple(axes), tiled=True),
+                         role="issue", machine="grad_rs"))
+        return ("a2a", _tag(col.a2a_rs_issue(flat, axes, cfg, bits),
+                            role="issue", machine="grad_rs"),
+                cfg.size(axes), bits)
 
 
 def grad_rs_wait(token, cfg: ZeroConfig, *, out_dtype=jnp.float32):
@@ -138,12 +148,14 @@ def grad_rs_wait(token, cfg: ZeroConfig, *, out_dtype=jnp.float32):
     width, payload — rides the token, so issue/wait pairs cannot mismatch.
     ``grad_rs_wait(grad_rs_issue(x)) == collectives.reduce_scatter_flat(x)``
     op-for-op — bitwise."""
-    kind = token[0]
-    if kind in ("nop", "rs"):
-        return _tag(token[1], role="wait", machine="grad_rs").astype(out_dtype)
-    _, (q2, s2), d, bits = token
-    q2, s2 = _tag((q2, s2), role="wait", machine="grad_rs")
-    return col.a2a_rs_wait(q2, s2, d, cfg, bits, out_dtype)
+    with _spans.scope("grad_rs/wait"):
+        kind = token[0]
+        if kind in ("nop", "rs"):
+            return _tag(token[1], role="wait",
+                        machine="grad_rs").astype(out_dtype)
+        _, (q2, s2), d, bits = token
+        q2, s2 = _tag((q2, s2), role="wait", machine="grad_rs")
+        return col.a2a_rs_wait(q2, s2, d, cfg, bits, out_dtype)
 
 
 # ---------------------------------------------------------------------------

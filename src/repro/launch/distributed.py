@@ -208,6 +208,45 @@ def process_index() -> int:
     return jax.process_index()
 
 
+# -- rank heartbeat / stall detection (trace mode) ---------------------------
+
+@dataclass(frozen=True)
+class Heartbeat:
+    """Per-rank stall detector bound to the live process layout.
+
+    Every collective is a barrier: one slow or dead rank hangs the whole
+    cluster with no indication of *which*. In trace mode each process calls
+    ``stamp(step)`` before every step (an atomic per-rank file write,
+    ``obs.heartbeat``); any process can then call ``report()`` to classify
+    every expected rank — ``dead`` (never stamped), ``stalled`` (stamp too
+    old), ``behind`` (step trails the cluster max) — instead of the run
+    hanging silently. tests/test_multiprocess.py's delayed-rank scenario
+    pins the detection.
+    """
+    directory: str
+    rank: int
+    n_ranks: int
+
+    def stamp(self, step: int):
+        from ..obs import heartbeat as hb
+        return hb.stamp(self.directory, self.rank, step)
+
+    def report(self, *, stall_s: float = 30.0) -> dict:
+        from ..obs import heartbeat as hb
+        return hb.straggler_report(self.directory, self.n_ranks,
+                                   stall_s=stall_s)
+
+    def format_report(self, *, stall_s: float = 30.0) -> str:
+        from ..obs import heartbeat as hb
+        return hb.format_report(self.report(stall_s=stall_s))
+
+
+def heartbeat(directory) -> Heartbeat:
+    """Heartbeat handle for this process (requires a live jax runtime —
+    rank/count come from ``jax.process_index``/``process_count``)."""
+    return Heartbeat(str(directory), process_index(), process_count())
+
+
 # -- CLI wiring (launch/train.py, launch/dryrun.py) --------------------------
 
 def add_cli_args(ap) -> None:

@@ -95,10 +95,54 @@ def lower_combo(arch_name: str, shape_name: str, mesh_name: str,
     return eng, lowered, mesh, arch, shape
 
 
+def compare_phases(eng, arch, shape, mesh, metrics_path, topology: str = ""):
+    """Predicted-vs-measured per-phase table (DESIGN.md §10).
+
+    Predicted: ``topo.cost.phase_breakdown`` for THIS combo's config on
+    ``--topology`` (default: the live mesh's synthetic Topology). Measured:
+    the last ``phase_ms`` record in a ``--metrics-jsonl`` stream from a
+    traced run (all rank lanes merged). The two need not share a mesh —
+    the point is eyeballing where the model and a real trace diverge.
+
+    ``--topology`` is applied as an overlay: its link bandwidths replace
+    the same-named axes of the mesh's synthetic topology, so a calibration
+    file from a differently-shaped mesh (obs.calibrate on the 8-device test
+    mesh, say) still prices the axes it actually measured.
+    """
+    from ..obs import metrics as obs_metrics
+    from ..topo import cost as tcost
+    from ..topo.model import Topology, calibrated, load_topology
+    topo = Topology.from_mesh(mesh)
+    if topology:
+        src = load_topology(topology)
+        known = {l.name: l.bandwidth for l in src.links}
+        topo = calibrated(
+            topo, {l.name: known[l.name] for l in topo.links
+                   if l.name in known},
+            name=f"{topo.name}<-{src.name}")
+    n_mb = max(eng.hp.n_microbatch, 1)
+    wl = tcost.Workload(
+        psi=float(eng.param_count()), n_layers=arch.n_layers,
+        tokens_per_device_mb=shape.global_batch * shape.seq_len
+        // mesh.size // n_mb,
+        n_microbatch=n_mb, stream_grads=eng.cfg.stream_grads)
+    pred = tcost.phase_breakdown(eng.cfg, topo, wl)
+    measured = obs_metrics.last_phase_ms(obs_metrics.read_lanes(metrics_path))
+    rows = {}
+    lines = [f"{'phase':<16}{'predicted_ms':>14}{'measured_ms':>14}"]
+    for ph in tcost.PHASES:
+        p = pred[ph]["seconds"] * 1e3
+        m = measured.get(ph)
+        rows[ph] = dict(predicted_ms=p, measured_ms=m)
+        lines.append(f"{ph:<16}{p:>14.3f}" +
+                     (f"{m:>14.2f}" if m is not None else f"{'--':>14}"))
+    return rows, "\n".join(lines)
+
+
 def run_combo(arch_name, shape_name, mesh_name, scheme, outdir: Path,
               quant_block: int = 2048, save_hlo: bool = False,
               serve_mode: str = "zero", engine_opts: dict | None = None,
-              tag: str = ""):
+              tag: str = "", compare: str = "", topology: str = ""):
     t0 = time.time()
     eng, lowered, mesh, arch, shape = lower_combo(
         arch_name, shape_name, mesh_name, scheme, quant_block, serve_mode,
@@ -138,6 +182,11 @@ def run_combo(arch_name, shape_name, mesh_name, scheme, outdir: Path,
         census=census,
         roofline=rl.summary(),
     )
+    if compare and shape.kind == "train":
+        rows, table = compare_phases(eng, arch, shape, mesh, compare,
+                                     topology)
+        rec["phase_compare"] = rows
+        print(table, flush=True)
     outdir.mkdir(parents=True, exist_ok=True)
     name = f"{arch_name}__{shape_name}__{mesh_name}__{scheme}"
     if serve_mode != "zero":
@@ -177,6 +226,14 @@ def main():
                     help="quantization-kernel implementation to lower with "
                          "(DESIGN.md §5); empty inherits the process default")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--compare", default="",
+                    help="metrics JSONL from a traced run (--metrics-jsonl): "
+                         "print a predicted-vs-measured per-phase column for "
+                         "each train combo (DESIGN.md §10)")
+    ap.add_argument("--topology", default="",
+                    help="topology preset or JSON (e.g. obs.calibrate "
+                         "output) pricing --compare's predicted column; "
+                         "default: the live mesh's synthetic topology")
     add_cli_args(ap)
     args = ap.parse_args()
     # multi-process dry-run: each process forces its share of the 512 fake
@@ -223,7 +280,7 @@ def main():
                         run_combo(arch, shape, mesh, scheme, outdir,
                                   args.quant_block, args.save_hlo,
                                   args.serve_mode, engine_opts or None,
-                                  args.tag)
+                                  args.tag, args.compare, args.topology)
                     except Exception as e:
                         failures.append((arch, shape, mesh, scheme, str(e)))
                         print(f"FAIL {arch} {shape} {mesh} {scheme}: "

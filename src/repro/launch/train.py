@@ -63,6 +63,25 @@ def main():
                     help="--scheme auto: per-device memory budget in GB "
                          "(0 = unbounded; fake CPU devices have no real HBM)")
     ap.add_argument("--log-json", default="")
+    g = ap.add_argument_group(
+        "observability", "opt-in runtime tracing (DESIGN.md §10); without "
+        "--trace the monolithic step runs untouched and every bitwise "
+        "contract holds")
+    g.add_argument("--trace", action="store_true",
+                   help="run the phased fenced step: per-phase spans, "
+                        "comm-attribution probes, JSONL metrics stream")
+    g.add_argument("--metrics-jsonl", default="",
+                   help="per-step JSONL metrics path (multi-process runs "
+                        "write per-rank .rank<k> lanes next to it)")
+    g.add_argument("--chrome-trace", default="",
+                   help="write collected spans as a Chrome/Perfetto "
+                        "trace.json at end of run")
+    g.add_argument("--heartbeat-dir", default="",
+                   help="per-rank heartbeat files + straggler report "
+                        "(launch.distributed.Heartbeat)")
+    g.add_argument("--probe-every", type=int, default=4,
+                   help="steps between out-of-band comm-attribution probe "
+                        "runs (0 disables probes)")
     add_cli_args(ap)
     args = ap.parse_args()
     if args.resume and not args.ckpt_dir:
@@ -131,8 +150,19 @@ def main():
          f"processes={dcfg.num_processes} ({dcfg.source})")
     log0(f"per-device state bytes: {eng.memory_report()}")
 
+    trace = None
+    if args.trace or args.metrics_jsonl or args.chrome_trace \
+            or args.heartbeat_dir:
+        from ..obs.spans import TraceConfig
+        trace = TraceConfig(metrics_path=args.metrics_jsonl or None,
+                            chrome_trace=args.chrome_trace or None,
+                            heartbeat_dir=args.heartbeat_dir or None,
+                            probe_every=args.probe_every)
+        log0(f"trace mode: phased fenced step (float-close, NOT bitwise, "
+             f"to the fused step) probes_every={args.probe_every}")
+
     from ..train.trainer import _host_int
-    tr = Trainer(model, eng, mesh, shape)
+    tr = Trainer(model, eng, mesh, shape, trace=trace)
     if args.resume and args.ckpt_dir:
         state = tr.restore(args.ckpt_dir)
         log0(f"resumed from step {_host_int(state['step'])}")
@@ -144,6 +174,14 @@ def main():
                    print_fn=log0)
     if args.log_json and dcfg.process_id == 0:
         tr.log.save(args.log_json)
+    if args.heartbeat_dir:
+        from .distributed import heartbeat
+        log0(heartbeat(args.heartbeat_dir).format_report())
+    agg = tr.log.aggregates()
+    if agg.get("n_timed_steps"):
+        log0(f"throughput (excl. compile step): "
+             f"{agg['tokens_per_s_mean']:.0f} tok/s, "
+             f"{agg['tflops_per_gpu_mean']:.3f} model-TFLOPS/GPU")
     log0(f"final loss: {tr.log.losses[-1]}")
 
 

@@ -1,0 +1,256 @@
+"""Measured-vs-predicted calibration loop (DESIGN.md §10).
+
+    PYTHONPATH=src python -m repro.obs.calibrate \
+        [--scheme zero_topo] [--steps 4] [--out-topology topo_calibrated.json]
+
+Runs a reduced-model traced loop (the phased fenced step of ``obs.phased``
+plus the comm-attribution probes), compares measured per-phase seconds
+against ``topo.cost.step_cost``'s prediction for the same ZeroConfig,
+reports per-phase error, and back-solves effective link bandwidths into a
+calibrated ``Topology`` JSON the planner consumes
+(``python -m repro.topo.planner --topology <file>``) — closing the loop so
+``--scheme auto`` can plan off *measured*, not preset, bandwidths.
+
+Back-solve: the model prices each phase as ``wire_bytes/bandwidth(axes) +
+latency_s`` with the bottleneck axis setting the bandwidth
+(``topo.cost.phase_breakdown``). Holding the latency model fixed, a
+measurement ``m`` inverts to ``eff_bw = wire_bytes / max(m - latency_s,
+eps)``, attributed to that phase's bottleneck axis; the per-axis median
+over phases becomes the calibrated link bandwidth. On fake CPU devices the
+resulting numbers predict nothing about real hardware — the point here is
+the loop's plumbing; on a real cluster the same command calibrates real
+links.
+
+The overlap A/B (skipped under ``--quick``) measures how much in-loop comm
+the §3 schedule actually hides: the same model's fwd_bwd segment with
+overlap off vs on — ``hidden = clamp(t_serial - t_overlap, 0, comm)`` —
+the measured counterpart of ``Workload.hidden_fraction``.
+
+``--quick`` (the CI ``obs`` leg): two measured steps, no A/B, and emit
+``BENCH_obs.json`` gating only deterministic structure — the contract-tag
+span census, the probe inventory, segment names and the JSONL schema —
+never wall-clock.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+from pathlib import Path
+
+
+def _build(args, overlap: bool, stream: bool):
+    """One (engine, model, concrete batch) at CI scale (check.py idiom)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..core.engine import TrainHparams, ZeroEngine
+    from ..launch.mesh import make_test_mesh, scheme_config
+    from ..models.registry import build_model, get_arch
+
+    mesh = make_test_mesh(shape=tuple(args.mesh), axes=tuple(args.axes))
+    cfg = scheme_config(args.scheme, mesh, quant_block=args.quant_block,
+                        overlap=overlap, stream_grads=stream)
+    arch = get_arch(args.model).reduced(
+        n_layers=args.n_layers, d_model=args.d_model, vocab=args.vocab)
+    model = build_model(arch)
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                     TrainHparams(lr=1e-3, total_steps=64, warmup_steps=0,
+                                  n_microbatch=args.n_microbatch))
+    data_axes = tuple(args.axes)
+    bspecs = {"tokens": P(data_axes)}
+    rows = max(args.n_microbatch, 1) * len(jax.devices())
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jax.device_put(
+        jnp.asarray(rng.integers(0, args.vocab, (rows, args.seq),
+                                 dtype=np.int32)),
+        NamedSharding(mesh, P(data_axes)))}
+    return mesh, cfg, eng, model, arch, bspecs, batch
+
+
+def _measure(args, overlap: bool, stream: bool, *, steps: int, warmup: int):
+    """Traced run: warmup (compile) + measured steps + one probe pass.
+    Returns per-segment and per-phase medians plus wall-time coverage."""
+    import jax
+
+    from .phased import PhasedStep
+    from .spans import SEGMENTS, SpanRecorder
+
+    mesh, cfg, eng, model, arch, bspecs, batch = _build(args, overlap, stream)
+    phased = PhasedStep(eng, model.loss_fn(), bspecs)
+    state = eng.init_state(jax.random.key(0))
+    rec = SpanRecorder()
+    walls = []
+    for i in range(warmup + steps):
+        rec.step = i
+        t0 = time.perf_counter()
+        state, _ = phased(state, batch, rec)
+        walls.append(time.perf_counter() - t0)
+    phased.run_probes(state, batch, rec)
+
+    probe = phased.last_probe(rec)
+    measured = range(warmup, warmup + steps)
+    per_step = [phased.phase_seconds(rec, i, probe) for i in measured]
+    phase = {k: statistics.median([p[k] for p in per_step])
+             for k in per_step[0]}
+    seg = {}
+    for name in SEGMENTS:
+        vals = [s.dur for s in rec.spans
+                if s.name == name and s.step >= warmup]
+        if vals:
+            seg[name] = statistics.median(vals)
+    # spans-sum vs wall coverage over the measured steps (acceptance: the
+    # fenced segments account for the step, within 10%)
+    cov = []
+    for i in measured:
+        segs = sum(v for k, v in rec.step_seconds(i).items()
+                   if k in SEGMENTS)
+        cov.append(segs / walls[i] if walls[i] > 0 else 0.0)
+    return dict(mesh=mesh, cfg=cfg, eng=eng, model=model, arch=arch,
+                bspecs=bspecs, batch=batch, phased=phased, rec=rec,
+                seg=seg, phase=phase, probe=probe,
+                coverage=statistics.median(cov))
+
+
+def solve_bandwidths(predicted: dict, measured_phase: dict,
+                     *, eps: float = 1e-9) -> dict[str, float]:
+    """Invert the cost model per phase and reduce to per-axis medians.
+
+    ``predicted`` is ``topo.cost.phase_breakdown`` output; ``measured_phase``
+    maps phase name -> measured seconds at the same cadence.
+    """
+    per_axis: dict[str, list[float]] = {}
+    for ph, rec in predicted.items():
+        m = measured_phase.get(ph, 0.0)
+        if not rec["wire_bytes"] or rec["bottleneck"] is None or m <= 0:
+            continue
+        eff = rec["wire_bytes"] / max(m - rec["latency_s"], eps)
+        per_axis.setdefault(rec["bottleneck"], []).append(eff)
+    return {ax: statistics.median(vals) for ax, vals in per_axis.items()}
+
+
+def _bench_path() -> Path:
+    return Path(os.environ.get("REPRO_BENCH_DIR", ".")) / "BENCH_obs.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="qwen2-0.5b")
+    ap.add_argument("--scheme", default="zero_topo")
+    ap.add_argument("--overlap", action="store_true")
+    ap.add_argument("--stream-grads", action="store_true")
+    ap.add_argument("--n-microbatch", type=int, default=2)
+    ap.add_argument("--quant-block", type=int, default=64)
+    ap.add_argument("--mesh", type=lambda s: [int(x) for x in s.split(",")],
+                    default=[2, 2, 2])
+    ap.add_argument("--axes", type=lambda s: s.split(","),
+                    default=["data", "node", "gcd"])
+    ap.add_argument("--seq", type=int, default=33)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=4,
+                    help="measured steps (after one compile/warmup step)")
+    ap.add_argument("--topology", default="",
+                    help="preset name or Topology JSON to calibrate "
+                         "(default: Topology.from_mesh of the live mesh)")
+    ap.add_argument("--out-topology", default="topo_calibrated.json",
+                    help="where to write the calibrated Topology JSON")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: 2 measured steps, no overlap A/B, emit "
+                         "BENCH_obs.json (deterministic structure only)")
+    ap.add_argument("--emit-bench", action="store_true")
+    args = ap.parse_args(argv)
+
+    n_dev = 1
+    for d in args.mesh:
+        n_dev *= d
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
+
+    from ..topo import cost as tcost
+    from ..topo.model import Topology, calibrated, load_topology
+    from .metrics import REQUIRED_FIELDS
+    from .spans import SEGMENTS, site_inventory
+
+    steps = 2 if args.quick else args.steps
+    run = _measure(args, args.overlap, args.stream_grads,
+                   steps=steps, warmup=1)
+    eng, cfg, mesh, arch = run["eng"], run["cfg"], run["mesh"], run["arch"]
+
+    topo = load_topology(args.topology) if args.topology \
+        else Topology.from_mesh(mesh)
+    rows_per_mb = len(mesh.devices.flat)   # one row per device per mb here
+    wl = tcost.Workload(
+        psi=float(eng.param_count()), n_layers=arch.n_layers,
+        tokens_per_device_mb=args.seq * rows_per_mb // n_dev,
+        n_microbatch=args.n_microbatch, stream_grads=cfg.stream_grads)
+    pred = tcost.phase_breakdown(cfg, topo, wl)
+
+    print(f"calibrate: {arch.name}/{cfg.name} on {topo.name} "
+          f"({steps} measured steps, n_mb={args.n_microbatch})")
+    print(f"span/wall coverage (median): {run['coverage']:.3f}")
+    print(f"{'phase':<16}{'measured_ms':>12}{'predicted_ms':>14}{'error':>9}")
+    for ph in tcost.PHASES:
+        m = run["phase"].get(ph, 0.0)
+        p = pred[ph]["seconds"]
+        err = f"{(m - p) / p:+8.1%}" if p > 0 else "      --"
+        print(f"{ph:<16}{m * 1e3:>12.2f}{p * 1e3:>14.3f}{err:>9}")
+    mcomp = run["phase"].get("compute", 0.0)
+    pcomp = 6.0 * wl.psi * wl.n_microbatch * wl.tokens_per_device_mb \
+        / topo.flops_per_device
+    print(f"{'compute':<16}{mcomp * 1e3:>12.2f}{pcomp * 1e3:>14.3f}")
+
+    # measured overlap A/B: same model, §3 prefetch off vs on
+    if not args.quick:
+        serial = _measure(args, False, args.stream_grads, steps=steps,
+                          warmup=1)
+        over = _measure(args, True, args.stream_grads, steps=steps, warmup=1)
+        comm = sum(run["phase"].get(ph, 0.0)
+                   for ph in ("fwd_allgather", "bwd_allgather", "grad_rs_w"))
+        hidden = min(max(serial["seg"].get("fwd_bwd", 0.0)
+                         - over["seg"].get("fwd_bwd", 0.0), 0.0), comm)
+        frac = hidden / comm if comm > 0 else 0.0
+        print(f"overlap A/B: fwd_bwd serial "
+              f"{serial['seg'].get('fwd_bwd', 0.0) * 1e3:.2f}ms vs "
+              f"overlapped {over['seg'].get('fwd_bwd', 0.0) * 1e3:.2f}ms -> "
+              f"hidden {hidden * 1e3:.2f}ms "
+              f"({frac:.2f} of in-loop comm; "
+              f"model hidden_fraction={wl.hidden_fraction})")
+
+    eff = solve_bandwidths(pred, run["phase"])
+    for ax, bw in sorted(eff.items()):
+        print(f"effective bandwidth[{ax}]: {bw / 1e9:.3f} GB/s "
+              f"(preset {topo.link(ax).bandwidth / 1e9:.3f})")
+    cal = calibrated(topo, eff)
+    if args.out_topology:
+        cal.save(args.out_topology)
+        print(f"wrote calibrated topology -> {args.out_topology} "
+              f"(feed to: python -m repro.topo.planner --topology "
+              f"{args.out_topology})")
+
+    if args.quick or args.emit_bench:
+        # deterministic structure only — the gateable part of this run
+        step = eng.make_train_step(run["model"].loss_fn(), run["bspecs"])
+        census = site_inventory(step, eng.abstract_state(), run["batch"])
+        bench = dict(
+            model=args.model, scheme=args.scheme,
+            span_census=census,
+            segments=list(SEGMENTS),
+            phases=list(tcost.PHASES),
+            probe_inventory=run["phased"].probe_inventory(),
+            jsonl_schema=list(REQUIRED_FIELDS),
+        )
+        path = _bench_path()
+        path.write_text(json.dumps(bench, indent=2, sort_keys=True))
+        print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Rank heartbeat / stall detector for multi-process trace mode.
+
+Every collective in the step is a barrier: one slow or dead rank stalls the
+whole cluster with no indication of *which* rank. In trace mode each
+process stamps a tiny heartbeat file before every step; any process (or a
+human with ``ls``) can then read all stamps and produce a straggler report
+naming the rank that is behind or silent. Stamps are written atomically
+(tmp + rename) so a reader never sees a torn JSON.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+
+def stamp_path(directory, rank: int) -> Path:
+    return Path(directory) / f"heartbeat.rank{rank}.json"
+
+
+def stamp(directory, rank: int, step: int) -> Path:
+    """Atomically record ``rank`` entering ``step`` at wall-clock now."""
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    path = stamp_path(d, rank)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(
+        dict(rank=rank, step=step, time=time.time(), pid=os.getpid())))
+    os.replace(tmp, path)
+    return path
+
+
+def read_stamps(directory) -> dict[int, dict]:
+    out: dict[int, dict] = {}
+    for p in sorted(Path(directory).glob("heartbeat.rank*.json")):
+        try:
+            rec = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue  # mid-replace on a non-atomic filesystem; next read wins
+        out[int(rec["rank"])] = rec
+    return out
+
+
+def straggler_report(directory, n_ranks: int, *, stall_s: float = 30.0,
+                     now: float | None = None) -> dict:
+    """Classify every expected rank from its last heartbeat.
+
+    A rank is ``dead`` if it never stamped, ``stalled`` if its stamp is
+    older than ``stall_s`` seconds, and ``behind`` if its step trails the
+    cluster max (the rank everyone else is waiting on). ``ok`` is True only
+    when every rank stamped recently at the max step.
+    """
+    now = time.time() if now is None else now
+    stamps = read_stamps(directory)
+    max_step = max((r["step"] for r in stamps.values()), default=-1)
+    ranks = {}
+    for rank in range(n_ranks):
+        rec = stamps.get(rank)
+        if rec is None:
+            ranks[rank] = dict(status="dead", step=None, age_s=None)
+        else:
+            age = now - rec["time"]
+            status = ("stalled" if age > stall_s
+                      else "behind" if rec["step"] < max_step else "ok")
+            ranks[rank] = dict(status=status, step=rec["step"],
+                               age_s=round(age, 3))
+    bad = sorted(r for r, v in ranks.items() if v["status"] != "ok")
+    return dict(ok=not bad, max_step=max_step, stragglers=bad, ranks=ranks)
+
+
+def format_report(report: dict) -> str:
+    if report["ok"]:
+        return f"heartbeat: all ranks ok at step {report['max_step']}"
+    lines = [f"heartbeat: STRAGGLERS at step {report['max_step']}: "
+             f"ranks {report['stragglers']}"]
+    for rank, v in sorted(report["ranks"].items()):
+        if v["status"] != "ok":
+            lines.append(f"  rank {rank}: {v['status']}"
+                         f" (step={v['step']}, age={v['age_s']}s)")
+    return "\n".join(lines)

@@ -1,0 +1,163 @@
+"""Phase spans: host-side fenced timers + profiler annotations, dead by default.
+
+The engine's step is one fused jit program — nothing inside it can be timed
+from the host. Trace mode (``--trace``, DESIGN.md §10) therefore runs the
+*phased* step (``obs.phased``): the same math split at the schedule's
+machine boundaries into separately-jitted segments, each executed under a
+``SpanRecorder.fenced`` timer that blocks until every output is ready before
+reading the clock. The segment boundaries are exactly the issue/wait/sink
+sites ``analysis/tags.py`` enumerates; ``site_inventory`` re-derives that
+census from a tagged trace so the obs layer and the static verifier can
+never disagree about what the schedule contains.
+
+Discipline (same as ``contract_tag``): everything here is OFF unless running
+under the ``tracing()`` context. ``scope()`` returns a null context and no
+profiler annotation is emitted, so the production step's jaxpr, HLO, jit
+cache key — and every bitwise CI contract — are byte-identical to a build
+without this module. Trace mode itself is *excluded* from the bitwise
+contract: fencing changes XLA's fusion boundaries, so traced losses are
+only required to agree with the seed step within float tolerance
+(tests/_scenarios.py ``obs_trace_equivalence`` pins both properties).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+# top-level segments of the phased step: fenced, directly measured, and
+# summing to the traced step's wall time (the 10% acceptance bound)
+SEGMENTS = ("fwd_bwd", "grad_rs_e", "cross_replica", "gnorm_clip", "update")
+# attribution probes (obs.phased.run_probes): serial re-executions of the
+# in-loop collectives, measured out-of-band and NOT counted in the wall sum
+PROBES = ("fwd", "fwd_allgather", "bwd_allgather", "grad_rs_w",
+          "update_gather")
+
+_state = threading.local()
+
+
+def enabled() -> bool:
+    return getattr(_state, "on", False)
+
+
+class tracing:
+    """Context manager enabling span scopes/annotations for code run inside
+    it (thread-local, re-entrant — the ``tagging()`` discipline)."""
+
+    def __enter__(self):
+        self._prev = enabled()
+        _state.on = True
+        return self
+
+    def __exit__(self, *exc):
+        _state.on = self._prev
+        return False
+
+
+def scope(name: str):
+    """``jax.named_scope("obs.<name>")`` under ``tracing()``, else a null
+    context — so schedule-layer call sites (core/schedule.py) can annotate
+    their issue/wait halves without perturbing production traces."""
+    if not enabled():
+        return contextlib.nullcontext()
+    import jax
+    return jax.named_scope(f"obs.{name}")
+
+
+def _annotation(name: str):
+    """Host-side profiler annotation (shows up in jax.profiler traces)."""
+    import jax
+    ta = getattr(jax.profiler, "TraceAnnotation", None)
+    if ta is None:
+        return contextlib.nullcontext()
+    return ta(f"obs.{name}")
+
+
+@dataclass
+class Span:
+    name: str
+    t0: float        # process-relative seconds (time.perf_counter)
+    dur: float       # seconds
+    step: int = -1
+
+
+@dataclass
+class SpanRecorder:
+    """Collects fenced spans; one recorder spans a whole traced run (the
+    ``step`` attribute is bumped per step so Chrome export can lane them)."""
+    step: int = -1
+    spans: list[Span] = field(default_factory=list)
+
+    def fenced(self, name: str, fn, *args):
+        """Run ``fn(*args)``, block until every output is device-ready, and
+        record the wall duration as one span. The fence is the point of the
+        phased step: without it XLA's async dispatch would attribute every
+        phase's time to whichever call finally blocks."""
+        import jax
+        t0 = time.perf_counter()
+        with _annotation(name):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        self.spans.append(Span(name, t0, time.perf_counter() - t0, self.step))
+        return out
+
+    def timed(self, name: str, seconds: float):
+        """Record an externally-measured duration (probe aggregates)."""
+        self.spans.append(Span(name, time.perf_counter() - seconds,
+                               seconds, self.step))
+
+    def step_seconds(self, step: int) -> dict[str, float]:
+        """Per-name summed seconds for one step."""
+        out: dict[str, float] = {}
+        for s in self.spans:
+            if s.step == step:
+                out[s.name] = out.get(s.name, 0.0) + s.dur
+        return out
+
+    def chrome_events(self, rank: int = 0) -> list[dict]:
+        """Chrome/Perfetto ``traceEvents`` (complete events, us units):
+        pid = rank, tid = span name, args carry the step index."""
+        return [dict(name=s.name, ph="X", ts=s.t0 * 1e6, dur=s.dur * 1e6,
+                     pid=rank, tid=s.name, args={"step": s.step})
+                for s in self.spans]
+
+
+def write_chrome_trace(events: list[dict], path) -> str:
+    """Write a chrome://tracing / Perfetto-loadable trace.json."""
+    Path(path).write_text(json.dumps(
+        {"traceEvents": events, "displayTimeUnit": "ms"}))
+    return str(path)
+
+
+def site_inventory(step_fn, *abstract_args) -> dict[str, int]:
+    """Schedule-site census of a traced step: ``{machine/role: count}`` of
+    every contract-tag site, by tracing under ``analysis.tags.tagging()``
+    and counting tag primitives — the same counter the static verifier's
+    census uses (``analysis.dataflow``), so the two inventories are equal by
+    construction (tests/test_obs.py pins it)."""
+    import jax
+
+    from ..analysis import tags
+    from ..analysis.dataflow import _count_tags
+    with tags.tagging():
+        jx = jax.make_jaxpr(step_fn)(*abstract_args)
+    return {k: int(v) for k, v in sorted(_count_tags(jx.jaxpr).items())}
+
+
+@dataclass
+class TraceConfig:
+    """Opt-in runtime tracing for Trainer.run (launch/train.py ``--trace``).
+
+    ``probe_every``: cadence (in steps) of the serial comm-attribution
+    probes; 0 disables them. ``heartbeat_dir`` enables the per-rank stall
+    detector (obs.heartbeat via launch.distributed.heartbeat). Trace mode is
+    excluded from the bitwise contract (DESIGN.md §10) — with ``trace=None``
+    the Trainer runs the untouched monolithic step.
+    """
+    metrics_path: str | None = None     # JSONL stream (obs.metrics)
+    chrome_trace: str | None = None     # trace.json written at end of run
+    heartbeat_dir: str | None = None    # per-rank heartbeat files
+    probe_every: int = 4                # 0 = never run attribution probes

@@ -199,9 +199,19 @@ def memory_bytes(cfg: ZeroConfig, psi: float, *,
                 optimizer=opt, total=weights + grads + opt)
 
 
-def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
-              memory_budget: float | None = None) -> StepCost:
-    """Price one train step of ``wl`` under ``cfg`` on ``topo``."""
+def phase_breakdown(cfg: ZeroConfig, topo: Topology,
+                    wl: Workload) -> dict[str, dict]:
+    """Per-phase prediction record: the seconds ``step_cost`` charges plus
+    everything needed to *invert* the model from a measurement
+    (obs.calibrate): total wire bytes at the phase's cadence, the spanned
+    axes and bottleneck axis, and the latency share. For each phase::
+
+        seconds = wire_bytes / bandwidth(axes) + latency_s
+
+    with per-microbatch phases paying the ring latency once per layer per
+    microbatch (the paper's central group-size argument) and wire bytes
+    multiplied by the cadence.
+    """
     vols = phase_volumes(cfg, wl.psi)
     axes = phase_axes(cfg)
     # streaming regime: the stage-2 RS and cross-replica sync run per layer
@@ -209,21 +219,37 @@ def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
     # once-per-step and fully exposed, like the update gather
     in_loop = set(PER_MICROBATCH) | (set(STREAMED) if wl.stream_grads
                                      else set())
-    comm = {}
+    out = {}
     for phase in PHASES:
         ax = axes[phase]
         group = cfg.size(ax)
-        if not ax or group == 1:
-            comm[phase] = 0.0
-            continue
-        wire = vols[phase] / topo.bandwidth(ax)
-        hops = (group - 1) * topo.latency(ax)
-        if phase in in_loop:
-            # inside the layer loop: one collective per layer per microbatch
-            comm[phase] = wl.n_microbatch * (wire + wl.n_layers * hops)
-        else:
-            comm[phase] = wire + hops
-    exposed_s = sum(comm[ph] for ph in PER_STEP if ph not in in_loop)
+        rec = dict(axes=list(ax or ()), group=group,
+                   in_loop=phase in in_loop, seconds=0.0, wire_bytes=0.0,
+                   latency_s=0.0, bottleneck=None)
+        if ax and group > 1:
+            wire = vols[phase] / topo.bandwidth(ax)
+            hops = (group - 1) * topo.latency(ax)
+            if phase in in_loop:
+                # inside the layer loop: one collective per layer per mb
+                rec["seconds"] = wl.n_microbatch * (wire + wl.n_layers * hops)
+                rec["wire_bytes"] = wl.n_microbatch * vols[phase]
+                rec["latency_s"] = wl.n_microbatch * wl.n_layers * hops
+            else:
+                rec["seconds"] = wire + hops
+                rec["wire_bytes"] = vols[phase]
+                rec["latency_s"] = hops
+            rec["bottleneck"] = min(ax, key=lambda a: topo.link(a).bandwidth)
+        out[phase] = rec
+    return out
+
+
+def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
+              memory_budget: float | None = None) -> StepCost:
+    """Price one train step of ``wl`` under ``cfg`` on ``topo``."""
+    vols = phase_volumes(cfg, wl.psi)
+    phases = phase_breakdown(cfg, topo, wl)
+    comm = {phase: phases[phase]["seconds"] for phase in PHASES}
+    exposed_s = sum(comm[ph] for ph in PER_STEP if not phases[ph]["in_loop"])
     tokens_per_device = wl.n_microbatch * wl.tokens_per_device_mb
     compute_s = 6.0 * wl.psi * tokens_per_device / topo.flops_per_device
     kernel_s = 0.0

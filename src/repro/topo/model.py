@@ -228,3 +228,18 @@ def scaled(topo: Topology, axis: str, size: int) -> Topology:
     links = tuple(replace(l, size=size) if l.name == axis else l
                   for l in topo.links)
     return replace(topo, links=links)
+
+
+def calibrated(topo: Topology, eff_bandwidths: dict[str, float],
+               name: str | None = None) -> Topology:
+    """Same topology with *measured* effective bandwidths swapped in on the
+    named axes (the ``obs.calibrate`` back-solve); axes without a
+    measurement keep their preset numbers. The result round-trips through
+    ``save``/``load_topology``, so ``planner --topology <file>`` plans off
+    measured links."""
+    links = tuple(
+        replace(l, bandwidth=float(eff_bandwidths[l.name]))
+        if eff_bandwidths.get(l.name, 0) and eff_bandwidths[l.name] > 0
+        else l for l in topo.links)
+    return replace(topo, name=name or f"{topo.name}:calibrated",
+                   links=links)

@@ -5,6 +5,14 @@ The loop is deliberately thin — all distribution logic lives in
 deterministic data, periodic eval, checkpointing, throughput accounting and
 a modeled-TFLOPS report (6·N·D / step-time; on CPU wall-time is meaningless,
 on TPU this is the paper's TFLOPS-per-GPU metric).
+
+Trace mode (``TraceConfig``, DESIGN.md §10): the loop swaps the monolithic
+step for the phased one (``obs.phased.PhasedStep`` — same math, fenced per
+phase), streams a per-step JSONL metrics record (``obs.metrics``), stamps
+per-rank heartbeats (``obs.heartbeat``) and can export the collected spans
+as a Chrome/Perfetto trace. With ``trace=None`` nothing here changes: the
+untouched monolithic step runs, which is what keeps the bitwise CI
+contracts trivially intact.
 """
 from __future__ import annotations
 
@@ -19,6 +27,9 @@ from ..core.engine import TrainHparams, ZeroEngine, host_scalar
 from ..data.pipeline import BatchSpec, SyntheticTokens, shard_batch, spec_for
 from ..models.config import ArchConfig, ShapeConfig
 from ..models.registry import ModelDef, batch_axes
+from ..obs import heartbeat as obs_heartbeat
+from ..obs import metrics as obs_metrics
+from ..obs.spans import SpanRecorder, TraceConfig, write_chrome_trace
 from . import checkpoint
 
 
@@ -33,26 +44,63 @@ class TrainLog:
     losses: list[float] = field(default_factory=list)
     grad_norms: list[float] = field(default_factory=list)
     step_times: list[float] = field(default_factory=list)
+    lrs: list[float] = field(default_factory=list)
+    tokens: list[float] = field(default_factory=list)
+    tokens_per_s: list[float] = field(default_factory=list)
+    tflops_per_gpu: list[float] = field(default_factory=list)
     meta: dict = field(default_factory=dict)   # scheme/overlap/mesh, for A/Bs
 
-    def record(self, step, metrics, dt):
+    def record(self, step, metrics, dt, *, tokens_per_s: float = 0.0,
+               tflops_per_gpu: float = 0.0):
+        """Persist the FULL metrics dict the step emits, not just
+        loss/gnorm — lr and token counts are what make two logs comparable
+        after the fact."""
         self.steps.append(_host_int(step))
         self.losses.append(float(metrics["loss"]))
         self.grad_norms.append(float(metrics["grad_norm"]))
         self.step_times.append(dt)
+        self.lrs.append(float(metrics.get("lr", 0.0)))
+        self.tokens.append(float(metrics.get("tokens", 0.0)))
+        self.tokens_per_s.append(tokens_per_s)
+        self.tflops_per_gpu.append(tflops_per_gpu)
+
+    def aggregates(self) -> dict:
+        """Run summary. The first recorded step's dt includes trace+compile
+        time, so every throughput/dt aggregate EXCLUDES it (a one-step run
+        has nothing else to offer and keeps its only sample). Loss/gnorm
+        means keep all steps."""
+        if not self.steps:
+            return {}
+        timed = slice(1, None) if len(self.steps) > 1 else slice(None)
+
+        def mean(xs):
+            return sum(xs) / len(xs) if xs else 0.0
+
+        return dict(
+            n_steps=len(self.steps),
+            n_timed_steps=len(self.step_times[timed]),
+            loss_mean=mean(self.losses),
+            grad_norm_mean=mean(self.grad_norms),
+            dt_s_mean=mean(self.step_times[timed]),
+            tokens_per_s_mean=mean(self.tokens_per_s[timed]),
+            tflops_per_gpu_mean=mean(self.tflops_per_gpu[timed]),
+        )
 
     def save(self, path):
-        Path(path).write_text(json.dumps(self.__dict__))
+        payload = dict(self.__dict__)
+        payload["aggregates"] = self.aggregates()
+        Path(path).write_text(json.dumps(payload))
 
 
 class Trainer:
     def __init__(self, model: ModelDef, engine: ZeroEngine, mesh,
                  shape: ShapeConfig, *, seed: int = 0,
-                 data=None):
+                 data=None, trace: TraceConfig | None = None):
         self.model = model
         self.engine = engine
         self.mesh = mesh
         self.shape = shape
+        self.trace = trace
         self.baxes = batch_axes(
             mesh, shape.global_batch,
             candidates=tuple(a for a in mesh.axis_names if a != "pod"))
@@ -63,7 +111,8 @@ class Trainer:
                                             seed=seed)
         self.log = TrainLog(meta=dict(
             arch=model.arch.name, scheme=engine.cfg.name,
-            overlap=engine.cfg.overlap, mesh=dict(mesh.shape)))
+            overlap=engine.cfg.overlap, mesh=dict(mesh.shape),
+            traced=trace is not None))
 
     def _shard_batch(self, np_batch):
         # process-aware: each process feeds only its addressable shards from
@@ -74,18 +123,58 @@ class Trainer:
             ckpt_dir: str | None = None, ckpt_every: int = 0,
             print_fn=print):
         n_params = self.engine.param_count()
+        n_dev = int(self.mesh.devices.size)
         tokens_per_step = self.shape.global_batch * self.shape.seq_len
+        mem_pred = self.engine.memory_report()["total"]
+        rank, n_ranks = jax.process_index(), jax.process_count()
+
+        trace = self.trace
+        rec = writer = phased = None
+        if trace is not None:
+            from ..obs.phased import PhasedStep
+            rec = SpanRecorder()
+            phased = PhasedStep(self.engine, self.model.loss_fn(),
+                                self.bspecs)
+            if trace.metrics_path:
+                writer = obs_metrics.MetricsWriter(
+                    trace.metrics_path, rank=rank, n_ranks=n_ranks)
+
         it = iter(self.data)
         for i in range(n_steps):
             batch = self._shard_batch(next(it))
+            if trace is not None and trace.heartbeat_dir:
+                obs_heartbeat.stamp(trace.heartbeat_dir, rank, i)
             t0 = time.time()
-            state, metrics = self.step_fn(state, batch)
-            jax.tree.map(lambda x: x.block_until_ready(), metrics)
-            dt = time.time() - t0
+            if phased is not None:
+                rec.step = i
+                state, metrics = phased(state, batch, rec)
+                dt = time.time() - t0    # segments are fenced: dt is wall
+                if trace.probe_every and i % trace.probe_every == 0:
+                    phased.run_probes(state, batch, rec)
+            else:
+                state, metrics = self.step_fn(state, batch)
+                jax.tree.map(lambda x: x.block_until_ready(), metrics)
+                dt = time.time() - t0
             # metrics are cluster-global (psum over all axes inside the
             # step); this fetch works on every process of a multi-host run
             metrics = self.engine.metrics_to_host(metrics)
-            self.log.record(state["step"], metrics, dt)
+            toks = metrics.get("tokens") or float(tokens_per_step)
+            tps = toks / dt if dt > 0 else 0.0
+            tfl = obs_metrics.tflops_per_gpu(n_params, toks, dt, n_dev)
+            self.log.record(state["step"], metrics, dt,
+                            tokens_per_s=tps, tflops_per_gpu=tfl)
+            if writer is not None:
+                phase = phased.phase_seconds(rec, i)
+                writer.write(dict(
+                    step=_host_int(state["step"]), rank=rank,
+                    loss=metrics["loss"], grad_norm=metrics["grad_norm"],
+                    lr=metrics["lr"], tokens=toks, dt_s=dt,
+                    tokens_per_s=tps, tflops_per_gpu=tfl,
+                    phase_ms={k: v * 1e3 for k, v in phase.items()},
+                    overlap_efficiency=phased.overlap_efficiency(rec, i),
+                    memory_hw_bytes=obs_metrics.memory_high_water(),
+                    memory_pred_bytes=mem_pred,
+                ))
             if log_every and i % log_every == 0:
                 tflops = 6.0 * n_params * tokens_per_step / dt / 1e12
                 print_fn(f"step {_host_int(state['step']):5d} "
@@ -96,6 +185,15 @@ class Trainer:
             if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
                 checkpoint.save(state, ckpt_dir, _host_int(state["step"]),
                                 scheme=self.engine.scheme_fingerprint())
+        if trace is not None:
+            if trace.heartbeat_dir:
+                obs_heartbeat.stamp(trace.heartbeat_dir, rank, n_steps)
+            if trace.chrome_trace:
+                write_chrome_trace(rec.chrome_events(rank=rank),
+                                   trace.chrome_trace)
+        if writer is not None:
+            writer.close()
+        self._last_recorder = rec
         return state
 
     def restore(self, ckpt_dir, step: int | None = None):

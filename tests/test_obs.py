@@ -1,0 +1,278 @@
+"""Observability layer (DESIGN.md §10): metrics JSONL schema, TFLOPS
+accounting, span recorder + Chrome export, heartbeat classification,
+TrainLog aggregates, and the calibration math (phase_breakdown inversion,
+calibrated-Topology round-trip).
+
+The device-level half — phased-step bitwise equivalence, span/wall
+coverage, the tag-census identity on the 8-device mesh — lives in
+tests/_scenarios.py::obs_trace_equivalence (run via test_distributed.py);
+the multi-process straggler detection in tests/test_multiprocess.py.
+"""
+import json
+import time
+
+import pytest
+
+from repro.obs import heartbeat as hb
+from repro.obs import metrics as om
+from repro.obs import spans
+
+
+def _rec(step, rank=0, **over):
+    rec = dict(step=step, rank=rank, loss=2.0 - 0.1 * step, grad_norm=1.0,
+               lr=1e-3, tokens=1024.0, dt_s=0.5 if step else 10.0,
+               tokens_per_s=2048.0 if step else 102.4,
+               tflops_per_gpu=0.5 if step else 0.025,
+               phase_ms={"fwd_allgather": 1.5, "compute": 40.0},
+               overlap_efficiency=0.6, memory_hw_bytes=0,
+               memory_pred_bytes=123456)
+    rec.update(over)
+    return rec
+
+
+# -- metrics stream ----------------------------------------------------------
+
+def test_metrics_roundtrip(tmp_path):
+    """Writer -> JSONL -> reader preserves every field of every record."""
+    path = tmp_path / "metrics.jsonl"
+    w = om.MetricsWriter(path)
+    written = [w.write(_rec(i)) for i in range(3)]
+    w.close()
+    assert om.read_jsonl(path) == written
+    assert om.read_lanes(path) == written          # stem-only, no lanes
+
+
+def test_metrics_schema_enforced(tmp_path):
+    """A record missing a required field is rejected at write AND read."""
+    w = om.MetricsWriter(tmp_path / "m.jsonl")
+    bad = _rec(0)
+    del bad["tflops_per_gpu"]
+    with pytest.raises(ValueError, match="tflops_per_gpu"):
+        w.write(bad)
+    w.close()
+    (tmp_path / "broken.jsonl").write_text(json.dumps({"step": 0}) + "\n")
+    with pytest.raises(ValueError, match="missing fields"):
+        om.read_jsonl(tmp_path / "broken.jsonl")
+
+
+def test_metrics_rank_lanes(tmp_path):
+    """Multi-process runs write per-rank lane files; read_lanes merges them
+    sorted by (step, rank)."""
+    stem = tmp_path / "metrics.jsonl"
+    assert om.lane_path(stem, 0, 1) == stem
+    assert om.lane_path(stem, 1, 2).name == "metrics.rank1.jsonl"
+    for rank in (1, 0):
+        w = om.MetricsWriter(stem, rank=rank, n_ranks=2)
+        assert w.path != stem
+        for i in range(2):
+            w.write(_rec(i, rank=rank))
+        w.close()
+    merged = om.read_lanes(stem)
+    assert [(r["step"], r["rank"]) for r in merged] == \
+        [(0, 0), (0, 1), (1, 0), (1, 1)]
+
+
+def test_metrics_aggregates_exclude_compile_step():
+    """The first step's dt contains trace+compile time: throughput and dt
+    means must exclude it, while loss/gnorm means keep all steps."""
+    recs = [_rec(i) for i in range(4)]
+    agg = om.aggregates(recs)
+    assert agg["n_steps"] == 4 and agg["n_timed_steps"] == 3
+    assert agg["dt_s_mean"] == 0.5                  # not (10 + 3*0.5)/4
+    assert agg["tokens_per_s_mean"] == 2048.0
+    assert agg["loss_mean"] == pytest.approx(sum(2.0 - 0.1 * i
+                                                 for i in range(4)) / 4)
+    one = om.aggregates(recs[:1])                   # 1-step run keeps its sample
+    assert one["dt_s_mean"] == 10.0
+    assert om.aggregates([]) == {}
+
+
+def test_last_phase_ms():
+    recs = [_rec(0), _rec(1, phase_ms={"grad_rs_w": 3.25}),
+            _rec(2, phase_ms={})]
+    assert om.last_phase_ms(recs) == {"grad_rs_w": 3.25}
+    assert om.last_phase_ms([_rec(0, phase_ms={})]) == {}
+
+
+# -- TFLOPS accounting -------------------------------------------------------
+
+def test_tflops_formula_matches_cost_model():
+    """One 6·N FLOPs-per-token convention across the repo: the runtime
+    accounting (obs.metrics, what the Trainer logs) must equal
+    topo.cost.tflops_per_device (what benchmarks/scaling_model.py prints)
+    when fed the model's own step time."""
+    from repro.topo.cost import Workload, step_cost, tflops_per_device
+    from repro.topo.model import frontier
+    from repro.topo.planner import preset_on_topology
+
+    topo = frontier(8)
+    cfg = preset_on_topology("zero_topo", topo)
+    wl = Workload(psi=1e9, n_layers=16)
+    dt = step_cost(cfg, topo, wl).step_s(wl.hidden_fraction)
+    n_dev = 8 * 8
+    global_tokens = wl.n_microbatch * wl.tokens_per_device_mb * n_dev
+    assert om.tflops_per_gpu(int(wl.psi), global_tokens, dt, n_dev) == \
+        pytest.approx(tflops_per_device(cfg, topo, wl), rel=1e-12)
+    assert om.model_flops_per_token(7) == 42.0
+    assert om.tflops_per_gpu(1, 1.0, 0.0, 8) == 0.0    # degenerate dt
+
+
+def test_trainlog_aggregates_exclude_compile_step():
+    from repro.train.trainer import TrainLog
+    log = TrainLog()
+    for i, dt in enumerate([10.0, 0.5, 0.5]):
+        log.record(i, dict(loss=2.0, grad_norm=1.0, lr=1e-3, tokens=512.0),
+                   dt, tokens_per_s=512.0 / dt, tflops_per_gpu=1.0 / dt)
+    agg = log.aggregates()
+    assert agg["n_steps"] == 3 and agg["n_timed_steps"] == 2
+    assert agg["dt_s_mean"] == 0.5
+    assert agg["tokens_per_s_mean"] == 1024.0
+    assert log.lrs == [1e-3] * 3 and log.tokens == [512.0] * 3
+
+
+# -- spans -------------------------------------------------------------------
+
+def test_spans_dead_by_default():
+    """No tracing context => scope() is a null context and nothing in the
+    module is active — the discipline that keeps production jaxprs (and the
+    bitwise CI contracts) byte-identical to a build without obs."""
+    import contextlib
+    assert not spans.enabled()
+    assert isinstance(spans.scope("gather/issue"), contextlib.nullcontext)
+    with spans.tracing():
+        assert spans.enabled()
+        with spans.tracing():           # re-entrant
+            assert spans.enabled()
+        assert spans.enabled()          # inner exit must not disable outer
+    assert not spans.enabled()
+
+
+def test_span_recorder_and_chrome_export(tmp_path):
+    rec = spans.SpanRecorder()
+    rec.step = 0
+    out = rec.fenced("fwd_bwd", lambda a, b: a + b, 1, 2)
+    assert out == 3
+    rec.timed("fwd_allgather", 0.25)
+    rec.step = 1
+    rec.fenced("fwd_bwd", lambda: None)
+    s0 = rec.step_seconds(0)
+    assert set(s0) == {"fwd_bwd", "fwd_allgather"}
+    assert s0["fwd_allgather"] == 0.25
+    assert set(rec.step_seconds(1)) == {"fwd_bwd"}
+
+    path = spans.write_chrome_trace(rec.chrome_events(rank=3),
+                                    tmp_path / "trace.json")
+    doc = json.loads(open(path).read())
+    evs = doc["traceEvents"]
+    assert len(evs) == 3
+    assert all(e["ph"] == "X" and e["pid"] == 3 for e in evs)
+    assert [e["args"]["step"] for e in evs] == [0, 0, 1]
+    assert evs[1]["dur"] == pytest.approx(0.25e6)
+
+
+# -- heartbeat ---------------------------------------------------------------
+
+def test_heartbeat_classification(tmp_path):
+    """dead / stalled / behind / ok from synthetic stamps, with the ``now``
+    knob pinning ages deterministically."""
+    hb.stamp(tmp_path, 0, 5)
+    hb.stamp(tmp_path, 1, 3)
+    now = time.time()
+    rep = hb.straggler_report(tmp_path, 3, stall_s=60.0, now=now)
+    assert rep["max_step"] == 5 and not rep["ok"]
+    assert rep["ranks"][0]["status"] == "ok"
+    assert rep["ranks"][1]["status"] == "behind"
+    assert rep["ranks"][2]["status"] == "dead"
+    assert rep["stragglers"] == [1, 2]
+    # age every stamp past the stall window
+    stale = hb.straggler_report(tmp_path, 2, stall_s=60.0, now=now + 120)
+    assert all(v["status"] == "stalled" for v in stale["ranks"].values())
+    text = hb.format_report(rep)
+    assert "rank 1: behind" in text and "rank 2: dead" in text
+    ok = hb.straggler_report(tmp_path, 1, stall_s=60.0, now=now)
+    assert ok["ok"] and "all ranks ok" in hb.format_report(ok)
+
+
+def test_heartbeat_stamp_atomic(tmp_path):
+    """Stamps are tmp+rename: re-stamping leaves exactly one valid JSON."""
+    for step in range(3):
+        p = hb.stamp(tmp_path, 0, step)
+    assert json.loads(p.read_text())["step"] == 2
+    assert list(tmp_path.glob("*.tmp")) == []
+    assert hb.read_stamps(tmp_path) == {0: json.loads(p.read_text())}
+
+
+# -- calibration math --------------------------------------------------------
+
+def test_solve_bandwidths_inverts_cost_model():
+    """Feeding phase_breakdown's own predicted seconds back through the
+    back-solve recovers each bottleneck link's preset bandwidth exactly —
+    the identity that makes obs.calibrate's output trustworthy."""
+    from repro.obs.calibrate import solve_bandwidths
+    from repro.topo.cost import Workload, phase_breakdown
+    from repro.topo.model import frontier
+    from repro.topo.planner import preset_on_topology
+
+    topo = frontier(8)
+    cfg = preset_on_topology("zero_topo", topo)
+    pred = phase_breakdown(cfg, topo, Workload(psi=1e9, n_layers=16))
+    measured = {ph: rec["seconds"] for ph, rec in pred.items()}
+    solved = solve_bandwidths(pred, measured)
+    assert solved            # at least one axis solved
+    for ax, bw in solved.items():
+        assert bw == pytest.approx(topo.link(ax).bandwidth, rel=1e-9), ax
+    # halving every wire time (latency share fixed) doubles the solved bw
+    fast = solve_bandwidths(
+        pred, {ph: pred[ph]["latency_s"] + (s - pred[ph]["latency_s"]) / 2
+               for ph, s in measured.items()})
+    for ax in solved:
+        assert fast[ax] == pytest.approx(2 * solved[ax], rel=1e-9), ax
+
+
+def test_calibrated_topology_roundtrip(tmp_path):
+    """model.calibrated overrides only the named links; the saved JSON
+    loads back through load_topology and the planner's preset mapper
+    accepts it (what ``planner --topology <calibrate output>`` does)."""
+    from repro.topo.model import calibrated, frontier, load_topology
+    from repro.topo.planner import preset_on_topology
+
+    topo = frontier(4)
+    cal = calibrated(topo, {"node": 55e9, "bogus": 1.0, "gcd": 0.0})
+    assert cal.link("node").bandwidth == 55e9
+    assert cal.link("gcd").bandwidth == topo.link("gcd").bandwidth  # 0 skipped
+    assert cal.link("data").bandwidth == topo.link("data").bandwidth
+    assert cal.name == "frontier:calibrated"
+    assert cal.link("node").latency == topo.link("node").latency
+
+    path = tmp_path / "topo_calibrated.json"
+    cal.save(path)
+    loaded = load_topology(str(path))
+    assert loaded.link("node").bandwidth == 55e9
+    assert [l.name for l in loaded.links] == [l.name for l in topo.links]
+    cfg = preset_on_topology("zero_topo", loaded)
+    cfg.validate_dependency_rule()
+
+
+def test_phase_breakdown_consistent_with_step_cost():
+    """phase_breakdown is step_cost's own ledger: per-phase seconds match
+    comm_s, exposed_s is the non-in-loop per-step share, and the streaming
+    regime moves the grad phases into the loop."""
+    from repro.topo.cost import (PER_STEP, PHASES, STREAMED, Workload,
+                                 phase_breakdown, step_cost)
+    from repro.topo.model import frontier
+    from repro.topo.planner import preset_on_topology
+
+    topo = frontier(8)
+    cfg = preset_on_topology("zero_topo", topo)
+    for stream in (False, True):
+        wl = Workload(psi=1e9, n_layers=16, stream_grads=stream)
+        pred = phase_breakdown(cfg, topo, wl)
+        cost = step_cost(cfg, topo, wl)
+        assert set(pred) == set(PHASES)
+        for ph in PHASES:
+            assert pred[ph]["seconds"] == cost.comm_s[ph], ph
+        assert cost.exposed_s == pytest.approx(sum(
+            pred[ph]["seconds"] for ph in PER_STEP
+            if not pred[ph]["in_loop"]))
+        for ph in STREAMED:
+            assert pred[ph]["in_loop"] == stream, ph
