@@ -61,6 +61,15 @@ GATED = {
         "topology", "workload.*", "n_schemes_searched",
         "choice.*", "presets.*",
     ],
+    # predicted scaling curve 64->1536 GCDs (benchmarks/scaling_model.py
+    # --quick): TFLOPS/GCD and efficiency-vs-64 per scheme, pure cost-model
+    # arithmetic pinned against the paper's 0.94 at 384 GCDs (the emitter
+    # asserts the tolerance before writing, so the gate pins exact values)
+    "BENCH_scaling.json": [
+        "workload.*", "scales_gcds", "tflops_per_gpu.*",
+        "efficiency_vs_64.*", "efficiency_at_384.*", "ratios_at_384.*",
+        "paper.*",
+    ],
     # per-device memory accounting (benchmarks/memory_table.py): pure byte
     # arithmetic from partition.py's shared formulas — any drift is a
     # memory-model change (engine memory_report uses the same functions,
@@ -149,10 +158,11 @@ def check_file(baseline: Path, emitted: Path) -> list[str]:
     return problems
 
 
-# legs emit disjoint file sets (bench-gate: kernels/comm/plan/memory;
-# analysis: contracts), so each passes --files for what it actually ran
+# legs emit disjoint file sets (bench-gate: kernels/comm/plan/memory/
+# scaling; analysis: contracts), so each passes --files for what it ran
 _BENCH_GATE_FILES = ("BENCH_kernels.json", "BENCH_comm_volume.json",
-                     "BENCH_plan.json", "BENCH_memory.json")
+                     "BENCH_plan.json", "BENCH_memory.json",
+                     "BENCH_scaling.json")
 
 
 def main():

@@ -102,9 +102,20 @@ def print_tables(topo, wl, rows, print_fn=print):
 
 def run(print_fn=print, topology: str = "frontier",
         model: str = "gpt-neox-20b", quick: bool = False,
-        budget_gb: float = 0.0, stream_grads: bool = False):
+        budget_gb: float = 0.0, stream_grads: bool = False,
+        gcds: int = 0):
     import dataclasses
-    topo = load_topology(topology)
+    if gcds:
+        # scale the frontier preset to any GCD count (8 per node) — the
+        # scaling_model sweep's 64..1536 range, one table per scale
+        from repro.topo.model import frontier
+        if topology != "frontier":
+            raise SystemExit("--gcds only rescales the frontier preset")
+        if gcds % 8:
+            raise SystemExit(f"--gcds {gcds} not divisible by 8 GCDs/node")
+        topo = frontier(gcds // 8)
+    else:
+        topo = load_topology(topology)
     wl = model_workload(model) if not quick else Workload(psi=20e9)
     if stream_grads:
         # streaming grad regime (DESIGN.md §8): per-layer grad RS inside
@@ -158,9 +169,13 @@ def main():
                          "the CI gate")
     ap.add_argument("--stream-grads", action="store_true",
                     help="price the streaming grad regime (DESIGN.md §8)")
+    ap.add_argument("--gcds", type=int, default=0,
+                    help="rescale the frontier topology to this GCD count "
+                         "(8/node; the scaling sweep's 64..1536 range)")
     args = ap.parse_args()
     run(topology=args.topology, model=args.model, quick=args.quick,
-        budget_gb=args.budget_gb, stream_grads=args.stream_grads)
+        budget_gb=args.budget_gb, stream_grads=args.stream_grads,
+        gcds=args.gcds)
 
 
 if __name__ == "__main__":

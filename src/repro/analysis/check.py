@@ -93,8 +93,11 @@ def _bench_path() -> Path:
         / "BENCH_contracts.json"
 
 
-def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+def build_parser() -> argparse.ArgumentParser:
+    """The verifier CLI surface (rendered into docs/CLI.md by
+    ``repro.launch.cli_reference``)."""
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis.check",
+                                 description=__doc__.splitlines()[0])
     ap.add_argument("--model", default="qwen2-0.5b")
     ap.add_argument("--scheme", default="zero_topo")
     ap.add_argument("--overlap", action="store_true")
@@ -119,7 +122,11 @@ def main(argv: list[str] | None = None) -> int:
                          "BENCH_contracts.json")
     ap.add_argument("--emit-bench", action="store_true",
                     help="also emit BENCH_contracts.json in single-run mode")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
 
     n_dev = 1
     for d in args.mesh:

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run (deliverable (e)): lower + compile every
 (architecture x input shape x mesh x scheme) combination with
 ShapeDtypeStruct stand-ins — no device allocation — and record
@@ -13,10 +10,12 @@ memory_analysis / cost_analysis / the loop-aware collective census.
 
 Exit code != 0 if any combination fails to lower/compile: failures here
 (sharding mismatch, OOM at compile, unsupported collective) are bugs.
-"""  # noqa: E402
+"""
+from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 import traceback
 from pathlib import Path
@@ -203,8 +202,13 @@ def run_combo(arch_name, shape_name, mesh_name, scheme, outdir: Path,
     return rec
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The dry-run CLI surface (rendered into docs/CLI.md by
+    ``repro.launch.cli_reference``)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.dryrun",
+        description="lower + compile (arch x shape x mesh x scheme) combos "
+                    "on 512 fake devices, no allocation")
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="prod")
@@ -235,11 +239,19 @@ def main():
                          "output) pricing --compare's predicted column; "
                          "default: the live mesh's synthetic topology")
     add_cli_args(ap)
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
+    # 512 fake devices, forced only now (not at import: jax reads XLA_FLAGS
+    # at backend initialization, and the first device touch is the mesh
+    # construction below — importing this module must stay side-effect free
+    # so cli_reference can render the parser)
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     # multi-process dry-run: each process forces its share of the 512 fake
-    # devices; rendezvous before the first device access (jax was imported
-    # above but its backend is still uninitialized — mesh construction is
-    # the first device touch)
+    # devices; rendezvous before the first device access
     dcfg = from_args(args)
     if dcfg.is_distributed:
         if 512 % dcfg.num_processes:

@@ -17,8 +17,13 @@ import os
 from .distributed import add_cli_args, from_args, initialize
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The launcher's full CLI surface (also rendered into docs/CLI.md by
+    ``repro.launch.cli_reference``)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.train",
+        description="training launcher (smoke-scale on fake CPU devices "
+                    "with --reduced, or a real pod)")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--scheme", default="zero_topo",
                     help="partition preset, or 'auto' to let the topology "
@@ -56,9 +61,14 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true",
-                    help="restore the latest checkpoint in --ckpt-dir "
-                         "(fails loudly if it was written under a different "
-                         "scheme/mesh)")
+                    help="restore the latest checkpoint in --ckpt-dir; a "
+                         "checkpoint written under a different mesh/process "
+                         "layout or scheme is resharded onto the live one "
+                         "(elastic restore, DESIGN.md §11)")
+    ap.add_argument("--strict-restore", action="store_true",
+                    help="with --resume: refuse any layout difference "
+                         "(MeshMismatch/SchemeMismatch) instead of "
+                         "resharding — the pre-elastic behavior")
     ap.add_argument("--budget-gb", type=float, default=0.0,
                     help="--scheme auto: per-device memory budget in GB "
                          "(0 = unbounded; fake CPU devices have no real HBM)")
@@ -83,6 +93,11 @@ def main():
                    help="steps between out-of-band comm-attribution probe "
                         "runs (0 disables probes)")
     add_cli_args(ap)
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")
@@ -164,8 +179,9 @@ def main():
     from ..train.trainer import _host_int
     tr = Trainer(model, eng, mesh, shape, trace=trace)
     if args.resume and args.ckpt_dir:
-        state = tr.restore(args.ckpt_dir)
-        log0(f"resumed from step {_host_int(state['step'])}")
+        state = tr.restore(args.ckpt_dir, reshard=not args.strict_restore)
+        log0(f"resumed from step {_host_int(state['step'])}"
+             + ("" if args.strict_restore else " (elastic restore enabled)"))
     else:
         state = eng.init_state(jax.random.key(0))
     state = tr.run(state, args.steps,

@@ -138,8 +138,11 @@ def _bench_path() -> Path:
     return Path(os.environ.get("REPRO_BENCH_DIR", ".")) / "BENCH_obs.json"
 
 
-def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+def build_parser() -> argparse.ArgumentParser:
+    """The calibration CLI surface (rendered into docs/CLI.md by
+    ``repro.launch.cli_reference``)."""
+    ap = argparse.ArgumentParser(prog="python -m repro.obs.calibrate",
+                                 description=__doc__.splitlines()[0])
     ap.add_argument("--model", default="qwen2-0.5b")
     ap.add_argument("--scheme", default="zero_topo")
     ap.add_argument("--overlap", action="store_true")
@@ -165,7 +168,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="CI mode: 2 measured steps, no overlap A/B, emit "
                          "BENCH_obs.json (deterministic structure only)")
     ap.add_argument("--emit-bench", action="store_true")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
 
     n_dev = 1
     for d in args.mesh:

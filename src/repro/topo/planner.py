@@ -166,6 +166,46 @@ def model_workload(model_name: str, *, n_microbatch: int = 4,
                     stream_grads=stream_grads)
 
 
+def replan_from_checkpoint(ckpt: str, topo: Topology, *,
+                           step: int | None = None,
+                           memory_budget: float | None = None,
+                           stream_grads: bool = False,
+                           top_k: int | None = None):
+    """Elastic re-plan (DESIGN.md §11): price the SURVIVING topology for the
+    workload recorded in a checkpoint's meta.json and rank new schemes.
+
+    ``ckpt`` is either a ``step_NNNNNNNN`` directory or a checkpoint root
+    (latest step picked). The workload is recovered from the checkpoint
+    itself — psi from the primaries' global shapes, layer count from the
+    stacked leading dim — so no model registry lookup is needed; the chosen
+    scheme is what ``launch.train --scheme auto --resume`` would build on
+    the new mesh, and the elastic restore path reshards the checkpoint onto
+    it. Returns ``(meta, workload, plans)``. Reads only meta.json (no jax).
+    """
+    import json
+    from pathlib import Path
+    p = Path(ckpt)
+    if not p.name.startswith("step_"):
+        steps = sorted(int(q.name.split("_")[1]) for q in p.glob("step_*"))
+        if step is None:
+            if not steps:
+                raise SystemExit(f"no checkpoints under {ckpt}")
+            step = steps[-1]
+        p = p / f"step_{step:08d}"
+    meta = json.loads((p / "meta.json").read_text())
+    shapes = {k: v for k, v in meta.get("global_shapes", {}).items()
+              if k.startswith("primaries/")}
+    if not shapes:
+        raise SystemExit(f"{p}/meta.json records no primaries leaves")
+    psi = sum(math.prod(v) for v in shapes.values())
+    n_layers = max([v[0] for v in shapes.values() if len(v) == 2],
+                   default=1)
+    wl = Workload(psi=float(psi), n_layers=int(n_layers),
+                  stream_grads=stream_grads)
+    return meta, wl, plan(topo, wl, memory_budget=memory_budget,
+                          top_k=top_k)
+
+
 def format_plans(plans: list[Plan], presets: dict[str, Plan] | None = None,
                  top_k: int = 8) -> str:
     rows = [f"{'#':>3s} {'step(s)':>9s} {'comm(s)':>9s} {'mem/dev':>9s} "
@@ -184,14 +224,21 @@ def format_plans(plans: list[Plan], presets: dict[str, Plan] | None = None,
     return "\n".join(rows)
 
 
-def main(argv=None):
+def build_parser():
     import argparse
     ap = argparse.ArgumentParser(
+        prog="python -m repro.topo.planner",
         description="rank ZeRO partition schemes on a topology")
     ap.add_argument("--topology", default="frontier",
                     help="preset name (frontier/gpu_pod/tpu) or JSON path")
     ap.add_argument("--model", default="gpt_neox_20b",
                     help="registered architecture for the workload")
+    ap.add_argument("--replan-from", default="",
+                    help="checkpoint dir (root or step_NNNNNNNN): take the "
+                         "workload from its meta.json and re-plan for the "
+                         "surviving --topology; adopt the choice by "
+                         "relaunching with --scheme auto --resume "
+                         "(elastic restore reshards the checkpoint)")
     ap.add_argument("--n-microbatch", type=int, default=4)
     ap.add_argument("--tokens-per-device", type=int, default=2048)
     ap.add_argument("--budget-gb", type=float, default=0.0,
@@ -205,16 +252,41 @@ def main(argv=None):
                          "grad memory at os-shard layout")
     ap.add_argument("--save-topology", default="",
                     help="write the resolved topology JSON here and exit")
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
 
     topo = load_topology(args.topology)
     if args.save_topology:
         print(topo.save(args.save_topology))
         return 0
+    budget = args.budget_gb * 1e9 if args.budget_gb else None
+    if args.replan_from:
+        meta, wl, plans = replan_from_checkpoint(
+            args.replan_from, topo, memory_budget=budget,
+            stream_grads=args.stream_grads)
+        saved_mesh = meta.get("mesh", {})
+        saved_scheme = meta.get("scheme", {})
+        print(f"re-planning from checkpoint step {meta.get('step')}: "
+              f"psi={wl.psi / 1e9:.2f}B (padded), {wl.n_layers} layers")
+        print(f"  written on: {dict(zip(saved_mesh.get('axes', []), saved_mesh.get('shape', [])))} "
+              f"{saved_mesh.get('process_count')} process(es), "
+              f"scheme={saved_scheme.get('scheme')} "
+              f"degrees={saved_scheme.get('degrees')}")
+        print(f"  surviving topology {topo.name}: " + ", ".join(
+            f"{l.name}({l.size}) {l.bandwidth / 1e9:.0f}GB/s {l.tier}"
+            for l in topo.links) + f"  [{topo.n_devices} devices]")
+        print(format_plans(plans, top_k=args.top))
+        print("adopt: relaunch `repro.launch.train --scheme auto --resume "
+              "--ckpt-dir ...` on the surviving mesh — elastic restore "
+              "reshards every leaf onto the new layout (DESIGN.md §11)")
+        return 0
     wl = model_workload(args.model, n_microbatch=args.n_microbatch,
                         tokens_per_device_mb=args.tokens_per_device,
                         stream_grads=args.stream_grads)
-    budget = args.budget_gb * 1e9 if args.budget_gb else None
     plans = plan(topo, wl, memory_budget=budget,
                  quantize=False if args.no_quant else None)
     presets = {}

@@ -15,11 +15,26 @@ process its own file back via ``jax.make_array_from_single_device_arrays``
 
 Both formats record the writing run's mesh layout; restoring onto a
 different device/process count raises ``MeshMismatch`` naming both layouts
-(the per-process format physically cannot be re-placed onto a different
-layout, and the global format would otherwise die much later in an opaque
-reshape inside the first train step). Scheme-level layout identity
-(partitioning degrees, padding) is covered by the separate
+(the per-process format physically cannot be re-placed *directly* onto a
+different layout, and the global format would otherwise die much later in
+an opaque reshape inside the first train step). Scheme-level layout
+identity (partitioning degrees, padding) is covered by the separate
 ``SchemeMismatch`` check, same spirit.
+
+Elastic restore (DESIGN.md §11): ``restore(..., reshard=True)`` demotes
+both mismatches from errors to work. Each leaf is routed through the
+partition formulas recorded in the checkpoint's scheme fingerprint
+(core/partition.py): the per-process shard files are reassembled into the
+global logical array using the v1 ``device_map`` (device-id -> mesh coords
+/ owning process), the alignment padding is resized to the restoring
+engine's padded sizes (the padding is exactly zero throughout training, so
+this is truncate-zeros / re-pad-zeros with a refusal if real data would be
+dropped), and the global array is re-placed under the live engine's
+NamedShardings. This is what lets a run killed on one process/device
+layout resume on another (``Trainer.restore`` / ``--resume`` default it
+on). v0 checkpoints (no ``version`` field) restore unchanged on their
+writing layout; per-process v0 files lack the device map and therefore
+cannot cross layouts.
 
 Simple, dependency-free, and round-trip tested — a real deployment would
 swap in async/multi-host Orbax behind the same two functions.
@@ -31,6 +46,24 @@ from pathlib import Path
 
 import jax
 import numpy as np
+
+# meta.json format versions:
+#   v0 (no "version" field) — seed era: names/dtypes/shapes/mesh/scheme.
+#   v1 — adds "version" and "device_map" (device-id -> mesh coords and
+#        owning process), which is what makes per-process shard files
+#        reassemblable on a *different* process layout (reshard=True).
+# Readers accept every version <= FORMAT_VERSION; newer files fail loudly
+# naming both versions instead of misreading fields.
+FORMAT_VERSION = 1
+
+
+def _check_version(meta: dict, where: str):
+    v = int(meta.get("version", 0))
+    if v > FORMAT_VERSION:
+        raise ValueError(
+            f"{where} is checkpoint format v{v}, but this build reads "
+            f"v{FORMAT_VERSION} and older. Upgrade the reader (or re-save "
+            f"the checkpoint with a v{FORMAT_VERSION} writer).")
 
 
 def _flatten(state, prefix=""):
@@ -93,6 +126,20 @@ def mesh_layout(mesh) -> dict:
                 local_devices=int(local))
 
 
+def _device_map(mesh) -> dict:
+    """v1 meta: explicit device-id -> mesh coords and owning process.
+
+    ``jax.make_mesh`` may permute devices for locality, so row-major order
+    over ``mesh.devices`` is NOT implied by the axis sizes — resharding a
+    per-process checkpoint needs the writing run's actual placement."""
+    grid = np.asarray(mesh.devices)
+    coords = {str(d.id): [int(c) for c in idx]
+              for idx, d in np.ndenumerate(grid)}
+    procs = {str(d.id): int(getattr(d, "process_index", 0))
+             for d in grid.ravel()}
+    return dict(coords=coords, process=procs)
+
+
 class MeshMismatch(ValueError):
     """Checkpoint device/process layout does not match the restoring mesh."""
 
@@ -103,24 +150,29 @@ def _fmt_layout(d: dict) -> str:
             f"process(es) x {d.get('local_devices')} local)")
 
 
+def _layout_differs(saved: dict | None, live: dict,
+                    strict_shape: bool = False) -> bool:
+    if saved is None:
+        return False     # legacy checkpoint without mesh metadata
+    return (saved.get("n_devices") != live["n_devices"]
+            or saved.get("process_count") != live["process_count"]
+            or saved.get("local_devices") != live["local_devices"]
+            or (strict_shape and (saved.get("axes") != live["axes"]
+                                  or saved.get("shape") != live["shape"])))
+
+
 def _check_mesh(saved: dict | None, live: dict, where: str,
                 strict_shape: bool = False):
-    if saved is None:
-        return           # legacy checkpoint without mesh metadata
-    mismatch = (saved.get("n_devices") != live["n_devices"]
-                or saved.get("process_count") != live["process_count"]
-                or saved.get("local_devices") != live["local_devices"]
-                or (strict_shape and (saved.get("axes") != live["axes"]
-                                      or saved.get("shape") != live["shape"])))
-    if mismatch:
+    if _layout_differs(saved, live, strict_shape):
         raise MeshMismatch(
             f"{where} was written on a different mesh layout:\n"
             f"  checkpoint: {_fmt_layout(saved)}\n"
             f"  restoring : {_fmt_layout(live)}\n"
             "Shard files are laid out per device/process, so they cannot be "
-            "re-placed across layouts. Relaunch with the checkpoint's "
-            "process/device count, or re-shard the checkpoint explicitly "
-            "(restore on the writing layout, then save on the new one).")
+            "re-placed directly across layouts. Restore with reshard=True "
+            "(the Trainer/--resume default) to route each leaf through the "
+            "partition formulas onto this mesh, or relaunch with the "
+            "checkpoint's process/device count.")
 
 
 def _barrier(tag: str):
@@ -166,11 +218,12 @@ def save(state, ckpt_dir, step: int, scheme: dict | None = None):
         names[k] = base      # per-process files share the base name
 
     if pid == 0:
-        meta = dict(step=step, names=names, dtypes=dtypes,
-                    global_shapes=shapes,
+        meta = dict(version=FORMAT_VERSION, step=step, names=names,
+                    dtypes=dtypes, global_shapes=shapes,
                     format="per_process" if multiprocess else "global")
         if mesh is not None:
             meta["mesh"] = mesh_layout(mesh)
+            meta["device_map"] = _device_map(mesh)
         if scheme is not None:
             meta["scheme"] = scheme
         (d / "meta.json").write_text(json.dumps(meta))
@@ -215,9 +268,8 @@ def latest_step(ckpt_dir) -> int | None:
 
 # -- restore -----------------------------------------------------------------
 
-def _restore_leaf_global(d: Path, fname: str, k: str, meta: dict, sh):
-    arr = _from_disk_dtype(np.load(d / fname),
-                           meta.get("dtypes", {}).get(k))
+def _place_global(arr: np.ndarray, sh):
+    """Place a host-global array under a NamedSharding (or leave it host)."""
     if sh is None:
         return jax.numpy.asarray(arr)
     if jax.process_count() > 1:
@@ -226,6 +278,12 @@ def _restore_leaf_global(d: Path, fname: str, k: str, meta: dict, sh):
         return jax.make_array_from_callback(arr.shape, sh,
                                             lambda idx, a=arr: a[idx])
     return jax.device_put(arr, sh)
+
+
+def _restore_leaf_global(d: Path, fname: str, k: str, meta: dict, sh):
+    arr = _from_disk_dtype(np.load(d / fname),
+                           meta.get("dtypes", {}).get(k))
+    return _place_global(arr, sh)
 
 
 def _restore_leaf_per_process(d: Path, base: str, k: str, meta: dict, sh):
@@ -253,32 +311,209 @@ def _restore_leaf_per_process(d: Path, base: str, k: str, meta: dict, sh):
     return jax.make_array_from_single_device_arrays(shape, sh, bufs)
 
 
-def restore(ckpt_dir, step: int, shardings=None, expect_scheme: dict | None = None):
+# -- elastic restore: reshard any checkpoint onto any mesh (DESIGN.md §11) ---
+
+# flat state categories -> which partition-axis group the leaf's LAST dim is
+# sharded over (ZeroEngine.state_shardings: primaries P(..., weight), os-shard
+# leaves P(..., weight+extra_grad+replica), step replicated)
+_OS_CATS = ("master", "opt_m", "opt_v")
+
+
+def _category_axes(key: str, scheme: dict) -> list[str]:
+    """Mesh axes (major -> minor) the saved leaf was sharded over, from the
+    WRITING engine's scheme fingerprint."""
+    cat = key.split("/", 1)[0]
+    ax = scheme["axes"]
+    if cat == "primaries":
+        return list(ax["weight"])
+    if cat in _OS_CATS:
+        return list(ax["weight"]) + list(ax["extra_grad"]) + list(ax["replica"])
+    return []            # step and anything unknown: replicated
+
+
+def _assemble_global(d: Path, base: str, k: str, meta: dict) -> np.ndarray:
+    """Reassemble one leaf's global array from per-process shard files.
+
+    Every shard's position is computed from the v1 device map + the saved
+    scheme's partition axes: device coords -> shard index along the last
+    (flat padded) dim, major-to-minor over the category's axis tuple —
+    exactly the PartitionSpec semantics the writer sharded under."""
+    scheme, dmap = meta.get("scheme"), meta.get("device_map")
+    if scheme is None or dmap is None:
+        raise MeshMismatch(
+            f"{d / base}: per-process checkpoint predates format "
+            f"v{FORMAT_VERSION} (no scheme/device_map in meta.json) — it "
+            "cannot be resharded across layouts. Restore it on the writing "
+            f"layout ({_fmt_layout(meta.get('mesh', {}))}) and re-save.")
+    mesh_meta = meta["mesh"]
+    sizes = dict(zip(mesh_meta["axes"], mesh_meta["shape"]))
+    axis_pos = {a: i for i, a in enumerate(mesh_meta["axes"])}
+    axes = _category_axes(k, scheme)
+    n_shards = int(np.prod([sizes[a] for a in axes])) if axes else 1
+
+    by_proc: dict[int, list[int]] = {}
+    for did, p in dmap["process"].items():
+        by_proc.setdefault(int(p), []).append(int(did))
+    chunks: list[np.ndarray | None] = [None] * n_shards
+    for pid, ids in sorted(by_proc.items()):
+        path = d / f"{base}.p{pid:03d}.npy"
+        if not path.exists():
+            raise MeshMismatch(
+                f"{path} missing: resharding needs every writing process's "
+                f"shard file visible on a shared filesystem "
+                f"({_fmt_layout(mesh_meta)})")
+        stack = np.load(path)
+        ids = sorted(ids)            # save() stacks in device-id order
+        if len(ids) != stack.shape[0]:
+            raise MeshMismatch(
+                f"{path} holds {stack.shape[0]} shards but the device map "
+                f"assigns {len(ids)} devices to process {pid}")
+        for row, did in enumerate(ids):
+            coords = dmap["coords"][str(did)]
+            idx = 0
+            for a in axes:
+                idx = idx * sizes[a] + int(coords[axis_pos[a]])
+            if chunks[idx] is None:  # replicas of a shard are identical
+                chunks[idx] = stack[row]
+    missing = [i for i, c in enumerate(chunks) if c is None]
+    if missing:
+        raise MeshMismatch(f"{d / base}: shard indices {missing} missing "
+                           "from the per-process files")
+    g = chunks[0] if n_shards == 1 else np.concatenate(chunks, axis=-1)
+    want = tuple(meta["global_shapes"][k])
+    if g.shape != want:
+        g = g.reshape(want)
+    return _from_disk_dtype(g, meta.get("dtypes", {}).get(k))
+
+
+def _target_shape(key: str, meta: dict, expect_scheme: dict | None) -> tuple:
+    """Global shape this leaf must have under the RESTORING engine: same
+    logical content, alignment padding resized to the live scheme's
+    ``padded_sizes`` (core/partition.padded_flat_size)."""
+    saved = tuple(meta["global_shapes"][key])
+    cat, _, name = key.partition("/")
+    if expect_scheme is None or cat not in ("primaries",) + _OS_CATS:
+        return saved
+    pad = expect_scheme.get("padded_sizes", {}).get(name)
+    if pad is None:
+        return saved
+    return saved[:-1] + (int(pad),)
+
+
+def _fit_padded(arr: np.ndarray, k: str, want: tuple) -> np.ndarray:
+    """Resize the flat padded dim. Alignment padding is exactly zero for
+    the whole training state (zero-init beyond the logical slice, zero
+    grads there, decay of zero stays zero), so growing re-pads zeros and
+    shrinking truncates — refusing if the truncated tail holds real data."""
+    if arr.shape == want:
+        return arr
+    if arr.ndim != len(want) or arr.shape[:-1] != want[:-1]:
+        raise ValueError(
+            f"{k}: checkpoint leaf shape {arr.shape} cannot be resharded to "
+            f"{want} — only the padded flat dim may differ (is this the "
+            "same model?)")
+    keep = min(arr.shape[-1], want[-1])
+    tail = arr[..., keep:]
+    if tail.size:
+        bits = tail.view({1: np.uint8, 2: np.uint16, 4: np.uint32,
+                          8: np.uint64}[tail.dtype.itemsize])
+        if np.any(bits):
+            raise ValueError(
+                f"{k}: truncating the padded dim {arr.shape[-1]} -> "
+                f"{want[-1]} would drop nonzero data — the checkpoint's "
+                "padding is not clean (not written by this engine?)")
+    out = np.zeros(want, dtype=arr.dtype)
+    out[..., :keep] = arr[..., :keep]
+    return out
+
+
+def _check_leaf_names(meta: dict, expect_scheme: dict | None, where: str):
+    pads = (expect_scheme or {}).get("padded_sizes")
+    if not pads:
+        return
+    saved = {k.split("/", 1)[1] for k in meta["names"]
+             if k.startswith("primaries/")}
+    if saved and saved != set(pads):
+        missing = sorted(set(pads) - saved)[:4]
+        extra = sorted(saved - set(pads))[:4]
+        raise SchemeMismatch(
+            f"{where} holds a different model's leaves — resharding maps "
+            f"layouts, not architectures. Engine-only: {missing}; "
+            f"checkpoint-only: {extra}")
+
+
+def _reshard_leaf(d: Path, fname: str, k: str, meta: dict, sh,
+                  expect_scheme: dict | None):
+    if meta.get("format", "global") == "per_process":
+        arr = _assemble_global(d, fname, k, meta)
+    else:
+        arr = _from_disk_dtype(np.load(d / fname),
+                               meta.get("dtypes", {}).get(k))
+    arr = _fit_padded(arr, k, _target_shape(k, meta, expect_scheme))
+    return _place_global(arr, sh)
+
+
+def restore(ckpt_dir, step: int, shardings=None,
+            expect_scheme: dict | None = None, *, reshard: bool = False):
     """``expect_scheme``: the restoring engine's ``scheme_fingerprint()``;
-    when given, the saved fingerprint must match exactly or restore raises
-    ``SchemeMismatch`` with the differing fields. The mesh layout check
-    (``MeshMismatch``) runs whenever ``shardings`` are given and the
-    checkpoint recorded its mesh."""
+    when given (and ``reshard=False``), the saved fingerprint must match
+    exactly or restore raises ``SchemeMismatch`` with the differing fields.
+    The mesh layout check (``MeshMismatch``) runs whenever ``shardings``
+    are given and the checkpoint recorded its mesh.
+
+    ``reshard=True`` demotes both checks: a checkpoint written under a
+    different mesh/process layout or partition scheme is reassembled into
+    global logical arrays (per-process files via the v1 device map), its
+    alignment padding resized to the live scheme, and re-placed under the
+    given shardings. When nothing differs the fast per-shard path runs
+    unchanged, so ``reshard=True`` is safe as a default."""
     d = Path(ckpt_dir) / f"step_{step:08d}"
     meta = json.loads((d / "meta.json").read_text())
-    if expect_scheme is not None:
-        _check_scheme(meta.get("scheme"), expect_scheme, str(d))
+    _check_version(meta, str(d))
     fmt = meta.get("format", "global")
     sh_flat = _flatten(shardings) if shardings else {}
     live_mesh = _state_mesh(sh_flat) if sh_flat else None
+
+    scheme_differs = False
+    if expect_scheme is not None:
+        if reshard:
+            saved_scheme = meta.get("scheme")
+            norm = json.loads(json.dumps(expect_scheme))
+            scheme_differs = saved_scheme is not None and saved_scheme != norm
+        else:
+            _check_scheme(meta.get("scheme"), expect_scheme, str(d))
+
+    layout_differs = False
     if live_mesh is not None:
-        _check_mesh(meta.get("mesh"), mesh_layout(live_mesh), str(d),
-                    strict_shape=(fmt == "per_process"))
+        live = mesh_layout(live_mesh)
+        if reshard:
+            layout_differs = _layout_differs(
+                meta.get("mesh"), live, strict_shape=(fmt == "per_process"))
+        else:
+            _check_mesh(meta.get("mesh"), live, str(d),
+                        strict_shape=(fmt == "per_process"))
     elif fmt == "per_process":
         raise ValueError(f"{d} is a per-process checkpoint; restore needs "
                          "the engine's shardings to re-place the shards")
 
+    shapes_differ = False
+    if reshard and expect_scheme is not None:
+        _check_leaf_names(meta, expect_scheme, str(d))
+        shapes_differ = any(
+            _target_shape(k, meta, expect_scheme)
+            != tuple(meta["global_shapes"][k]) for k in meta["names"])
+
     flat = {}
-    for k, fname in meta["names"].items():
-        sh = sh_flat.get(k)
-        if fmt == "per_process":
-            flat[k] = _restore_leaf_per_process(d, fname, k, meta, sh)
-        else:
-            flat[k] = _restore_leaf_global(d, fname, k, meta, sh)
+    if reshard and (layout_differs or scheme_differs or shapes_differ):
+        for k, fname in meta["names"].items():
+            flat[k] = _reshard_leaf(d, fname, k, meta, sh_flat.get(k),
+                                    expect_scheme)
+    else:
+        for k, fname in meta["names"].items():
+            sh = sh_flat.get(k)
+            if fmt == "per_process":
+                flat[k] = _restore_leaf_per_process(d, fname, k, meta, sh)
+            else:
+                flat[k] = _restore_leaf_global(d, fname, k, meta, sh)
     _barrier(f"ckpt_restore_{step}")
     return _unflatten(flat)

@@ -196,15 +196,21 @@ class Trainer:
         self._last_recorder = rec
         return state
 
-    def restore(self, ckpt_dir, step: int | None = None):
+    def restore(self, ckpt_dir, step: int | None = None, *,
+                reshard: bool = True):
         """Restore a checkpoint into this trainer's engine layout.
 
-        Fails loudly (checkpoint.SchemeMismatch) if the checkpoint was
-        written under a different scheme/mesh/padding than this engine.
+        ``reshard=True`` (default): a checkpoint written under a different
+        mesh/process layout or partition scheme is resharded onto this
+        engine through the partition formulas (checkpoint.py, DESIGN.md
+        §11) — this is what makes ``--resume`` elastic. ``reshard=False``
+        restores strictly, failing loudly (checkpoint.SchemeMismatch /
+        MeshMismatch) on any layout difference.
         """
         step = checkpoint.latest_step(ckpt_dir) if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
         return checkpoint.restore(ckpt_dir, step,
                                   self.engine.state_shardings(),
-                                  expect_scheme=self.engine.scheme_fingerprint())
+                                  expect_scheme=self.engine.scheme_fingerprint(),
+                                  reshard=reshard)

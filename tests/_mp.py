@@ -259,6 +259,139 @@ def checkpoint_wrong_layout(extra: dict):
                          "MeshMismatch")
 
 
+# -- elastic kill-and-resume (DESIGN.md §11) --------------------------------
+#
+# The elastic scenarios use mesh axes ("data", "repl", "gcd"): the SAME
+# (2, 2, 2) global mesh supports 1x8, 2x4 and 4x2 process layouts. Same
+# global mesh + same scheme across layouts = bitwise training continuation
+# at float32 (the PR-4 parity result); what changes across layouts is the
+# per-process shard FILES — exactly what restore(reshard=True) reassembles.
+#
+# The scheme is the zero_topo preset with an explicit tier split
+# (w=gcd, e=repl, r=data) rather than zero_tiers' default (r=data+repl):
+# every reduction collective then has exactly TWO runtime participants
+# (the grad reduce is two hierarchical 2-way stages with program-fixed
+# association, the cross-replica sync a 2-way psum). A 2-way float sum is
+# association-free, so the result cannot depend on how XLA's runtime
+# splits a group between in-process and cross-process transports — with
+# the default r=(data, repl), the 4-participant replica psum reassociates
+# differently on 1x8 vs 2x4 and breaks bitwise resume.
+
+ELASTIC_AX = ("data", "repl", "gcd")
+ELASTIC_STEPS = 4        # reference trains 0..3; save interrupts after 2
+
+
+def _elastic_build():
+    from repro.core.engine import TrainHparams, ZeroEngine
+    from repro.core.partition import preset
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.registry import build_model, get_arch
+
+    mesh = make_test_mesh(shape=(2, 2, 2), axes=ELASTIC_AX)
+    arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128, vocab=256)
+    model = build_model(arch)
+    cfg = preset("zero_topo", intra_axes=("repl", "gcd"),
+                 inter_axes=("data",), l0_axes=("gcd",),
+                 axis_sizes=dict(mesh.shape), quant_block=64,
+                 compute_dtype="float32")
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                     TrainHparams(lr=1e-3, total_steps=8, warmup_steps=0))
+    return mesh, model, eng, arch
+
+
+def _elastic_batch(mesh, arch, step_i: int):
+    """Per-step deterministic batch, seeded by the step index so the
+    interrupted and uninterrupted runs see the identical data stream."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.data.pipeline import shard_batch
+    batch_np = {"tokens": np.random.default_rng(100 + step_i).integers(
+        0, arch.vocab, (8, 33)).astype(np.int32)}
+    return shard_batch(batch_np, mesh, {"tokens": P(ELASTIC_AX)})
+
+
+def _elastic_run(mesh, model, eng, arch, state, steps):
+    from jax.sharding import PartitionSpec as P
+    step = eng.make_train_step(model.loss_fn(), {"tokens": P(ELASTIC_AX)})
+    losses = []
+    for i in steps:
+        state, m = step(state, _elastic_batch(mesh, arch, i))
+        losses.append(repr(eng.metrics_to_host(m)["loss"]))
+    return state, losses
+
+
+def _elastic_hashes(eng, state, mesh):
+    return {f"{cat}/{n}": _sha(_replicated_np(state[cat][n], mesh))
+            for cat in ("primaries", "master", "opt_m", "opt_v")
+            for n in sorted(eng.specs)}
+
+
+def elastic_reference(extra: dict):
+    """The uninterrupted run: ELASTIC_STEPS steps straight through. Its
+    per-step losses and final per-leaf hashes are the ground truth every
+    kill-and-resume leg must reproduce bitwise."""
+    import jax
+    mesh, model, eng, arch = _elastic_build()
+    state = eng.init_state(jax.random.key(0))
+    state, losses = _elastic_run(mesh, model, eng, arch, state,
+                                 range(ELASTIC_STEPS))
+    return dict(losses=losses, hashes=_elastic_hashes(eng, state, mesh))
+
+
+def elastic_save(extra: dict):
+    """First half of the kill: train 2 of ELASTIC_STEPS steps on a 2x4
+    cluster, write a per-process checkpoint, exit (the 'kill')."""
+    import jax
+    from repro.core.engine import host_scalar
+    from repro.train import checkpoint
+
+    mesh, model, eng, arch = _elastic_build()
+    state = eng.init_state(jax.random.key(0))
+    state, losses = _elastic_run(mesh, model, eng, arch, state, range(2))
+    checkpoint.save(state, extra["ckpt_dir"], int(host_scalar(state["step"])),
+                    scheme=eng.scheme_fingerprint())
+    return dict(losses=losses)
+
+
+def elastic_resume(extra: dict):
+    """Second half: a DIFFERENT process layout (1x8 or 4x2) restores the
+    2x4 checkpoint with reshard=True and runs the remaining steps. The
+    pytest side asserts save.losses + resume.losses == reference.losses
+    (bitwise) and the final hashes match the uninterrupted run's."""
+    import jax
+    from repro.core.engine import host_scalar
+    from repro.train import checkpoint
+
+    mesh, model, eng, arch = _elastic_build()
+    meta_mesh = json.loads(open(os.path.join(
+        extra["ckpt_dir"], "step_00000002", "meta.json")).read()).get("mesh")
+    assert meta_mesh["process_count"] != jax.process_count(), \
+        "resume layout must differ from the writing layout"
+    state = checkpoint.restore(extra["ckpt_dir"], 2, eng.state_shardings(),
+                               expect_scheme=eng.scheme_fingerprint(),
+                               reshard=True)
+    assert int(host_scalar(state["step"])) == 2
+    state, losses = _elastic_run(mesh, model, eng, arch, state,
+                                 range(2, ELASTIC_STEPS))
+    return dict(losses=losses, hashes=_elastic_hashes(eng, state, mesh),
+                saved_procs=meta_mesh["process_count"])
+
+
+def elastic_strict(extra: dict):
+    """reshard=False on a cross-layout restore must still raise
+    MeshMismatch — strictness is demoted by an explicit opt-in, not gone."""
+    from repro.train import checkpoint
+    mesh, model, eng, arch = _elastic_build()
+    try:
+        checkpoint.restore(extra["ckpt_dir"], 2, eng.state_shardings(),
+                           expect_scheme=eng.scheme_fingerprint(),
+                           reshard=False)
+    except checkpoint.MeshMismatch as e:
+        assert "reshard=True" in str(e), e
+        return dict(raised=True)
+    raise AssertionError("strict cross-layout restore did not raise")
+
+
 def topology_tiers(extra: dict):
     """Topology.from_mesh on a process-spanning mesh: the process-boundary
     axis lands in the inter tier and is priced at the inter link; the
@@ -376,6 +509,10 @@ SCENARIOS = dict(train_step_parity=train_step_parity,
                  heartbeat_straggler=heartbeat_straggler,
                  checkpoint_roundtrip=checkpoint_roundtrip,
                  checkpoint_wrong_layout=checkpoint_wrong_layout,
+                 elastic_reference=elastic_reference,
+                 elastic_save=elastic_save,
+                 elastic_resume=elastic_resume,
+                 elastic_strict=elastic_strict,
                  topology_tiers=topology_tiers)
 
 

@@ -756,7 +756,97 @@ def obs_trace_equivalence():
     print("SCENARIO_OK obs_trace_equivalence")
 
 
+def reshard_roundtrip():
+    """Property test (DESIGN.md §11): random mesh-A -> mesh-B -> mesh-A
+    reshard roundtrips are lossless — every state leaf sha256-identical to
+    the original after crossing two different mesh shapes, schemes and
+    quant blocks (different shard layouts AND different alignment padding).
+    Also: strict mode (reshard=False) still refuses each cross-layout hop."""
+    import hashlib
+    import random
+    import tempfile
+
+    from repro.core.engine import TrainHparams, ZeroEngine
+    from repro.launch.mesh import make_test_mesh, scheme_config
+    from repro.models.registry import build_model, get_arch
+    from repro.train import checkpoint
+
+    def build(shape, scheme, qb):
+        mesh = make_test_mesh(shape=shape, axes=AX)
+        arch = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=128,
+                                              vocab=256)
+        model = build_model(arch)
+        cfg = scheme_config(scheme, mesh, quant_block=qb,
+                            compute_dtype="float32")
+        eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                         TrainHparams(lr=1e-3, total_steps=8,
+                                      warmup_steps=0))
+        return mesh, model, eng, arch
+
+    def hashes(eng, state, mesh):
+        rep = jax.jit(lambda a: a, out_shardings=NamedSharding(mesh, P()))
+        out = {}
+        for k, v in checkpoint._flatten(state).items():
+            a = np.asarray(rep(v).addressable_data(0))
+            out[k] = (a.shape, hashlib.sha256(
+                np.ascontiguousarray(a).tobytes()).hexdigest())
+        return out
+
+    rng = random.Random(2501_04266)
+    shapes = [(2, 2, 2), (1, 2, 2), (2, 2, 1), (4, 1, 2), (1, 1, 2)]
+    schemes = ["zero_topo", "zeropp", "zero3"]
+    blocks = [64, 128]
+    # random mesh shapes/blocks per trial; schemes rotate so every preset
+    # appears on both sides of a hop (a pure random draw can collapse to
+    # one scheme and never cross partition layouts)
+    trials = []
+    for i in range(3):
+        a = (rng.choice(shapes), schemes[i], rng.choice(blocks))
+        b = (rng.choice(shapes), schemes[(i + 1) % 3], rng.choice(blocks))
+        trials.append((a, b))
+
+    for spec_a, spec_b in trials:
+        mesh_a, model_a, eng_a, arch = build(*spec_a)
+        state = eng_a.init_state(jax.random.key(0))
+        step = eng_a.make_train_step(model_a.loss_fn(), {"tokens": P(AX)})
+        from repro.data.pipeline import shard_batch
+        batch_np = {"tokens": np.random.default_rng(0).integers(
+            0, arch.vocab, (8, 33)).astype(np.int32)}
+        state, _ = step(state, shard_batch(batch_np, mesh_a,
+                                           {"tokens": P(AX)}))
+        want = hashes(eng_a, state, mesh_a)
+
+        d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+        checkpoint.save(state, d1, 1, scheme=eng_a.scheme_fingerprint())
+
+        mesh_b, _, eng_b, _ = build(*spec_b)
+        # strict mode still refuses the cross-layout hop
+        try:
+            checkpoint.restore(d1, 1, eng_b.state_shardings(),
+                               expect_scheme=eng_b.scheme_fingerprint())
+            raise AssertionError(f"strict restore accepted {spec_a}->"
+                                 f"{spec_b}")
+        except (checkpoint.MeshMismatch, checkpoint.SchemeMismatch):
+            pass
+        st_b = checkpoint.restore(d1, 1, eng_b.state_shardings(),
+                                  expect_scheme=eng_b.scheme_fingerprint(),
+                                  reshard=True)
+        checkpoint.save(st_b, d2, 1, scheme=eng_b.scheme_fingerprint())
+
+        mesh_a2, _, eng_a2, _ = build(*spec_a)
+        st_a2 = checkpoint.restore(d2, 1, eng_a2.state_shardings(),
+                                   expect_scheme=eng_a2.scheme_fingerprint(),
+                                   reshard=True)
+        got = hashes(eng_a2, st_a2, mesh_a2)
+        assert got == want, (spec_a, spec_b,
+                             [k for k in want if got.get(k) != want[k]])
+        print(f"  roundtrip {spec_a} -> {spec_b} -> {spec_a}: "
+              f"{len(want)} leaves sha256-identical")
+    print("SCENARIO_OK reshard_roundtrip")
+
+
 SCENARIOS = dict(collectives=collectives,
+                 reshard_roundtrip=reshard_roundtrip,
                  obs_trace_equivalence=obs_trace_equivalence,
                  collectives_split=collectives_split,
                  overlap_equivalence=overlap_equivalence,

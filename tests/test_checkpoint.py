@@ -148,6 +148,147 @@ def test_mesh_layout_recorded_and_mismatch_refused(tmp_path):
         checkpoint.restore(tmp_path, 1)
 
 
+def test_meta_format_version(tmp_path):
+    """meta.json is versioned: v1 written with a device map, v0 (field
+    absent) accepted unchanged, newer-than-reader refused naming BOTH
+    versions."""
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh)
+    state = eng.init_state(jax.random.key(0))
+    checkpoint.save(state, tmp_path, 1, scheme=eng.scheme_fingerprint())
+
+    meta_path = Path(tmp_path) / "step_00000001" / "meta.json"
+    meta = json.loads(meta_path.read_text())
+    assert meta["version"] == checkpoint.FORMAT_VERSION == 1
+    assert set(meta["device_map"]["coords"]) == set(meta["device_map"]["process"])
+
+    # v0: no version field (seed-era checkpoints) restores unchanged
+    v0 = {k: v for k, v in meta.items() if k not in ("version", "device_map")}
+    meta_path.write_text(json.dumps(v0))
+    restored = checkpoint.restore(tmp_path, 1, eng.state_shardings())
+    assert int(restored["step"]) == 0
+
+    # a future version is refused, error names both versions
+    meta_path.write_text(json.dumps(dict(meta, version=99)))
+    with pytest.raises(ValueError, match=r"v99.*v1"):
+        checkpoint.restore(tmp_path, 1, eng.state_shardings())
+
+
+def test_reshard_repads_to_engine_padding(tmp_path):
+    """Elastic restore resizes the alignment padding to the restoring
+    engine's padded_sizes: growing appends zeros, shrinking back recovers
+    the original bitwise (the padding is exactly zero through training)."""
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh, quant_block=64)
+    state = eng.init_state(jax.random.key(0))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, 128, (2, 17)), jnp.int32)}
+    step = eng.make_train_step(model.loss_fn(), {"tokens": P()})
+    state, _ = step(state, batch)
+    checkpoint.save(state, tmp_path, 1, scheme=eng.scheme_fingerprint())
+
+    # a fingerprint with larger padded sizes (as a bigger os_degree x
+    # quant_block would produce): every leaf grows by 64 zeros
+    fp = eng.scheme_fingerprint()
+    grown = json.loads(json.dumps(fp))
+    grown["quant_block"] = 128
+    grown["padded_sizes"] = {n: p + 64 for n, p in fp["padded_sizes"].items()}
+    big = checkpoint.restore(tmp_path, 1, eng.state_shardings(),
+                             expect_scheme=grown, reshard=True)
+    flat, bflat = checkpoint._flatten(state), checkpoint._flatten(big)
+    for name, pad in fp["padded_sizes"].items():
+        a = np.asarray(flat[f"master/{name}"], np.float32)
+        b = np.asarray(bflat[f"master/{name}"], np.float32)
+        assert b.shape[-1] == pad + 64, name
+        np.testing.assert_array_equal(a, b[..., :pad], err_msg=name)
+        assert not np.any(b[..., pad:]), name      # new padding is zero
+
+    # save the grown state, restore it back under the original engine:
+    # the padding shrinks again and every leaf is bitwise the original
+    d2 = tmp_path / "grown"
+    checkpoint.save(big, d2, 1, scheme=grown)
+    back = checkpoint.restore(d2, 1, eng.state_shardings(),
+                              expect_scheme=fp, reshard=True)
+    for k, v in flat.items():
+        np.testing.assert_array_equal(
+            np.asarray(v, np.float32),
+            np.asarray(checkpoint._flatten(back)[k], np.float32), err_msg=k)
+    # and the round-tripped state trains
+    s2, m2 = step(back, batch)
+    assert np.isfinite(float(m2["loss"]))
+
+
+def test_reshard_refuses_dirty_padding_and_foreign_model(tmp_path):
+    """_fit_padded only ever drops zeros: nonzero data beyond the target
+    padding aborts instead of corrupting; and a checkpoint holding a
+    different model's leaves is named as such."""
+    arr = np.zeros((3, 8), np.float32)
+    arr[:, :6] = 1.0
+    with pytest.raises(ValueError, match="nonzero data"):
+        checkpoint._fit_padded(arr, "master/w", (3, 4))
+    out = checkpoint._fit_padded(arr, "master/w", (3, 12))
+    assert out.shape == (3, 12) and not np.any(out[:, 8:])
+    with pytest.raises(ValueError, match="padded flat dim"):
+        checkpoint._fit_padded(arr, "master/w", (4, 8))
+
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh)
+    state = eng.init_state(jax.random.key(0))
+    checkpoint.save(state, tmp_path, 1, scheme=eng.scheme_fingerprint())
+    fp = eng.scheme_fingerprint()
+    fp["padded_sizes"] = {"not.a.leaf": 64}
+    with pytest.raises(checkpoint.SchemeMismatch, match="different model"):
+        checkpoint.restore(tmp_path, 1, eng.state_shardings(),
+                           expect_scheme=fp, reshard=True)
+
+
+def test_trainer_restore_reshard_default(tmp_path):
+    """Trainer.restore defaults to elastic: a checkpoint from a different
+    quant_block (different scheme fingerprint + padding) restores and
+    reports the right step; reshard=False keeps the strict contract."""
+    from repro.models.config import ShapeConfig
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh, quant_block=64)
+    tr = Trainer(model, eng, mesh, ShapeConfig("t", 16, 2, "train"))
+    state = eng.init_state(jax.random.key(0))
+    tr.run(state, 1, ckpt_dir=str(tmp_path), ckpt_every=1, log_every=0)
+
+    model2, eng2 = _engine(mesh, quant_block=128)
+    tr2 = Trainer(model2, eng2, mesh, ShapeConfig("t", 16, 2, "train"))
+    restored = tr2.restore(tmp_path)
+    assert int(restored["step"]) == 1
+    with pytest.raises(checkpoint.SchemeMismatch):
+        tr2.restore(tmp_path, reshard=False)
+
+
+def test_replan_from_checkpoint(tmp_path):
+    """topo.planner --replan-from: the workload is recovered from a
+    checkpoint's meta.json (padded psi + stacked layer count) and the
+    surviving topology re-planned; the CLI prints the ranking and the
+    adopt hint."""
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    model, eng = _engine(mesh)
+    state = eng.init_state(jax.random.key(0))
+    checkpoint.save(state, tmp_path, 1, scheme=eng.scheme_fingerprint())
+
+    from repro.topo.model import frontier
+    from repro.topo.planner import main as planner_main, \
+        replan_from_checkpoint
+    topo = frontier(4)
+    meta, wl, plans = replan_from_checkpoint(str(tmp_path), topo)
+    assert wl.psi == float(eng.padded_param_count())
+    assert wl.n_layers == 2
+    assert plans and plans[0].step_s > 0
+    # the step dir works as well as the root, and a bogus root fails loudly
+    meta2, _, _ = replan_from_checkpoint(
+        str(Path(tmp_path) / "step_00000001"), topo)
+    assert meta2["step"] == meta["step"] == 1
+    with pytest.raises(SystemExit, match="no checkpoints"):
+        replan_from_checkpoint(str(tmp_path / "nope"), topo)
+    assert planner_main(["--replan-from", str(tmp_path),
+                         "--topology", "frontier"]) == 0
+
+
 def test_mesh_layout_helper():
     mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
     lay = checkpoint.mesh_layout(mesh)

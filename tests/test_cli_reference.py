@@ -1,0 +1,36 @@
+"""docs/CLI.md is generated from the entry-point parsers
+(``repro.launch.cli_reference``); any flag change must ship with a
+regenerated file or this test fails."""
+from pathlib import Path
+
+from repro.launch import cli_reference
+
+DOC = Path(__file__).resolve().parents[1] / "docs" / "CLI.md"
+
+
+def test_cli_reference_up_to_date():
+    assert DOC.exists(), \
+        "docs/CLI.md missing — PYTHONPATH=src python -m " \
+        "repro.launch.cli_reference --write"
+    assert DOC.read_text() == cli_reference.generate(), \
+        "docs/CLI.md is stale (a build_parser() changed): regenerate with " \
+        "PYTHONPATH=src python -m repro.launch.cli_reference --write"
+
+
+def test_reference_covers_every_tool_and_the_elastic_flags():
+    text = cli_reference.generate()
+    for mod in cli_reference.TOOLS:
+        assert f"## `python -m {mod}`" in text, mod
+    # the flags this PR's docs lean on must actually be documented
+    for flag in ("`--resume`", "`--strict-restore`", "`--replan-from`",
+                 "`--ckpt-dir`", "`--grid`", "`--out-topology`"):
+        assert flag in text, flag
+
+
+def test_parsers_import_side_effect_free(monkeypatch):
+    """Rendering must not mutate the process (the generator and this test
+    import every tool module): XLA_FLAGS stays whatever it was."""
+    import os
+    before = os.environ.get("XLA_FLAGS")
+    cli_reference.generate()
+    assert os.environ.get("XLA_FLAGS") == before

@@ -8,7 +8,8 @@ import sys
 import pytest
 
 HERE = os.path.dirname(__file__)
-SCENARIOS = ["collectives", "schemes_equivalent", "auto_scheme",
+SCENARIOS = ["collectives", "reshard_roundtrip",
+             "schemes_equivalent", "auto_scheme",
              "kernel_impl_equivalence", "stream_grads_equivalence",
              "dp_vs_single", "serve_sharded",
              "hlo_census_real", "multipod_mesh", "resident_and_sp",

@@ -58,6 +58,43 @@ def test_checkpoint_process_count_guard(tmp_path):
     assert out["raised"] is True
 
 
+@pytest.fixture(scope="module")
+def elastic_ckpt(tmp_path_factory):
+    """Shared first half of the elastic legs: the uninterrupted 2x4
+    reference run, and a 2x4 run killed after step 2 leaving a per-process
+    checkpoint behind."""
+    d = tmp_path_factory.mktemp("elastic")
+    save = run_cluster("elastic_save", n_proc=2, extra={"ckpt_dir": str(d)})
+    ref = run_cluster("elastic_reference", n_proc=2)
+    return str(d), save, ref
+
+
+@pytest.mark.parametrize("n_proc", [1, 4])
+def test_elastic_kill_and_resume(elastic_ckpt, n_proc):
+    """Kill-at-step-k / resume-on-a-different-mesh continues BITWISE: a 2x4
+    cluster trains 2 steps and dies leaving a per-process checkpoint; a 1x8
+    (and a 4x2) cluster reshards it through the partition formulas
+    (restore(reshard=True), DESIGN.md §11) and trains the remaining steps.
+    Concatenated losses and every final per-leaf sha256 must equal the
+    uninterrupted same-seed 2x4 run exactly — float32 is the bitwise
+    cross-layout regime (DESIGN.md §6)."""
+    d, save, ref = elastic_ckpt
+    out = run_cluster("elastic_resume", n_proc=n_proc,
+                      extra={"ckpt_dir": d})
+    assert out["saved_procs"] == 2
+    assert save["losses"] + out["losses"] == ref["losses"], \
+        (save["losses"], out["losses"], ref["losses"])
+    assert out["hashes"] == ref["hashes"]
+
+
+def test_elastic_strict_mode_still_raises(elastic_ckpt):
+    """reshard=False keeps the pre-elastic contract: a cross-layout restore
+    raises MeshMismatch (now naming the reshard=True escape hatch)."""
+    d, _, _ = elastic_ckpt
+    out = run_cluster("elastic_strict", n_proc=1, extra={"ckpt_dir": d})
+    assert out["raised"] is True
+
+
 def test_topology_from_process_spanning_mesh():
     """Topology.from_mesh on a real 2-process mesh pins the process-boundary
     axis to the inter tier and prices it at the inter link; zero_tiers
