@@ -74,6 +74,34 @@ def roofline_rows() -> dict:
                                          flops_per_elem=3),
         "dequant_int4_sum_fused": dict(bytes_per_elem=0.5 + 4 / 8. + 4 / 512.,
                                        flops_per_elem=3),
+        # attention, per score element (Sq x Sk per head; S=2048, D=64,
+        # bf16 activations): materialized writes+reads the logits for the
+        # softmax and the probs for the PV matmul (4 x 2 B); flash keeps
+        # both in VMEM so HBM sees only q/k/v in + o out, amortized over
+        # the S scores each row participates in (~ 8*D/S bytes/score)
+        "attention_materialized": dict(bytes_per_elem=2 + 2 + 2 + 2.,
+                                       flops_per_elem=4 * 64 + 5),
+        "attention_flash": dict(bytes_per_elem=8 * 64 / 2048.,
+                                flops_per_elem=4 * 64 + 5),
+        # selective scan, per (s, d, n) state element (N=16, D=512, f32):
+        # the materialized form writes dA = exp(dt*A) and dB*x to HBM,
+        # re-reads them for the scan, and round-trips h per step; the
+        # kernel holds h in VMEM and HBM sees only dt/x in + y out
+        # (amortized over N) and B/C in (amortized over D)
+        "selective_scan_materialized": dict(
+            bytes_per_elem=4 + 4 + 4 + 4 + 4 + 4, flops_per_elem=6),
+        "selective_scan_fused": dict(
+            bytes_per_elem=(4 + 4 + 4) / 16. + (4 + 4) / 512.,
+            flops_per_elem=6),
+        # weight-grad wire epilogue (matmul_quant), per dW element with an
+        # M=2048 contraction: unfused writes the dense f32 dW (4 B) and
+        # re-reads it to quantize (4 B) before emitting the INT8 wire
+        # (1 B + scales/block); fused quantizes in the matmul epilogue so
+        # only the wire format ever reaches HBM
+        "matmul_quant_unfused": dict(bytes_per_elem=4 + 4 + 1 + 4 / 64.,
+                                     flops_per_elem=2 * 2048 + 4),
+        "matmul_quant_fused": dict(bytes_per_elem=1 + 4 / 64.,
+                                   flops_per_elem=2 * 2048 + 4),
     }
     ridge = PEAK_FLOPS / HBM_BW
     for name, r in rows.items():
@@ -119,6 +147,75 @@ def cpu_wall_section(print_fn) -> dict:
             unfused_ms=tu * 1e3, fused_ms=tf * 1e3, speedup=tu / tf)
         print_fn(f"  K={k:5d} N={n:5d}: unfused {tu * 1e3:7.2f} ms  "
                  f"fused {tf * 1e3:7.2f} ms  ({tu / tf:.2f}x)")
+
+    # hot-path kernels under the ops dispatch (DESIGN.md §5): flash
+    # attention vs the dense materialized softmax, the blocked selective
+    # scan vs the materialized associative scan, and the epilogue-fused
+    # matmul_quant vs matmul-then-quantize. CPU numbers are sanity only
+    # (the structural HBM win is the roofline rows above) — never gated.
+    print_fn("\n== hot-path kernels: fused vs materialized (jnp oracle, "
+             "CPU, not baseline-gated) ==")
+    bh, s, d = 4, 512, 64
+    ks = jax.random.split(jax.random.key(3), 3)
+    q_, k_, v_ = (jax.random.normal(kk_, (bh, s, d)) for kk_ in ks)
+
+    def attn_unfused(q, k, v):
+        sc = jnp.einsum("bqd,bkd->bqk", q, k) / np.sqrt(d)
+        mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+        p = jax.nn.softmax(jnp.where(mask, sc, -1e30), axis=-1)
+        return jnp.einsum("bqk,bkd->bqd", p, v)
+
+    ta_u = _time(jax.jit(attn_unfused), q_, k_, v_)
+    ta_f = _time(jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, impl="jnp")), q_, k_, v_)
+    out[f"attention_bh{bh}_s{s}"] = dict(
+        unfused_ms=ta_u * 1e3, fused_ms=ta_f * 1e3, speedup=ta_u / ta_f)
+    print_fn(f"  attention      BH={bh} S={s} D={d}: materialized "
+             f"{ta_u * 1e3:7.2f} ms  flash {ta_f * 1e3:7.2f} ms  "
+             f"({ta_u / ta_f:.2f}x)")
+
+    b, ss, dd, nn = 2, 256, 256, 16
+    kss = jax.random.split(jax.random.key(4), 6)
+    dt_ = jax.random.uniform(kss[0], (b, ss, dd), minval=0.01, maxval=0.2)
+    x_ = jax.random.normal(kss[1], (b, ss, dd))
+    bm_ = jax.random.normal(kss[2], (b, ss, nn)) * 0.3
+    cm_ = jax.random.normal(kss[3], (b, ss, nn)) * 0.3
+    a_ = -jnp.exp(jax.random.normal(kss[4], (dd, nn)) * 0.3)
+    h0_ = jax.random.normal(kss[5], (b, dd, nn)) * 0.1
+
+    def scan_unfused(dt, x, bm, cm, a, h0):
+        da = jnp.exp(dt[..., None] * a)                   # (B,S,D,N) in HBM
+        dbx = (dt * x)[..., None] * bm[:, :, None, :]     # (B,S,D,N) in HBM
+        def op(l, r):
+            return l[0] * r[0], r[1] + r[0] * l[1]
+        aa, hh = jax.lax.associative_scan(op, (da, dbx), axis=1)
+        h = aa * h0[:, None] + hh
+        return jnp.sum(h * cm[:, :, None, :], axis=-1), h[:, -1]
+
+    ts_u = _time(jax.jit(scan_unfused), dt_, x_, bm_, cm_, a_, h0_)
+    ts_f = _time(jax.jit(lambda *a2: ops.selective_scan(*a2, impl="jnp")),
+                 dt_, x_, bm_, cm_, a_, h0_)
+    out[f"selective_scan_s{ss}_d{dd}"] = dict(
+        unfused_ms=ts_u * 1e3, fused_ms=ts_f * 1e3, speedup=ts_u / ts_f)
+    print_fn(f"  selective_scan B={b} S={ss} D={dd} N={nn}: materialized "
+             f"{ts_u * 1e3:7.2f} ms  blocked {ts_f * 1e3:7.2f} ms  "
+             f"({ts_u / ts_f:.2f}x)")
+
+    mq_m, mq_k, mq_n = 1024, 256, 2048
+    x2 = jax.random.normal(jax.random.key(5), (mq_m, mq_k))
+    g2 = jax.random.normal(jax.random.key(6), (mq_m, mq_n))
+
+    def mq_unfused(x2, g2):
+        return ops.quantize_int8((x2.T @ g2).reshape(-1), 64)
+
+    tq_u = _time(jax.jit(mq_unfused), x2, g2)
+    tq_f = _time(jax.jit(lambda x2, g2: ops.matmul_quant(
+        x2, g2, 64, impl="jnp")), x2, g2)
+    out[f"matmul_quant_{mq_m}x{mq_k}x{mq_n}"] = dict(
+        unfused_ms=tq_u * 1e3, fused_ms=tq_f * 1e3, speedup=tq_u / tq_f)
+    print_fn(f"  matmul_quant   M={mq_m} K={mq_k} N={mq_n}: "
+             f"matmul+quantize {tq_u * 1e3:7.2f} ms  epilogue "
+             f"{tq_f * 1e3:7.2f} ms  ({tq_u / tq_f:.2f}x)")
     return out
 
 

@@ -17,11 +17,12 @@ source level, where the jaxpr/HLO layers cannot see intent:
                  reference formulas live in ``kernels/ref.py``).
   ops-dispatch   importing a kernel submodule directly (``from ..kernels.x
                  import ...``) outside ``kernels/`` skips the impl dispatch.
-                 Tracked exemptions below name the hot-path kernels not yet
-                 promoted into ``kernels/ops`` (ROADMAP: flash_attention,
-                 selective_scan); an exemption that no longer matches any
-                 import is itself reported (``stale-exemption``) so the list
-                 cannot rot.
+                 Every hot-path kernel (quant collectives, dequant_matmul,
+                 flash_attention, selective_scan, matmul_quant) is promoted
+                 into ``kernels/ops``, so the tracked-exemption table below
+                 is empty; an exemption that no longer matches any import is
+                 itself reported (``stale-exemption``) so the list cannot
+                 rot.
   version-api    JAX-version-sensitive surfaces (``jax.shard_map``,
                  ``jax.make_mesh``, ``lax.pvary``, ``AxisType``,
                  ``jax.experimental.shard_map``, ``jax.core`` /
@@ -51,7 +52,7 @@ from .report import Report
 QUANT_FNS = {
     "quantize_int8", "dequantize_int8", "quantize_int4", "dequantize_int4",
     "dequantize_int4_sum", "dequantize_int8_sum", "dequant_matmul",
-    "matmul_fusable",
+    "matmul_fusable", "matmul_quant",
 }
 
 # rule -> path prefixes (relative to the repro package root) where the
@@ -65,12 +66,10 @@ ALLOWED = {
 }
 
 # ops-dispatch tracked exemptions: kernels still dispatched by hand, pending
-# promotion into kernels/ops (ROADMAP "remaining hot-path kernels"). Keyed
-# by file, valued by the kernel submodules it may import directly.
-OPS_DISPATCH_EXEMPT = {
-    "models/layers.py": ("flash_attention",),
-    "models/ssm.py": ("selective_scan",),
-}
+# promotion into kernels/ops. Keyed by file, valued by the kernel submodules
+# it may import directly. EMPTY since the attention/scan/matmul_quant
+# promotion — the acceptance gate is that it stays empty.
+OPS_DISPATCH_EXEMPT: dict[str, tuple[str, ...]] = {}
 
 _WAIVER_RE = re.compile(r"#\s*contract:\s*allow\[([\w-]+)\]")
 

@@ -171,6 +171,20 @@ def a2a_rs_issue(x, axes: AxisTuple, cfg: ZeroConfig, bits: int = 4):
     return q2, s2
 
 
+def a2a_rs_issue_q(q, s, axes: AxisTuple, cfg: ZeroConfig):
+    """Exchange *pre-quantized* wire buffers: the collective half of
+    ``a2a_rs_issue`` (same two all-to-alls, same wire bytes) for producers
+    that already emitted wire format — the fused matmul-quant epilogue
+    (kernels/ops.matmul_quant) quantizes the weight grad inside the matmul,
+    so the dense f32 tensor never round-trips through HBM here."""
+    d = cfg.size(axes)
+    q = q.reshape(d, -1)
+    s = s.reshape(d, -1)
+    q2 = lax.all_to_all(q, tuple(axes), split_axis=0, concat_axis=0, tiled=False)
+    s2 = lax.all_to_all(s, tuple(axes), split_axis=0, concat_axis=0, tiled=False)
+    return q2, s2
+
+
 def a2a_rs_wait(q2, s2, d: int, cfg: ZeroConfig, bits: int = 4,
                 out_dtype=jnp.float32):
     """Receive side of the a2a quantized RS: fused unpack + dequant + reduce

@@ -16,7 +16,10 @@
             tier), again kept in wire format for the fused dX = g.Wt.
             The weight gradient is immediately reduce-scattered with INT4
             quantization via one all-to-all over the weight axes, so the
-            cotangent has primary-shard layout.
+            cotangent has primary-shard layout. On fusable leaves the
+            quantize runs *inside* the dW matmul epilogue
+            (ops.matmul_quant, DESIGN.md §5): the backward emits wire
+            format directly and the dense f32 dW never touches HBM.
 
 Cross-replica reduction is deliberately *deferred*: primaries are marked
 device-varying (`pvary`) on entry, the engine performs the hierarchical
@@ -143,6 +146,72 @@ def _grad_stage1(dw, spec: LeafSpec, cfg: ZeroConfig):
     return sched.grad_rs_wait(tok, cfg, out_dtype=jnp.float32)
 
 
+GRAD_RS_BITS = 4        # stage-1 wire width (must match grad_rs_issue default)
+
+
+def _dw_fusable(spec: LeafSpec, cfg: ZeroConfig) -> bool:
+    """Fuse the dW matmul with its wire-format quantize (DESIGN.md §5)?
+
+    The gate is impl-invariant (jnp / pallas / pallas_interpret lower the
+    same decision): the stage-1 RS must actually be the quantized a2a
+    (quantize_grads, group > 1 — the nop/rs branches ship dense f32, there
+    is no wire format to fuse into), and the flat quant blocks must tile
+    the (K, N) dW view row-by-row, pad included, exactly like the weight
+    path's ``_fusable``. Everything else keeps the dense matmul +
+    quantize pair."""
+    if not cfg.quantize_grads or cfg.size(cfg.axes.weight) <= 1:
+        return False
+    if not ops.matmul_fusable(spec.shape, cfg.quant_block):
+        return False
+    padded = padded_flat_size(spec.logical_size, cfg)
+    return (padded - spec.logical_size) % cfg.quant_block == 0
+
+
+def _dw_wire_stage1(x2, g2, transpose, spec: LeafSpec, cfg: ZeroConfig):
+    """Fused stage-1: dW is computed straight into wire format.
+
+    ``ops.matmul_quant`` block-quantizes C = x2.T @ g2 in the matmul
+    epilogue — the dense f32 dW never round-trips through HBM — and the
+    pre-quantized (q, scales) buffers go directly into the a2a exchange
+    (``grad_rs_issue_q``; same collectives, tags, and token format as the
+    unfused issue). The pad blocks are exact (q=0, scale=1), matching what
+    quantize-of-zero-padding ships on the unfused path."""
+    padded = padded_flat_size(spec.logical_size, cfg)
+    if transpose:
+        # dW = (x2.T g2).T = g2.T x2: swap operands instead of transposing
+        # the quantized output (wire layout is row-major over N)
+        x2, g2 = g2, x2
+    q, s = ops.matmul_quant(x2, g2, cfg.quant_block, bits=GRAD_RS_BITS,
+                            pad_to=padded, impl=cfg.impl)
+    tok = sched.grad_rs_issue_q(q, s, cfg.axes.weight, cfg,
+                                bits=GRAD_RS_BITS)
+    return sched.grad_rs_wait(tok, cfg, out_dtype=jnp.float32)
+
+
+def _mm_dw_stage1(x2, g2, transpose, spec: LeafSpec, cfg: ZeroConfig):
+    """dW of a matmul backward -> primary-layout fp32 stage-1 shard:
+    fused epilogue-quant path when eligible, else the dense matmul +
+    ``_grad_stage1`` pair."""
+    if _dw_fusable(spec, cfg):
+        return _dw_wire_stage1(x2, g2, transpose, spec, cfg)
+    dw2 = jnp.matmul(x2.T, g2)
+    if transpose:
+        dw2 = dw2.T
+    return _grad_stage1(dw2.reshape(spec.shape), spec, cfg)
+
+
+def _os_tail(g1, cfg: ZeroConfig, primary_dtype):
+    """Stage-1 shard -> fully-reduced fp32 os-shard row: the cast through
+    the primary dtype (the seed path accumulates the primary-layout
+    cotangent in that dtype before ``to_os`` lifts it back to f32 — kept so
+    streaming is bitwise identical at n_microbatch=1), stage-2 RS over E
+    (issue/wait split), cross-replica sync over R."""
+    g1 = g1.astype(primary_dtype).astype(jnp.float32)
+    tok = sched.grad_rs_issue(g1, cfg.axes.extra_grad, cfg)
+    g2 = sched.grad_rs_wait(tok, cfg, out_dtype=jnp.float32)
+    return col.cross_replica_grad(g2, cfg, jnp.float32)
+
+
 def _grad_to_primary_shard(dw, spec: LeafSpec, cfg: ZeroConfig, primary_dtype):
     """Stage-1: full dense weight grad -> primary-shard cotangent (INT4 a2a RS)."""
     return _grad_stage1(dw, spec, cfg).astype(primary_dtype)
@@ -150,18 +219,9 @@ def _grad_to_primary_shard(dw, spec: LeafSpec, cfg: ZeroConfig, primary_dtype):
 
 def _grad_to_os_shard(dw, spec: LeafSpec, cfg: ZeroConfig, primary_dtype):
     """The streaming tap (DESIGN.md §8): dense weight grad -> fully-reduced
-    fp32 optimizer-shard row, emitted inside the backward.
-
-    Op-for-op the seed pipeline for one layer: stage-1 RS over W, the cast
-    through the primary dtype (the seed path accumulates the primary-layout
-    cotangent in that dtype before ``to_os`` lifts it back to f32 — kept so
-    streaming is bitwise identical at n_microbatch=1), stage-2 RS over E
-    (issue/wait split), cross-replica sync over R."""
-    g1 = _grad_stage1(dw, spec, cfg)
-    g1 = g1.astype(primary_dtype).astype(jnp.float32)
-    tok = sched.grad_rs_issue(g1, cfg.axes.extra_grad, cfg)
-    g2 = sched.grad_rs_wait(tok, cfg, out_dtype=jnp.float32)
-    return col.cross_replica_grad(g2, cfg, jnp.float32)
+    fp32 optimizer-shard row, emitted inside the backward (stage-1 +
+    ``_os_tail``)."""
+    return _os_tail(_grad_stage1(dw, spec, cfg), cfg, primary_dtype)
 
 
 def _zero_primary_cotangent(spec: LeafSpec, cfg: ZeroConfig):
@@ -199,8 +259,9 @@ def _mm_apply_q(x, qf, sf, transpose, spec: LeafSpec, cfg: ZeroConfig):
 
 def _mm_bwd_core(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
     """Shared matmul backward math for every VJP flavor (inline, prefetched,
-    streaming): returns ``(gx, dw)`` with ``dw`` the dense logical-shape
-    weight cotangent, *before* any reduce-scatter.
+    streaming): returns ``(gx, x2, g2)`` — the input cotangent plus the
+    f32 2-D dW operands, left unmultiplied so ``_mm_dw_stage1`` can route
+    them through the fused matmul-quant epilogue.
 
     Single implementation on purpose: overlap/streaming on/off must stay
     bitwise-identical (test_overlap.py, test_stream_grads.py), so there is
@@ -220,22 +281,21 @@ def _mm_bwd_core(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
         gx = jnp.matmul(g, w2.T).astype(x.dtype)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-    dw2 = jnp.matmul(x2.T, g2)
-    if transpose:
-        dw2 = dw2.T
-    return gx, dw2.reshape(spec.shape)
+    return gx, x2, g2
 
 
 def _mm_bwd(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
     """Inline/prefetched backward: primary-shard weight cotangent."""
-    gx, dw = _mm_bwd_core(res, g, transpose, spec, cfg)
-    return gx, _grad_to_primary_shard(dw, spec, cfg, _dtype(cfg))
+    gx, x2, g2 = _mm_bwd_core(res, g, transpose, spec, cfg)
+    g1 = _mm_dw_stage1(x2, g2, transpose, spec, cfg)
+    return gx, g1.astype(_dtype(cfg))
 
 
 def _mm_bwd_stream(res, g, transpose, spec: LeafSpec, cfg: ZeroConfig):
     """Streaming backward: fully-reduced fp32 os-shard weight cotangent."""
-    gx, dw = _mm_bwd_core(res, g, transpose, spec, cfg)
-    return gx, _grad_to_os_shard(dw, spec, cfg, _dtype(cfg))
+    gx, x2, g2 = _mm_bwd_core(res, g, transpose, spec, cfg)
+    g1 = _mm_dw_stage1(x2, g2, transpose, spec, cfg)
+    return gx, _os_tail(g1, cfg, _dtype(cfg))
 
 
 def make_zero_matmul(spec: LeafSpec, cfg: ZeroConfig):

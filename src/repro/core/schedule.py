@@ -142,6 +142,21 @@ def grad_rs_issue(flat, axes: AxisTuple, cfg: ZeroConfig, *,
                 cfg.size(axes), bits)
 
 
+def grad_rs_issue_q(q, s, axes: AxisTuple, cfg: ZeroConfig, *, bits: int = 4):
+    """Issue half for a *pre-quantized* gradient: the wire-format (q, s)
+    came out of the fused matmul-quant epilogue (ops.matmul_quant), so only
+    the a2a exchange remains. Token format and contract tags are identical
+    to the quantized branch of ``grad_rs_issue`` — the verifier census and
+    ``grad_rs_wait`` cannot tell the producers apart. Callers gate on
+    ``cfg.quantize_grads`` and group size > 1 (the dense nop/rs branches
+    have no wire format to skip)."""
+    with _spans.scope("grad_rs/issue"):
+        assert axes and cfg.size(axes) > 1, axes
+        return ("a2a", _tag(col.a2a_rs_issue_q(q, s, axes, cfg),
+                            role="issue", machine="grad_rs"),
+                cfg.size(axes), bits)
+
+
 def grad_rs_wait(token, cfg: ZeroConfig, *, out_dtype=jnp.float32):
     """Wait half: local fused dequant + reduce of the received chunks (no
     communication). Everything the receive side needs — group size, bit

@@ -153,3 +153,98 @@ def dequant_matmul_flat_pallas(x: jnp.ndarray, q: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((bm, bo), jnp.float32)],
         interpret=interpret,
     )(x, q, scales)
+
+
+# ---------------------------------------------------------------------------
+# Fused matmul x quantize: the weight-grad producer (beyond-paper).
+#
+# The unfused gradient path materializes the dense f32 dW = x.T @ g in HBM,
+# then re-reads it to block-quantize for the a2a reduce-scatter — a full
+# extra write+read of 4 bytes/param on the hottest backward seam. Here the
+# quantize runs in the matmul's epilogue instead: the f32 accumulator tile
+# is still in VMEM when the last contraction step finishes, so HBM only
+# ever sees the INT8 (or packed INT4) wire bytes + per-block scales that
+# the collective actually ships. Scale blocks follow the flat shard layout
+# (scales[k, j // block], N % block == 0), i.e. the output *is* the wire
+# format core/linear.py previously produced via quantize_int{8,4}.
+# ---------------------------------------------------------------------------
+
+INT8_QMAX = 127.0
+INT4_QMAX = 7.0
+
+
+def _matmul_quant_kernel(x_ref, g_ref, q_ref, s_ref, acc_ref, *,
+                         block, bits, m_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                 # (bc, bk)
+    g = g_ref[...].astype(jnp.float32)                 # (bc, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x, g, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == m_steps - 1)
+    def _done():
+        acc = acc_ref[...]
+        r, c = acc.shape
+        qmax = INT4_QMAX if bits == 4 else INT8_QMAX
+        a3 = acc.reshape(r, c // block, block)
+        absmax = jnp.max(jnp.abs(a3), axis=-1, keepdims=True)
+        # reciprocal-multiply, not division: jit folds `/const` into
+        # `*(1/const)` but eager does not — ref.matmul_quant_ref matches
+        scales = jnp.where(absmax == 0.0, 1.0, absmax * (1.0 / qmax))
+        qv = jnp.clip(jnp.round(a3 / scales), -qmax, qmax)
+        s_ref[...] = scales.reshape(r, c // block)
+        if bits == 4:
+            pairs = (qv.astype(jnp.int32) + 8).reshape(r, c // 2, 2)
+            q_ref[...] = (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+        else:
+            q_ref[...] = qv.reshape(r, c).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bits", "bk", "bn",
+                                             "bc", "interpret"))
+def matmul_quant_pallas(x: jnp.ndarray, g: jnp.ndarray, *, block: int,
+                        bits: int = 8, bk: int, bn: int, bc: int,
+                        interpret: bool = False):
+    """Fused C = x.T @ g + block-quantize epilogue.
+
+    x: (M, K); g: (M, N); N % block == 0, M % bc == 0. Returns
+    (q (K, N) int8 | (K, N//2) uint8, scales (K, N//block) f32) in the
+    flat-shard wire layout. Grid (K/bk, N/bn, M/bc) with the contraction
+    innermost; the epilogue quantizes each output tile at the last step,
+    mirrored op-for-op by ref.matmul_quant_ref (bitwise with bk=K, bn=N).
+    ``bn`` must stay a whole number of scale blocks (and even for INT4).
+    """
+    m, k = x.shape
+    m2, n = g.shape
+    assert m == m2 and n % block == 0, (x.shape, g.shape, block)
+    assert k % bk == 0 and n % bn == 0 and m % bc == 0 and bn % block == 0, \
+        (x.shape, g.shape, bk, bn, bc, block)
+    m_steps = m // bc
+    grid = (k // bk, n // bn, m_steps)
+    if bits == 4:
+        q_shape = jax.ShapeDtypeStruct((k, n // 2), jnp.uint8)
+        q_spec = pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (i, j))
+    else:
+        q_shape = jax.ShapeDtypeStruct((k, n), jnp.int8)
+        q_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (i, j))
+    return pl.pallas_call(
+        functools.partial(_matmul_quant_kernel, block=block, bits=bits,
+                          m_steps=m_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, bk), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bc, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            q_spec,
+            pl.BlockSpec((bk, bn // block), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[q_shape,
+                   jax.ShapeDtypeStruct((k, n // block), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, g)

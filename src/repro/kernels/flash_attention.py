@@ -56,10 +56,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(run)
     def _compute():
-        q = q_ref[0].astype(jnp.float32)
-        k = k_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
+        # scale is folded into q *before* the dot: a post-dot multiply would
+        # sit next to the `s - m_new` subtract and XLA is free to contract
+        # mul+add chains into FMAs differently per context, breaking the
+        # jnp-vs-interpret bitwise contract
+        q = q_ref[...].astype(jnp.float32) * scale    # (bb, bq, d)
+        k = k_ref[...].astype(jnp.float32)            # (bb, bk, d)
+        s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
         mask = jnp.ones((bq, bk), jnp.bool_)
         if causal:
             mask = jnp.logical_and(mask, q_pos >= k_pos)
@@ -71,31 +75,40 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         p = jnp.exp(s - m_new)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-        v = v_ref[0].astype(jnp.float32)
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
-            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
     @pl.when(kv_i == kv_steps - 1)
     def _done():
-        o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "q_offset", "bq", "bk", "interpret"))
+    "causal", "window", "q_offset", "bb", "bq", "bk", "interpret"))
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
-                           q_offset: int = 0, bq: int = 128, bk: int = 128,
-                           interpret: bool = False):
+                           q_offset: int = 0, bb: int = 1, bq: int = 128,
+                           bk: int = 128, interpret: bool = False):
     """q (BH, Sq, D); k, v (BH, Sk, D) -> (BH, Sq, D).
 
-    Sq % bq == Sk % bk == 0 (ops.py pads); D should be lane-aligned.
+    BH % bb == Sq % bq == Sk % bk == 0 (ops.py gates); D lane-aligned.
+    ``bb`` blocks the folded batch*heads dim: compiled TPU runs bb=1 tiles
+    with the multi-block online softmax; the interpret/bitwise configuration
+    runs FULL extents (bb=BH, bq=Sq, bk=Sk, grid (1,1,1)) — with a single
+    KV block the zero-initialized rescale combines (`acc*corr + pv`,
+    `l*corr + Σp`) are exact regardless of FMA contraction, which is what
+    lets the jnp oracle (kernels/ref.flash_attention_ref) mirror the body
+    bitwise. Multi-block accumulation is validated by allclose tests only.
     """
     bh, sq, d = q.shape
     _, sk, _ = k.shape
-    assert sq % bq == 0 and sk % bk == 0, (q.shape, k.shape, bq, bk)
+    assert bh % bb == 0 and sq % bq == 0 and sk % bk == 0, \
+        (q.shape, k.shape, bb, bq, bk)
     scale = 1.0 / math.sqrt(d)
-    grid = (bh, sq // bq, sk // bk)
+    grid = (bh // bb, sq // bq, sk // bk)
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
         q_offset=q_offset, bq=bq, bk=bk, kv_steps=sk // bk)
@@ -103,16 +116,16 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((bb, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((bb, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((bb, bk, d), lambda b, i, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_specs=pl.BlockSpec((bb, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, d), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bb, bq, d), jnp.float32),
+            pltpu.VMEM((bb, bq, 1), jnp.float32),
+            pltpu.VMEM((bb, bq, 1), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, v)

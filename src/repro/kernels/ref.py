@@ -12,12 +12,16 @@ owns the flatten/pad plumbing.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
 INT8_QMAX = 127.0
 # Symmetric signed 4-bit: values in [-7, 7] (avoid -8 so negation is closed).
 INT4_QMAX = 7.0
+# Must equal kernels/flash_attention.NEG_INF (pinned by the bitwise tests).
+NEG_INF = -1e30
 
 
 def _scales(blocks: jnp.ndarray, qmax: float) -> jnp.ndarray:
@@ -94,23 +98,44 @@ def dequant_matmul_flat_ref(x: jnp.ndarray, q: jnp.ndarray,
     sequential f32 accumulation) so ``impl="jnp"`` and
     ``impl="pallas_interpret"`` are bitwise identical.
 
+    The contraction runs as a ``lax.fori_loop`` whose body replays the
+    kernel body op for op — casts, tile dequant, and the dot all live
+    *inside* the loop. The loop matters structurally, not just
+    numerically: a real (trip-count >= 2) while loop is an XLA fusion
+    barrier, so the surrounding graph compiles identically whichever impl
+    sits inside it, whereas unrolled/inlined bodies fuse into neighbours
+    and perturb their FMA contraction (kernels/ops.py, Fusion isolation).
+
     transpose=False: x (M, K) @ dequant(q (K, N)) -> (M, N)
     transpose=True : x (M, N) @ dequant(q (K, N)).T -> (M, K)
+    (transpose=True needs bc % block == 0, like the kernel.)
     """
-    w = dequant_w_flat_ref(q, scales, block)
-    xf = x.astype(jnp.float32)
     c_len = q.shape[0] if not transpose else q.shape[1]
     out_dim = q.shape[1] if not transpose else q.shape[0]
-    acc = jnp.zeros((x.shape[0], out_dim), jnp.float32)
-    for step in range(c_len // bc):
-        sl = slice(step * bc, (step + 1) * bc)
+    assert c_len % bc == 0, (q.shape, bc, transpose)
+
+    def step(i, acc):
+        x_t = jax.lax.dynamic_slice_in_dim(x, i * bc, bc, 1)
         if transpose:
-            acc = acc + jax.lax.dot_general(
-                xf[:, sl], w[:, sl], (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32)
+            q_t = jax.lax.dynamic_slice_in_dim(q, i * bc, bc, 1)
+            s_t = jax.lax.dynamic_slice_in_dim(
+                scales, i * (bc // block), bc // block, 1)
         else:
-            acc = acc + jnp.dot(xf[:, sl], w[sl, :],
-                                preferred_element_type=jnp.float32)
+            q_t = jax.lax.dynamic_slice_in_dim(q, i * bc, bc, 0)
+            s_t = jax.lax.dynamic_slice_in_dim(scales, i * bc, bc, 0)
+        xf = x_t.astype(jnp.float32)
+        qf = q_t.astype(jnp.float32)
+        r, c = q_t.shape
+        s3 = jnp.broadcast_to(s_t[:, :, None], (r, c // block, block))
+        w = qf * s3.reshape(r, c)
+        if transpose:
+            return acc + jax.lax.dot_general(
+                xf, w, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        return acc + jnp.dot(xf, w, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, c_len // bc, step,
+                            jnp.zeros((x.shape[0], out_dim), jnp.float32))
     return acc.astype(dtype)
 
 
@@ -137,3 +162,174 @@ def dequantize_int4_sum_ref(packed: jnp.ndarray, scales: jnp.ndarray,
     for j in range(1, packed.shape[0]):
         acc = acc + dequantize_int4_ref(packed[j], scales[j], jnp.float32)
     return acc.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention / selective-scan oracles (mirror the Pallas kernel blocking)
+# ---------------------------------------------------------------------------
+#
+# These are the impl="jnp" halves of the ops.py dispatch for the hot-path
+# compute kernels. Each one replays the *interpret-mode* kernel configuration
+# (full batch/row extents, grid only over the sequential KV / time dimension)
+# with a python loop of identically-shaped jnp ops in the same order, so
+# impl="jnp" and impl="pallas_interpret" agree bitwise through fwd and bwd
+# (DESIGN.md §5; same contract as dequant_matmul_flat_ref above).
+
+
+def _attn_body(q, k, v, mask, scale):
+    """The kernel's _compute for one full-extent KV block, op for op.
+
+    With the single-block configuration the running state starts at its
+    init values (acc=0, m=-inf, l=0), so the rescale combines are exact
+    (0*corr + x == x in every rounding mode) and no FMA-contraction
+    ambiguity can split jnp from pallas_interpret."""
+    qf = q.astype(jnp.float32) * scale                 # (bh, sq, d)
+    kf = k.astype(jnp.float32)                         # (bh, sk, d)
+    s = jax.lax.dot_general(qf, kf, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = jnp.full(s.shape[:2] + (1,), NEG_INF, jnp.float32)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l = jnp.zeros_like(m_prev) * corr + jnp.sum(p, axis=-1, keepdims=True)
+    vf = v.astype(jnp.float32)
+    acc = jnp.zeros(s.shape[:2] + (vf.shape[-1],), jnp.float32) * corr + \
+        jax.lax.dot_general(p.astype(vf.dtype), vf,
+                            (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0):
+    """q (BH, Sq, D); k, v (BH, Sk, D) -> (BH, Sq, D).
+
+    Masked softmax attention replaying the interpret-mode kernel call
+    (full extents, grid (1,1,1)) with identical op shapes — the dot runs
+    on the full (Sq, Sk) extent because CPU GEMM reduction order can vary
+    with tile shape, so the oracle must not re-chunk rows. The kernel's
+    static block-skip predicate is evaluated in python (an entirely
+    masked-out call returns zeros, like the kernel's never-written acc)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    last_q = q_offset + sq - 1
+    run = True
+    if causal:
+        run = run and (0 <= last_q)
+    if window:
+        run = run and (sk - 1 > q_offset - window)
+    if not run:
+        return jnp.zeros_like(q)
+    q_pos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+    mask = jnp.ones((sq, sk), jnp.bool_)
+    if causal:
+        mask = jnp.logical_and(mask, q_pos >= k_pos)
+    if window:
+        mask = jnp.logical_and(mask, q_pos - k_pos < window)
+    return jax.checkpoint(_attn_body, static_argnums=(4,))(
+        q, k, v, mask, scale)
+
+
+def _scan_block(h, af, dt_b, x_b, b_b, c_b):
+    """One time-block of the Mamba recurrence (inputs batch-major (B, bs, ·),
+    the kernel's native layout); per-step ops identical to the kernel's
+    fori_loop body. Time steps are read with dynamic slices rather than a
+    time-major ``lax.scan`` so no transpose appears at the interface — a
+    ``moveaxis`` here would fuse into neighbouring producer/consumer fusions
+    and perturb their FMA contraction on CPU, breaking the cross-impl
+    bitwise contract outside this op (see kernels/ops.py, Fusion
+    isolation)."""
+    def step(t, carry):
+        h, y = carry
+        dtf = dt_b[:, t].astype(jnp.float32)           # (B, D)
+        xf = x_b[:, t].astype(jnp.float32)
+        bf = b_b[:, t].astype(jnp.float32)             # (B, N)
+        cf = c_b[:, t].astype(jnp.float32)
+        da = jnp.exp(dtf[..., None] * af[None])        # (B, D, N)
+        dbx = (dtf * xf)[..., None] * bf[:, None, :]
+        h = da * h + dbx
+        yt = jnp.sum(h * cf[:, None, :], axis=-1)
+        y = jax.lax.dynamic_update_slice_in_dim(y, yt[:, None], t, axis=1)
+        return h, y
+    y0 = jnp.zeros(dt_b.shape, jnp.float32)
+    return jax.lax.fori_loop(0, dt_b.shape[1], step, (h, y0))
+
+
+def selective_scan_ref(dt, x, b, c, a, h0, *, bs: int = 256):
+    """dt, x (B, S, D); b, c (B, S, N); a (D, N); h0 (B, D, N) ->
+    (y (B, S, D) f32, h_last (B, D, N) f32).
+
+    Sequential recurrence in time order, chunked into ``bs``-step blocks
+    (rematerialized for bwd memory). Blocking along B/D/S never reorders
+    the arithmetic — per element it is the same multiply/add/N-reduction
+    chain — so this is bitwise-equal to the kernel for *any* bb/bd/bs."""
+    batch, s, d = dt.shape
+    bs = min(bs, s)
+    while s % bs:
+        bs //= 2
+    af = a.astype(jnp.float32)
+    h = h0.astype(jnp.float32)
+    blk = jax.checkpoint(_scan_block)
+    ys = []
+    for s_i in range(s // bs):
+        sl = slice(s_i * bs, (s_i + 1) * bs)
+        h, y = blk(h, af, dt[:, sl], x[:, sl], b[:, sl], c[:, sl])
+        ys.append(y)
+    y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=1)
+    return y.astype(jnp.float32), h
+
+
+def matmul_quant_ref(x, g, block: int, *, bc: int, bits: int = 8):
+    """Fused grad-matmul + block-quantize oracle: C = x.T @ g, quantized.
+
+    x (M, K); g (M, N) -> (q (K, N) int8 | (K, N//2) uint8 packed,
+    scales (K, N//block) f32), N % block == 0. The contraction over M runs
+    in ``bc``-row steps with sequential f32 accumulation (kernel order);
+    the epilogue is the kernel's block-quantize on the row-major
+    (·, block) view — the wire layout core/linear.py ships to the
+    reduce-scatter.
+
+    Structured as a single ``lax.fori_loop`` with the casts, the dot, and
+    the quantize epilogue all *inside* the body (the epilogue re-runs on
+    the running accumulator each step; only the last step's values
+    survive). A real while loop is an XLA fusion barrier, which keeps the
+    surrounding graph's compilation independent of which impl produced
+    these bytes (kernels/ops.py, Fusion isolation)."""
+    m, kk = x.shape
+    n = g.shape[1]
+    assert m % bc == 0 and n % block == 0, (x.shape, g.shape, bc, block)
+    qmax = INT4_QMAX if bits == 4 else INT8_QMAX
+
+    def step(i, carry):
+        acc, _, _ = carry
+        x_t = jax.lax.dynamic_slice_in_dim(x, i * bc, bc, 0)
+        g_t = jax.lax.dynamic_slice_in_dim(g, i * bc, bc, 0)
+        acc = acc + jax.lax.dot_general(
+            x_t.astype(jnp.float32), g_t.astype(jnp.float32),
+            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        a3 = acc.reshape(kk, n // block, block)
+        absmax = jnp.max(jnp.abs(a3), axis=-1, keepdims=True)
+        # multiply by the reciprocal constant instead of dividing: XLA
+        # folds `x / const` into `x * (1/const)` inside jit but not in
+        # eager mode, so a literal division would round differently per
+        # context and break the bitwise contract (the kernel epilogue
+        # uses the same expression)
+        scales = jnp.where(absmax == 0.0, 1.0, absmax * (1.0 / qmax))
+        qv = jnp.clip(jnp.round(a3 / scales), -qmax, qmax)
+        if bits == 4:
+            pairs = (qv.astype(jnp.int32) + 8).reshape(kk, n // 2, 2)
+            qb = (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+        else:
+            qb = qv.reshape(kk, n).astype(jnp.int8)
+        return acc, qb, scales.reshape(kk, n // block)
+
+    q0 = (jnp.zeros((kk, n // 2), jnp.uint8) if bits == 4
+          else jnp.zeros((kk, n), jnp.int8))
+    _, qb, scales = jax.lax.fori_loop(
+        0, m // bc, step,
+        (jnp.zeros((kk, n), jnp.float32), q0,
+         jnp.zeros((kk, n // block), jnp.float32)))
+    return qb, scales

@@ -29,65 +29,70 @@ def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref, y_ref,
 
     @pl.when(s_i == 0)
     def _init():
-        h_ref[...] = h0_ref[0]
+        h_ref[...] = h0_ref[...]
 
     a = a_ref[...].astype(jnp.float32)                 # (bd, N)
 
     def step(t, _):
-        dt = dt_ref[0, t].astype(jnp.float32)          # (bd,)
-        xv = x_ref[0, t].astype(jnp.float32)           # (bd,)
-        bv = b_ref[0, t].astype(jnp.float32)           # (N,)
-        cv = c_ref[0, t].astype(jnp.float32)           # (N,)
-        da = jnp.exp(dt[:, None] * a)                  # (bd, N)
-        dbx = (dt * xv)[:, None] * bv[None, :]
+        dt = dt_ref[:, t].astype(jnp.float32)          # (bb, bd)
+        xv = x_ref[:, t].astype(jnp.float32)           # (bb, bd)
+        bv = b_ref[:, t].astype(jnp.float32)           # (bb, N)
+        cv = c_ref[:, t].astype(jnp.float32)           # (bb, N)
+        da = jnp.exp(dt[..., None] * a[None])          # (bb, bd, N)
+        dbx = (dt * xv)[..., None] * bv[:, None, :]
         h = da * h_ref[...] + dbx
         h_ref[...] = h
-        y_ref[0, t] = jnp.sum(h * cv[None, :], axis=-1).astype(y_ref.dtype)
+        y_ref[:, t] = jnp.sum(h * cv[:, None, :], axis=-1).astype(y_ref.dtype)
         return 0
 
     jax.lax.fori_loop(0, bs, step, 0)
 
     @pl.when(s_i == s_steps - 1)
     def _done():
-        hout_ref[0] = h_ref[...]
+        hout_ref[...] = h_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bd", "bs", "interpret"))
-def selective_scan_pallas(dt, x, b, c, a, h0, *, bd: int = 512, bs: int = 256,
-                          interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("bb", "bd", "bs", "interpret"))
+def selective_scan_pallas(dt, x, b, c, a, h0, *, bb: int = 1, bd: int = 512,
+                          bs: int = 256, interpret: bool = False):
     """dt, x: (B, S, D); b, c: (B, S, N); a: (D, N); h0: (B, D, N).
 
-    Returns (y (B, S, D) f32, h_last (B, D, N) f32). D % bd == S % bs == 0.
+    Returns (y (B, S, D) f32, h_last (B, D, N) f32). B % bb == 0; bd/bs are
+    clamped to divisors of D/S. ``bb`` blocks the batch dim: compiled TPU
+    runs bb=1 tiles, the interpret/bitwise configuration runs full extents
+    (bb=B, bd=D) so the grid walks only the sequential time dimension —
+    the blocking the jnp oracle (kernels/ref.selective_scan_ref) mirrors.
     """
     batch, s, d = dt.shape
     n = b.shape[-1]
+    assert batch % bb == 0, (dt.shape, bb)
     bd = min(bd, d)
     while d % bd:
         bd //= 2
     bs = min(bs, s)
     while s % bs:
         bs //= 2
-    grid = (batch, d // bd, s // bs)
+    grid = (batch // bb, d // bd, s // bs)
     kernel = functools.partial(_scan_kernel, bs=bs, s_steps=s // bs)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bs, bd), lambda i, j, k: (i, k, j)),   # dt
-            pl.BlockSpec((1, bs, bd), lambda i, j, k: (i, k, j)),   # x
-            pl.BlockSpec((1, bs, n), lambda i, j, k: (i, k, 0)),    # B
-            pl.BlockSpec((1, bs, n), lambda i, j, k: (i, k, 0)),    # C
+            pl.BlockSpec((bb, bs, bd), lambda i, j, k: (i, k, j)),  # dt
+            pl.BlockSpec((bb, bs, bd), lambda i, j, k: (i, k, j)),  # x
+            pl.BlockSpec((bb, bs, n), lambda i, j, k: (i, k, 0)),   # B
+            pl.BlockSpec((bb, bs, n), lambda i, j, k: (i, k, 0)),   # C
             pl.BlockSpec((bd, n), lambda i, j, k: (j, 0)),          # A
-            pl.BlockSpec((1, bd, n), lambda i, j, k: (i, j, 0)),    # h0
+            pl.BlockSpec((bb, bd, n), lambda i, j, k: (i, j, 0)),   # h0
         ],
         out_specs=[
-            pl.BlockSpec((1, bs, bd), lambda i, j, k: (i, k, j)),   # y
-            pl.BlockSpec((1, bd, n), lambda i, j, k: (i, j, 0)),    # h_last
+            pl.BlockSpec((bb, bs, bd), lambda i, j, k: (i, k, j)),  # y
+            pl.BlockSpec((bb, bd, n), lambda i, j, k: (i, j, 0)),   # h_last
         ],
         out_shape=[
             jax.ShapeDtypeStruct((batch, s, d), jnp.float32),
             jax.ShapeDtypeStruct((batch, d, n), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bb, bd, n), jnp.float32)],
         interpret=interpret,
     )(dt, x, b, c, a, h0)

@@ -1,10 +1,12 @@
 """Shared model layers: norms, RoPE, memory-bounded attention, chunked CE.
 
-Attention is implemented flash-style in pure jnp — an outer scan over query
-chunks and an inner scan over key/value chunks with an online-softmax
-(running max / denominator) accumulator — so the (S, S) score matrix is never
-materialized.  This is the reference the (optional) Pallas flash kernel is
-validated against, and what the distributed engine lowers on every backend.
+Training/prefill attention routes through the first-class ``kernels/ops``
+dispatch (``jnp | pallas | pallas_interpret``, inherited from
+``ops.set_default_impl`` / ``--kernel-impl`` / ``REPRO_KERNEL_IMPL``):
+``ops.attention_fusable`` decides whether a call shape can use the Pallas
+kernel path, and rejected shapes (MLA value dims, traced decode offsets,
+unaligned seqs) fall back to the chunked jnp scan below — with a one-time
+structured warning and a dispatch-counter record, never silently.
 
 ``flash_decode`` is the sequence-sharded single-token decode attention used
 for 32k/500k KV caches: each device computes a partial softmax over its local
@@ -20,23 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..kernels import ops
+
 NEG_INF = -1e30
-
-# attention implementation: "jnp" (reference; what CPU dry-runs lower),
-# "pallas" (TPU deploy target), "pallas_interpret" (CPU validation of the
-# kernel body). The Pallas path requires block-divisible shapes and no
-# MLA-style split value dim; callers fall back to jnp otherwise.
-_ATTN_IMPL = "jnp"
-
-
-def set_attn_impl(impl: str) -> None:
-    global _ATTN_IMPL
-    assert impl in ("jnp", "pallas", "pallas_interpret"), impl
-    _ATTN_IMPL = impl
-
-
-def get_attn_impl() -> str:
-    return _ATTN_IMPL
 
 
 # ---------------------------------------------------------------------------
@@ -116,22 +104,18 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     b, sq, h, d = q.shape
     _, sk, hkv, _ = k.shape
     dv = v.shape[-1]                      # MLA: value dim may differ from qk dim
-    if (_ATTN_IMPL != "jnp" and dv == d and softmax_scale is None
-            and isinstance(q_offset, int)
-            and sq % min(128, sq) == 0 and sk % min(128, sk) == 0
-            and sq >= 8 and sk >= 8):
-        from ..kernels.flash_attention import flash_attention_pallas
-        bq = min(128, sq)
-        bk = min(128, sk)
+    fusable, reason = ops.attention_fusable(
+        sq, sk, d, dv, softmax_scale=softmax_scale, q_offset=q_offset)
+    if fusable:
         kf = _repeat_kv(k, h // hkv)
         vf = _repeat_kv(v, h // hkv)
         qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
         kt = kf.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
         vt = vf.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
-        o = flash_attention_pallas(
-            qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
-            bq=bq, bk=bk, interpret=(_ATTN_IMPL == "pallas_interpret"))
+        o = ops.flash_attention(qt, kt, vt, causal=causal, window=window,
+                                q_offset=q_offset)
         return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    ops.record_fallback("attention", reason)
     k = _repeat_kv(k, h // hkv)
     v = _repeat_kv(v, h // hkv)
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)

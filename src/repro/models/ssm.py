@@ -1,12 +1,12 @@
 """Mamba-1 selective-state-space mixer (falcon-mamba, jamba).
 
 The selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t is a linear
-recurrence; we evaluate it as an outer ``lax.scan`` over sequence chunks
-(carrying the (B, d_inner, d_state) state) with a ``lax.associative_scan``
-inside each chunk. The chunk body is rematerialized, so training memory is
-O(S/chunk) states instead of O(S) — the standard TPU adaptation of the CUDA
-selective-scan kernel (sequential warp-level scan has no TPU analogue; the
-associative formulation maps onto the VPU instead).
+recurrence evaluated through the first-class ``kernels/ops`` dispatch
+(``ops.selective_scan``): the jnp oracle (kernels/ref.selective_scan_ref)
+runs a rematerialized time-blocked ``lax.scan``, and the Pallas kernel keeps
+the (B, d_inner, d_state) carry in VMEM across sequence blocks. The two are
+bitwise-identical through fwd+bwd (the shared custom_vjp differentiates the
+oracle), so ``--kernel-impl`` swaps never perturb training numerics.
 
 Decode is O(1): one state update per token.
 """
@@ -14,19 +14,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
+from ..kernels import ops
 from .config import ArchConfig
-
-# scan implementation: "jnp" (chunked associative scan; what CPU dry-runs
-# lower) | "pallas" (TPU deploy target) | "pallas_interpret" (CPU validation)
-_SCAN_IMPL = "jnp"
-
-
-def set_scan_impl(impl: str) -> None:
-    global _SCAN_IMPL
-    assert impl in ("jnp", "pallas", "pallas_interpret"), impl
-    _SCAN_IMPL = impl
 
 
 def _ssm_params(view, prefix, cfg: ArchConfig):
@@ -44,18 +34,6 @@ def _conv_train(x, w, b, d_conv: int):
         xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
         out = out + xs.astype(jnp.float32) * w[:, k].astype(jnp.float32)
     return out + b.astype(jnp.float32)
-
-
-def _inner_scan(da, dbx, h0):
-    """da, dbx: (B, Q, din, n); h0 (B, din, n). Returns (h_all, h_last)."""
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
-        return al * ar, ar * bl + br
-
-    ca, cb = lax.associative_scan(combine, (da, dbx), axis=1)
-    h_all = ca * h0[:, None] + cb
-    return h_all, h_all[:, -1]
 
 
 def mamba_mixer(view, prefix: str, cfg: ArchConfig, x):
@@ -80,41 +58,9 @@ def mamba_mixer(view, prefix: str, cfg: ArchConfig, x):
     dt = jax.nn.softplus(dt_full.astype(jnp.float32) + dt_bias)  # (B,S,din)
     a = -jnp.exp(a_log)                                          # (din,n)
 
-    if _SCAN_IMPL != "jnp":
-        from ..kernels.selective_scan import selective_scan_pallas
-        h0 = jnp.zeros((b, din, n), jnp.float32)
-        y, h_last = selective_scan_pallas(
-            dt, x_c.astype(jnp.float32), b_ssm, c_ssm, a, h0,
-            interpret=(_SCAN_IMPL == "pallas_interpret"))
-        y = y + d_skip * x_c.astype(jnp.float32)
-        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-        out = view.mm(prefix + "w_out", y)
-        conv_tail = x_in[:, -(s.d_conv - 1):].astype(jnp.float32) \
-            if seq >= s.d_conv - 1 else jnp.pad(
-                x_in.astype(jnp.float32),
-                ((0, 0), (s.d_conv - 1 - seq, 0), (0, 0)))
-        return out, (h_last, conv_tail)
-
-    from .layers import _best_chunk
-    chunk = _best_chunk(seq, s.chunk)
-    nc = seq // chunk
-
-    def chunk_body(h, inp):
-        dt_c, b_c, c_c, x_cc = inp      # (B,Q,din) (B,Q,n) (B,Q,n) (B,Q,din)
-        da = jnp.exp(dt_c[..., None] * a)                       # (B,Q,din,n)
-        dbx = (dt_c * x_cc.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
-        h_all, h_last = _inner_scan(da, dbx, h)
-        y = jnp.einsum("bqdn,bqn->bqd", h_all, c_c)             # (B,Q,din)
-        return h_last, y
-
-    def split(t):
-        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
-
     h0 = jnp.zeros((b, din, n), jnp.float32)
-    body = jax.checkpoint(chunk_body, prevent_cse=False)
-    h_last, ys = lax.scan(body, h0, (split(dt), split(b_ssm), split(c_ssm),
-                                     split(x_c)))
-    y = ys.swapaxes(0, 1).reshape(b, seq, din)
+    y, h_last = ops.selective_scan(dt, x_c.astype(jnp.float32), b_ssm, c_ssm,
+                                   a, h0)
     y = y + d_skip * x_c.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     out = view.mm(prefix + "w_out", y)

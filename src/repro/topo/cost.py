@@ -265,6 +265,12 @@ def step_cost(cfg: ZeroConfig, topo: Topology, wl: Workload,
             kb += wl.n_microbatch * 2 * 4.0 * wl.psi        # fwd + bwd dequant
         if cfg.quantize_grads:
             kb += wl.n_microbatch * 2 * 4.0 * wl.psi / cfg.w_degree
+            # producing side: without the matmul_quant epilogue the dense
+            # f32 dW is written to HBM (4B/param) and re-read by the
+            # quantize kernel (4B/param) before the wire format exists;
+            # the fused epilogue (kernels/ops.matmul_quant) emits the
+            # INT-wire directly from the accumulator, per microbatch
+            kb += wl.n_microbatch * 2 * 4.0 * wl.psi
         kernel_s = kb / topo.hbm_bw
     mem = memory_bytes(cfg, wl.psi, streaming=wl.stream_grads
                        or cfg.stream_grads)

@@ -380,6 +380,79 @@ def kernel_impl_equivalence():
     print("SCENARIO_OK kernel_impl_equivalence")
 
 
+def attn_scan_impl_equivalence():
+    """impl="jnp" vs impl="pallas_interpret" BITWISE through the model hot
+    paths promoted into the ops dispatch (DESIGN.md §5): flash attention
+    (qwen2), the selective scan (falcon-mamba), and the fused matmul-quant
+    weight-grad epilogue — loss AND every per-leaf gradient on the 8-device
+    topo mesh. Dispatch counters prove the kernels actually ran (no silent
+    fallback on either impl)."""
+    from repro.core.engine import ParamView, TrainHparams, ZeroEngine
+    from repro.kernels import ops
+    from repro.models.registry import build_model, get_arch
+
+    jax.config.update("jax_default_matmul_precision", "float32")
+    mesh = _mesh()
+    rng = np.random.default_rng(0)
+    prev_impl = ops.get_default_impl()
+    try:
+        for name, kern in (("qwen2-0.5b", "attention"),
+                           ("falcon-mamba-7b", "selective_scan")):
+            arch = get_arch(name).reduced(n_layers=2, d_model=128,
+                                          vocab=256) \
+                if name == "qwen2-0.5b" else get_arch(name).reduced()
+            model = build_model(arch)
+            batch_np = rng.integers(0, arch.vocab, (8, 33), dtype=np.int32)
+            loss_fn = model.loss_fn()
+            out = {}
+            for impl in ("jnp", "pallas_interpret"):
+                # attention/scan inherit the process default (the model
+                # layer is not cfg-aware); quant collectives pin via cfg
+                ops.set_default_impl(impl)
+                ops.reset_dispatch_counters()
+                cfg = _cfg("zero_topo", mesh, compute_dtype="float32",
+                           impl=impl)
+                assert cfg.quantize_weights and cfg.quantize_grads
+                eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                                 TrainHparams(lr=1e-3, total_steps=8,
+                                              warmup_steps=0))
+                state = eng.init_state(jax.random.key(0))
+                specs = eng.state_in_specs()["primaries"]
+
+                def local(primaries, b, eng=eng):
+                    def loss(p):
+                        v = ParamView(eng.fns, p, overlap=eng.cfg.overlap)
+                        l, t = loss_fn(v, b)
+                        return l / t
+                    return jax.value_and_grad(loss)(primaries)
+
+                sm = shard_map(local, mesh=mesh,
+                               in_specs=(specs, {"tokens": P(AX)}),
+                               out_specs=(P(), specs), check_vma=False)
+                batch = {"tokens": jax.device_put(
+                    jnp.asarray(batch_np), NamedSharding(mesh, P(AX)))}
+                loss, grads = jax.jit(sm)(state["primaries"], batch)
+                counts = ops.dispatch_counters()
+                assert counts.get(f"{kern}/{impl}", 0) > 0, \
+                    (name, impl, counts)
+                if name == "qwen2-0.5b":
+                    # d_model=128 % block=64 == 0: every matmul leaf takes
+                    # the fused epilogue-quant dW path
+                    assert counts.get(f"matmul_quant/{impl}", 0) > 0, counts
+                    assert not any("fallback" in k for k in counts), counts
+                out[impl] = (float(loss),
+                             {n: np.asarray(g) for n, g in grads.items()})
+            l_j, g_j = out["jnp"]
+            l_p, g_p = out["pallas_interpret"]
+            assert l_j == l_p, (name, l_j, l_p)
+            for n in g_j:
+                np.testing.assert_array_equal(g_j[n], g_p[n],
+                                              err_msg=f"{name}/{n}")
+    finally:
+        ops.set_default_impl(prev_impl)
+    print("SCENARIO_OK attn_scan_impl_equivalence")
+
+
 # ---------------------------------------------------------------------------
 
 def schemes_equivalent():
@@ -852,6 +925,7 @@ SCENARIOS = dict(collectives=collectives,
                  overlap_equivalence=overlap_equivalence,
                  stream_grads_equivalence=stream_grads_equivalence,
                  kernel_impl_equivalence=kernel_impl_equivalence,
+                 attn_scan_impl_equivalence=attn_scan_impl_equivalence,
                  auto_scheme=auto_scheme,
                  schemes_equivalent=schemes_equivalent,
                  dp_vs_single=dp_vs_single,

@@ -328,24 +328,31 @@ def test_lint_pallas_and_dequant(tmp_path):
     """, rel="kernels/custom.py").ok
 
 
-def test_lint_ops_dispatch_and_exemptions(tmp_path):
+def test_lint_ops_dispatch_and_exemptions(tmp_path, monkeypatch):
     rep = _lint_src(tmp_path, """\
         from ..kernels.quant_blockwise import quantize_int8_pallas
     """)
     assert rep.rules() == {"ops-dispatch"}
-    # tracked exemption: models/layers.py may import flash_attention
+    # the attention/scan promotion emptied the tracked-exemption table:
+    # models/layers.py may no longer import the kernel module directly
+    assert lint.OPS_DISPATCH_EXEMPT == {}
     rep = _lint_src(tmp_path, """\
         from ..kernels.flash_attention import flash_attention_pallas
     """, rel="models/layers.py")
-    assert rep.ok, rep.render()
-    # ... but only that module
+    assert "ops-dispatch" in rep.rules(), rep.render()
     rep = _lint_src(tmp_path, """\
         from ..kernels.selective_scan import selective_scan_pallas
-    """, rel="models/layers.py")
-    assert "ops-dispatch" in rep.rules()
-    # a file whose exemption matches no import reports it as stale
+    """, rel="models/ssm.py")
+    assert "ops-dispatch" in rep.rules(), rep.render()
+    # the machinery stays: an exemption that matches no import is stale
+    monkeypatch.setitem(lint.OPS_DISPATCH_EXEMPT, "models/ssm.py",
+                        ("selective_scan",))
     rep = _lint_src(tmp_path, "x = 1\n", rel="models/ssm.py")
     assert rep.rules() == {"stale-exemption"}, rep.render()
+    rep = _lint_src(tmp_path, """\
+        from ..kernels.selective_scan import selective_scan_pallas
+    """, rel="models/ssm.py")
+    assert rep.ok, rep.render()
 
 
 def test_lint_version_api(tmp_path):

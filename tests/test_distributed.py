@@ -10,7 +10,8 @@ import pytest
 HERE = os.path.dirname(__file__)
 SCENARIOS = ["collectives", "reshard_roundtrip",
              "schemes_equivalent", "auto_scheme",
-             "kernel_impl_equivalence", "stream_grads_equivalence",
+             "kernel_impl_equivalence", "attn_scan_impl_equivalence",
+             "stream_grads_equivalence",
              "dp_vs_single", "serve_sharded",
              "hlo_census_real", "multipod_mesh", "resident_and_sp",
              "obs_trace_equivalence"]

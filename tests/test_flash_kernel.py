@@ -1,52 +1,76 @@
-"""Pallas flash-attention kernel vs the jnp online-softmax reference:
-shape/dtype/config sweeps in interpret mode (deliverable (c))."""
+"""Flash attention under the kernels/ops dispatch: the jnp oracle and the
+interpret-mode Pallas kernel must agree BITWISE through forward and backward
+(DESIGN.md §5), multi-block kernel configs match to tolerance, and rejected
+shapes fall back with a structured warning + counter, never silently.
+
+hypothesis is an optional [test] extra: the property tests degrade to a
+skip when it is missing (same guard as tests/test_kernels.py).
+"""
+import math
+import warnings
+
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.kernels import ops
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.models import layers as L
 
 
-def _qkv(b, s, h, hkv, d, dtype, seed=0):
+def _qkv(bh, sq, sk, d, dtype=jnp.float32, seed=0):
     ks = jax.random.split(jax.random.key(seed), 3)
-    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
-    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32).astype(dtype)
-    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32).astype(dtype)
+    q = jax.random.normal(ks[0], (bh, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (bh, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (bh, sk, d), jnp.float32).astype(dtype)
     return q, k, v
 
 
-@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 1), (8, 2)])
+def _grads(q, k, v, impl, **kw):
+    """Fresh jit per impl: the dispatch is baked in at trace time, so a
+    shared jit cache would silently reuse the first impl's executable."""
+    def loss(q, k, v):
+        o = ops.flash_attention(q, k, v, impl=impl, **kw)
+        return jnp.sum(o.astype(jnp.float32) ** 2)
+    return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))(q, k, v)
+
+
+def _assert_bitwise(ra, rb, what):
+    la, ga = ra
+    lb, gb = rb
+    assert np.asarray(la).tobytes() == np.asarray(lb).tobytes(), what
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(what))
+
+
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_flash_pallas_matches_jnp(h, hkv, causal, window, dtype):
-    b, s, d = 1, 256, 32
-    q, k, v = _qkv(b, s, h, hkv, d, dtype)
-    L.set_attn_impl("jnp")
-    ref = L.flash_attention(q, k, v, causal=causal, window=window)
-    try:
-        L.set_attn_impl("pallas_interpret")
-        out = L.flash_attention(q, k, v, causal=causal, window=window)
-    finally:
-        L.set_attn_impl("jnp")
-    tol = 2e-4 if dtype == jnp.float32 else 3e-2
-    np.testing.assert_allclose(np.asarray(out, np.float32),
-                               np.asarray(ref, np.float32),
-                               rtol=tol, atol=tol)
+def test_ops_attention_jnp_vs_interpret_bitwise(causal, window, dtype):
+    q, k, v = _qkv(4, 128, 128, 32, dtype)
+    kw = dict(causal=causal, window=window)
+    _assert_bitwise(_grads(q, k, v, "jnp", **kw),
+                    _grads(q, k, v, "pallas_interpret", **kw),
+                    f"causal={causal} window={window} dtype={dtype}")
 
 
-def test_flash_pallas_q_offset_decode_chunk():
-    """A later q chunk (kv cache longer than q) masks correctly."""
-    b, h, d = 1, 2, 32
-    sq, sk, off = 128, 256, 128
-    q = jax.random.normal(jax.random.key(0), (b * h, sq, d))
-    k = jax.random.normal(jax.random.key(1), (b * h, sk, d))
-    v = jax.random.normal(jax.random.key(2), (b * h, sk, d))
-    out = flash_attention_pallas(q, k, v, causal=True, q_offset=off,
-                                 bq=128, bk=128, interpret=True)
-    # reference: dense softmax with absolute positions
-    import math
+def test_ops_attention_q_offset_decode_bitwise_and_correct():
+    """A later q chunk (KV cache longer than q) is bitwise across impls and
+    matches the dense softmax with absolute positions."""
+    bh, sq, sk, off, d = 2, 128, 256, 128, 32
+    q, k, v = _qkv(bh, sq, sk, d, seed=1)
+    kw = dict(causal=True, q_offset=off)
+    rj = _grads(q, k, v, "jnp", **kw)
+    ri = _grads(q, k, v, "pallas_interpret", **kw)
+    _assert_bitwise(rj, ri, "q_offset decode chunk")
+    out = ops.flash_attention(q, k, v, impl="pallas_interpret", **kw)
     s = jnp.einsum("bqd,bkd->bqk", q, k) / math.sqrt(d)
     mask = (off + jnp.arange(sq))[:, None] >= jnp.arange(sk)[None, :]
     p = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
@@ -55,16 +79,92 @@ def test_flash_pallas_q_offset_decode_chunk():
                                rtol=2e-4, atol=2e-4)
 
 
-def test_flash_pallas_block_skip_equals_full():
-    """Window masking must skip kv blocks without changing results."""
-    b, s, d = 1, 512, 32
-    q, k, v = _qkv(b, s, 2, 2, d, jnp.float32, seed=3)
-    L.set_attn_impl("jnp")
-    ref = L.flash_attention(q, k, v, causal=True, window=100)
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 1), (8, 2)])
+def test_layers_attention_gqa_bitwise_across_impls(h, hkv):
+    """models/layers.flash_attention (GQA head folding included) is bitwise
+    under the process-default impl switch."""
+    b, s, d = 1, 128, 32
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    outs = {}
     try:
-        L.set_attn_impl("pallas_interpret")
-        out = L.flash_attention(q, k, v, causal=True, window=100)
+        for impl in ("jnp", "pallas_interpret"):
+            ops.set_default_impl(impl)
+            outs[impl] = jax.jit(
+                lambda q, k, v, _i=impl: L.flash_attention(q, k, v))(q, k, v)
     finally:
-        L.set_attn_impl("jnp")
+        ops.set_default_impl("jnp")
+    np.testing.assert_array_equal(np.asarray(outs["jnp"]),
+                                  np.asarray(outs["pallas_interpret"]))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 100), (False, 0)])
+def test_multiblock_kernel_matches_oracle(causal, window):
+    """The production blocking (bq=bk=128, online-softmax rescales active)
+    matches the oracle to fp32 tolerance — no bitwise contract here."""
+    q, k, v = _qkv(2, 512, 512, 32, seed=3)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 bb=1, bq=128, bk=128, interpret=True)
+    ref = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              impl="jnp")
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
+
+
+def test_fallback_warns_once_and_counts():
+    """Non-fusable shapes take the chunked jnp path with one structured
+    warning per (kernel, reason) and a dispatch counter entry."""
+    b, h, d = 1, 2, 32
+    sq, sk = 128, 192               # 192 % min(128, 192) != 0
+    ks = jax.random.split(jax.random.key(4), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d))
+    k = jax.random.normal(ks[1], (b, sk, h, d))
+    v = jax.random.normal(ks[2], (b, sk, h, d))
+    ops.reset_dispatch_counters()
+    with pytest.warns(UserWarning, match="fell back to the chunked jnp"):
+        L.flash_attention(q, k, v, causal=False)
+    counts = ops.dispatch_counters()
+    assert counts.get("attention/fallback/seq_unaligned") == 1, counts
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second call must NOT warn again
+        L.flash_attention(q, k, v, causal=False)
+    assert ops.dispatch_counters()["attention/fallback/seq_unaligned"] == 2
+    # a different reason warns separately
+    with pytest.warns(UserWarning, match="custom_scale"):
+        sp = jax.random.normal(ks[0], (1, 128, 2, 32))
+        L.flash_attention(sp, sp, sp, softmax_scale=0.5)
+    assert ops.dispatch_counters()["attention/fallback/custom_scale"] == 1
+
+
+def test_attention_fusable_reasons():
+    ok, reason = ops.attention_fusable(128, 128, 32, 32)
+    assert ok and reason is None
+    assert ops.attention_fusable(128, 128, 32, 16)[1] == "mla_dv_mismatch"
+    assert ops.attention_fusable(128, 128, 32, 32,
+                                 softmax_scale=0.1)[1] == "custom_scale"
+    assert ops.attention_fusable(
+        128, 128, 32, 32, q_offset=jnp.int32(3))[1] == "traced_q_offset"
+    assert ops.attention_fusable(128, 192, 32, 32)[1] == "seq_unaligned"
+    assert ops.attention_fusable(4, 128, 32, 32)[1] == "seq_unaligned"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(1, 4), st.integers(0, 3), st.sampled_from([0, 32, 64]))
+    def test_prop_window_offset_decode_bitwise(chunk_i, seed, window):
+        """Sliding-window + q_offset decode attention: any 128-aligned q
+        chunk against a longer cache is bitwise across impls, fwd + bwd."""
+        sq, d = 128, 32
+        off = chunk_i * sq
+        sk = off + sq
+        q, k, v = _qkv(2, sq, sk, d, seed=seed)
+        kw = dict(causal=True, window=window, q_offset=off)
+        _assert_bitwise(_grads(q, k, v, "jnp", **kw),
+                        _grads(q, k, v, "pallas_interpret", **kw),
+                        f"off={off} sk={sk} window={window} seed={seed}")
+else:
+    def test_prop_hypothesis_missing():
+        pytest.skip("hypothesis not installed (optional [test] extra); "
+                    "property tests skipped")

@@ -223,6 +223,93 @@ def test_ops_int4_roundtrip_error_bound(impl):
 
 
 # ---------------------------------------------------------------------------
+# matmul_quant: the fused dW -> wire-format epilogue (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("m,k,n,block", [(33, 16, 512, 64), (64, 128, 384, 64),
+                                         (10, 8, 256, 128)])
+def test_matmul_quant_jnp_vs_interpret_bitwise(bits, m, k, n, block):
+    """Wire bytes AND scales are bitwise identical across the pair — the
+    downstream a2a ships these verbatim, so close-enough is not enough."""
+    x = _rand((m, k), jnp.float32, 8)
+    g = _rand((m, n), jnp.float32, 9)
+    q_j, s_j = ops.matmul_quant(x, g, block, bits=bits, impl="jnp")
+    q_p, s_p = ops.matmul_quant(x, g, block, bits=bits,
+                                impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(q_j), np.asarray(q_p))
+    np.testing.assert_array_equal(np.asarray(s_j), np.asarray(s_p))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_matmul_quant_matches_unfused_pair(bits):
+    """Dequantizing the fused output recovers x.T @ g to quantization error,
+    and the wire layout equals quantize(C.reshape(-1)) up to rounding."""
+    m, k, n, block = 32, 16, 512, 64
+    x = _rand((m, k), jnp.float32, 10)
+    g = _rand((m, n), jnp.float32, 11)
+    q, s = ops.matmul_quant(x, g, block, bits=bits, impl="jnp")
+    dense = np.asarray(x).T @ np.asarray(g)
+    deq = ops.dequantize_int4 if bits == 4 else ops.dequantize_int8
+    got = np.asarray(deq(q, s, block, jnp.float32)).reshape(k, n)
+    qmax = 7.0 if bits == 4 else 127.0
+    bound = np.abs(dense.reshape(-1, block)).max(axis=1, keepdims=True) \
+        / qmax * 0.5 + 1e-6
+    err = np.abs((got - dense).reshape(-1, block))
+    assert (err <= bound + 1e-5).all()
+
+
+def test_matmul_quant_pad_to_exact_zero_blocks():
+    """pad_to appends exact wire zeros (q=0 / 0x88, scale=1) — the same
+    bytes quantize-of-zero-padding ships on the unfused path."""
+    m, k, n, block = 16, 8, 256, 64
+    x = _rand((m, k), jnp.float32, 12)
+    g = _rand((m, n), jnp.float32, 13)
+    logical = k * n
+    pad_to = logical + 4 * block
+    for bits, fill in ((8, 0), (4, 0x88)):
+        q, s = ops.matmul_quant(x, g, block, bits=bits, pad_to=pad_to,
+                                impl="pallas_interpret")
+        q0, s0 = ops.matmul_quant(x, g, block, bits=bits, impl="jnp")
+        wire = logical // 2 if bits == 4 else logical
+        assert q.shape == (pad_to // 2 if bits == 4 else pad_to,)
+        np.testing.assert_array_equal(np.asarray(q)[:wire], np.asarray(q0))
+        assert (np.asarray(q)[wire:] == fill).all()
+        np.testing.assert_array_equal(np.asarray(s)[:logical // block],
+                                      np.asarray(s0))
+        assert (np.asarray(s)[logical // block:] == 1.0).all()
+
+
+def test_dw_fusable_routes_unaligned_to_unfused(monkeypatch):
+    """Regression: a leaf whose columns don't tile into quant blocks (e.g.
+    falcon-mamba's w_xproj (512, 48) with block 64) must keep the dense
+    matmul + quantize pair — matmul_quant would produce a broken wire
+    layout for it. Any fused call for such a spec is an error."""
+    from repro.core import linear
+    from repro.core.partition import LeafSpec
+    from repro.launch.mesh import make_test_mesh, scheme_config
+
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
+    cfg = scheme_config("zero_topo", mesh, quant_block=64,
+                        compute_dtype="float32")
+    aligned = LeafSpec("w_in", (256, 1024))
+    unaligned = LeafSpec("w_xproj", (512, 48))
+    assert not linear._dw_fusable(unaligned, cfg)
+    # the gate result for the aligned spec depends only on the RS config;
+    # on a 1-device weight axis there is no quantized a2a to fuse into
+    if cfg.quantize_grads and cfg.size(cfg.axes.weight) > 1:
+        assert linear._dw_fusable(aligned, cfg)
+
+    def _boom(*a, **kw):
+        raise AssertionError("matmul_quant called for a non-fusable leaf")
+    monkeypatch.setattr(ops, "matmul_quant", _boom)
+    x2 = _rand((12, 512), jnp.float32, 14)
+    g2 = _rand((12, 48), jnp.float32, 15)
+    out = linear._mm_dw_stage1(x2, g2, False, unaligned, cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
 # hypothesis property tests (skip when the optional extra is missing)
 # ---------------------------------------------------------------------------
 

@@ -1,5 +1,6 @@
-"""Model-level integration of the Pallas selective-scan kernel: the mamba
-mixer under set_scan_impl('pallas_interpret') reproduces the jnp path."""
+"""Model-level integration of the selective-scan ops dispatch: a mamba
+model's loss AND gradients are bitwise identical under the process-default
+impl switch (jnp vs pallas_interpret), end to end through the ZeRO engine."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -7,12 +8,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.engine import ParamView, TrainHparams, ZeroEngine
+from repro.kernels import ops
 from repro.launch.mesh import make_test_mesh, scheme_config
-from repro.models import ssm
 from repro.models.registry import build_model, get_arch
 
 
-def test_mamba_model_pallas_scan_matches_jnp():
+def test_mamba_model_scan_impls_bitwise():
     mesh = make_test_mesh(shape=(1, 1, 1), axes=("data", "node", "gcd"))
     arch = get_arch("falcon-mamba-7b").reduced()
     model = build_model(arch)
@@ -28,15 +29,26 @@ def test_mamba_model_pallas_scan_matches_jnp():
         l, t = model.lm.loss(v, b)
         return l / t
 
-    f = jax.jit(shard_map(
-        loss, mesh=mesh,
-        in_specs=(eng.state_in_specs()["primaries"], {"tokens": P()}),
-        out_specs=P(), check_vma=False))
-    ssm.set_scan_impl("jnp")
-    l0 = float(f(state["primaries"], batch))
+    results = {}
     try:
-        ssm.set_scan_impl("pallas_interpret")
-        l1 = float(f(state["primaries"], batch))
+        for impl in ("jnp", "pallas_interpret"):
+            ops.set_default_impl(impl)
+            ops.reset_dispatch_counters()
+            # fresh jit per impl: dispatch is baked in at trace time
+            f = jax.jit(shard_map(
+                jax.value_and_grad(loss), mesh=mesh,
+                in_specs=(eng.state_in_specs()["primaries"], {"tokens": P()}),
+                out_specs=(P(), eng.state_in_specs()["primaries"]),
+                check_vma=False))
+            l, g = f(state["primaries"], batch)
+            assert ops.dispatch_counters().get(
+                f"selective_scan/{impl}", 0) > 0, ops.dispatch_counters()
+            results[impl] = (float(l), jax.tree.map(np.asarray, g))
     finally:
-        ssm.set_scan_impl("jnp")
-    assert abs(l0 - l1) < 1e-4, (l0, l1)
+        ops.set_default_impl("jnp")
+
+    l0, g0 = results["jnp"]
+    l1, g1 = results["pallas_interpret"]
+    assert l0 == l1, (l0, l1)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(a, b)

@@ -1,25 +1,28 @@
-"""Pallas selective-scan kernel vs the jnp associative-scan oracle:
-shape sweeps + property tests (decay bounds)."""
+"""Selective scan under the kernels/ops dispatch: the jnp oracle and the
+interpret-mode Pallas kernel agree BITWISE through forward and backward
+(DESIGN.md §5), and — because blocking along B/D/S never reorders the
+per-element recurrence — ANY bb/bd/bs kernel blocking reproduces the oracle
+exactly, not just to tolerance.
+
+hypothesis is an optional [test] extra: the property tests degrade to a
+skip when it is missing (same guard as tests/test_kernels.py).
+"""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
-pytest.importorskip("hypothesis")  # optional [test] extra; degrade to skip, not collection error
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
+from repro.kernels import ops, ref
 from repro.kernels.selective_scan import selective_scan_pallas
-from repro.models.ssm import _inner_scan
 
 
-def _ref(dt, x, bm, cm, a, h0):
-    da = jnp.exp(dt[..., None] * a)
-    dbx = (dt * x)[..., None] * bm[:, :, None, :]
-    h_all, h_last = _inner_scan(da, dbx, h0)
-    return jnp.einsum("bsdn,bsn->bsd", h_all, cm), h_last
-
-
-def _inputs(b, s, d, n, seed=0):
+def _inputs(b, s, d, n, seed=0, dtype=jnp.float32):
     ks = jax.random.split(jax.random.key(seed), 6)
     dt = jax.random.uniform(ks[0], (b, s, d), minval=0.01, maxval=0.2)
     x = jax.random.normal(ks[1], (b, s, d))
@@ -27,49 +30,103 @@ def _inputs(b, s, d, n, seed=0):
     cm = jax.random.normal(ks[3], (b, s, n)) * 0.3
     a = -jnp.exp(jax.random.normal(ks[4], (d, n)) * 0.3)
     h0 = jax.random.normal(ks[5], (b, d, n)) * 0.1
-    return dt, x, bm, cm, a, h0
+    return (dt.astype(dtype), x.astype(dtype), bm.astype(dtype),
+            cm.astype(dtype), a, h0)
 
 
-@pytest.mark.parametrize("b,s,d,n,bd,bs", [
-    (1, 32, 8, 4, 8, 8), (2, 64, 16, 4, 8, 16), (2, 128, 16, 16, 16, 32),
-    (1, 64, 32, 8, 32, 64),
-])
-def test_matches_reference(b, s, d, n, bd, bs):
+def _grads(args, impl):
+    """Fresh jit per impl (dispatch is baked in at trace time)."""
+    def loss(dt, x, bm, cm, a, h0):
+        y, hl = ops.selective_scan(dt, x, bm, cm, a, h0, impl=impl)
+        return jnp.sum(y * y) + jnp.sum(hl * hl)
+    return jax.jit(jax.value_and_grad(loss, argnums=tuple(range(6))))(*args)
+
+
+@pytest.mark.parametrize("b,s,d,n", [(1, 32, 8, 4), (2, 64, 16, 4),
+                                     (2, 33, 16, 8)])
+def test_ops_scan_jnp_vs_interpret_bitwise(b, s, d, n):
     args = _inputs(b, s, d, n)
-    y, hl = selective_scan_pallas(*args, bd=bd, bs=bs, interpret=True)
-    y_ref, h_ref = _ref(*args)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(hl), np.asarray(h_ref),
-                               rtol=1e-5, atol=1e-5)
+    lj, gj = _grads(args, "jnp")
+    li, gi = _grads(args, "pallas_interpret")
+    assert np.asarray(lj).tobytes() == np.asarray(li).tobytes()
+    for a, bb in zip(jax.tree.leaves(gj), jax.tree.leaves(gi)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+@pytest.mark.parametrize("bb,bd,bs", [(2, 64, 32), (1, 64, 16), (2, 32, 8),
+                                      (1, 16, 32), (2, 8, 64)])
+def test_kernel_blocking_invariance_exact(bb, bd, bs):
+    """Non-default bb/bd/bs blockings are EXACTLY equal to the oracle: the
+    recurrence is sequential in time and elementwise in B/D, so tiling can
+    never reorder the arithmetic."""
+    args = _inputs(2, 64, 64, 16, seed=1)
+    yr, hr = jax.jit(lambda a: ref.selective_scan_ref(*a))(args)
+    yk, hk = jax.jit(lambda a: selective_scan_pallas(
+        *a, bb=bb, bd=bd, bs=bs, interpret=True))(args)
+    np.testing.assert_array_equal(np.asarray(yr), np.asarray(yk))
+    np.testing.assert_array_equal(np.asarray(hr), np.asarray(hk))
+
+
+@pytest.mark.parametrize("bs", [8, 16, 64])
+def test_ref_time_blocking_invariance_exact(bs):
+    args = _inputs(1, 64, 16, 4, seed=2)
+    y0, h0 = jax.jit(lambda a: ref.selective_scan_ref(*a, bs=256))(args)
+    y1, h1 = jax.jit(lambda a: ref.selective_scan_ref(*a, bs=bs))(args)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_dtypes(dtype):
-    dt, x, bm, cm, a, h0 = _inputs(1, 32, 8, 4, seed=1)
-    y, hl = selective_scan_pallas(dt.astype(dtype), x.astype(dtype),
-                                  bm.astype(dtype), cm.astype(dtype),
-                                  a, h0, bd=8, bs=8, interpret=True)
-    y_ref, _ = _ref(dt.astype(dtype).astype(jnp.float32),
-                    x.astype(dtype).astype(jnp.float32),
-                    bm.astype(dtype).astype(jnp.float32),
-                    cm.astype(dtype).astype(jnp.float32), a, h0)
-    tol = 1e-5 if dtype == jnp.float32 else 5e-2
-    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
-                               rtol=tol, atol=tol)
+def test_dtypes_bitwise(dtype):
+    """bf16 inputs: both impls cast per-step inside the loop body, so the
+    pair stays bitwise (state/output are f32 in both)."""
+    args = _inputs(1, 32, 8, 4, seed=3, dtype=dtype)
+    yr, hr = jax.jit(lambda a: ref.selective_scan_ref(*a))(args)
+    yk, hk = jax.jit(lambda a: selective_scan_pallas(
+        *a, bb=1, bd=8, bs=32, interpret=True))(args)
+    assert yr.dtype == yk.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(yr), np.asarray(yk))
+    np.testing.assert_array_equal(np.asarray(hr), np.asarray(hk))
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2 ** 31 - 1))
-def test_prop_state_bounded(seed):
-    """With a < 0 and bounded inputs, the state stays bounded (stability)."""
-    dt, x, bm, cm, a, h0 = _inputs(1, 64, 8, 4, seed=seed % 1000)
-    y, hl = selective_scan_pallas(dt, x, bm, cm, a, h0, bd=8, bs=16,
-                                  interpret=True)
-    assert np.isfinite(np.asarray(y)).all()
-    # |h| <= |h0| * prod(decay) + sum |dbx| and decay < 1
-    da_max = float(jnp.max(jnp.exp(dt[..., None] * a)))
-    assert da_max <= 1.0 + 1e-6
-    bound = float(jnp.max(jnp.abs(h0))) + 64 * float(
-        jnp.max(jnp.abs((dt * x)[..., None] * bm[:, :, None, :])))
-    assert float(jnp.max(jnp.abs(hl))) <= bound + 1e-4
+def test_dispatch_counters_record_scan():
+    ops.reset_dispatch_counters()
+    args = _inputs(1, 16, 8, 4, seed=4)
+    for impl in ("jnp", "pallas_interpret"):
+        jax.jit(lambda a, _i=impl: ops.selective_scan(*a, impl=_i))(args)
+    counts = ops.dispatch_counters()
+    assert counts.get("selective_scan/jnp", 0) >= 1, counts
+    assert counts.get("selective_scan/pallas_interpret", 0) >= 1, counts
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1),
+           st.sampled_from([(1, 8), (2, 16), (4, 8)]))
+    def test_prop_nondefault_blocking_bitwise(seed, bd_bs):
+        """Random inputs, non-default blockings: still exactly the oracle."""
+        bd, bs = bd_bs
+        args = _inputs(2, 32, 16, 4, seed=seed % 1000)
+        yr, hr = jax.jit(lambda a: ref.selective_scan_ref(*a))(args)
+        yk, hk = jax.jit(lambda a: selective_scan_pallas(
+            *a, bb=1, bd=bd, bs=bs, interpret=True))(args)
+        np.testing.assert_array_equal(np.asarray(yr), np.asarray(yk))
+        np.testing.assert_array_equal(np.asarray(hr), np.asarray(hk))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_prop_state_bounded(seed):
+        """With a < 0 and bounded inputs, the state stays bounded."""
+        dt, x, bm, cm, a, h0 = _inputs(1, 64, 8, 4, seed=seed % 1000)
+        y, hl = ops.selective_scan(dt, x, bm, cm, a, h0,
+                                   impl="pallas_interpret")
+        assert np.isfinite(np.asarray(y)).all()
+        da_max = float(jnp.max(jnp.exp(dt[..., None] * a)))
+        assert da_max <= 1.0 + 1e-6
+        bound = float(jnp.max(jnp.abs(h0))) + 64 * float(
+            jnp.max(jnp.abs((dt * x)[..., None] * bm[:, :, None, :])))
+        assert float(jnp.max(jnp.abs(hl))) <= bound + 1e-4
+else:
+    def test_prop_hypothesis_missing():
+        pytest.skip("hypothesis not installed (optional [test] extra); "
+                    "property tests skipped")

@@ -113,6 +113,12 @@ def test_fused_kernel_knob_prices_dequant_roundtrip():
                 > fused.step_s(wl.hidden_fraction), scheme
         else:
             assert unfused.kernel_s == 0.0, scheme
+        if cfg.quantize_grads:
+            # the unfused dW path writes the dense f32 grad and re-reads
+            # it to quantize (matmul_quant epilogue removes it): at least
+            # 8 B/param/microbatch of HBM traffic beyond the a2a side
+            assert unfused.kernel_s * topo.hbm_bw \
+                >= wl.n_microbatch * 8.0 * wl.psi, scheme
 
 
 def test_planner_beats_every_preset_on_frontier_20b():
