@@ -94,6 +94,17 @@ GATED = {
         "model", "scheme", "span_census.*", "segments.*", "phases.*",
         "probe_inventory.*", "jsonl_schema.*",
     ],
+    # serving load generator (benchmarks/serve_load.py --quick, the `serve`
+    # CI leg): residency layout, paged-pool geometry, the SLO storm's
+    # admission/rejection/preemption census (pure step-count arithmetic),
+    # the serve JSONL schema and the fused-dispatch proof. The throughput.*
+    # subtree is wall-clock and deliberately NOT listed here — the emitter
+    # itself asserts resident >= gathered before writing
+    "BENCH_serve.json": [
+        "model", "scheme", "n_slots", "prompt_len", "max_len",
+        "residency.*", "pool.*", "slo.*", "storm.*", "dispatch.*",
+        "jsonl_schema.*",
+    ],
 }
 
 

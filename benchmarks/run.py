@@ -12,7 +12,7 @@ import time
 import traceback
 
 BENCHES = ["memory_table", "comm_volume", "scaling_model", "plan_table",
-           "quant_error", "kernel_micro", "convergence"]
+           "quant_error", "kernel_micro", "convergence", "serve_load"]
 PAPER_ARTIFACT = dict(
     memory_table="Tables V/VI + §II max-model-size",
     comm_volume="Tables VII/VIII",
@@ -21,6 +21,8 @@ PAPER_ARTIFACT = dict(
     quant_error="§III-C block-based quantization",
     kernel_micro="kernel-level roofline",
     convergence="Figs 9/10 (loss curves, quantized vs exact)",
+    serve_load="wire-format serving: INT8-resident decode vs fp gather "
+               "under an SLO request storm (DESIGN.md §12)",
 )
 
 

@@ -169,8 +169,18 @@ def classify(analysis: hlo.HLOAnalysis, mesh) -> list[Classified]:
 
 
 def _justify_fp(c: Classified, cfg, int_sibling_elems: dict[str, int],
-                plain_max_elems: int) -> str | None:
-    """Why a floating-point inter-tier collective is allowed, or None."""
+                plain_max_elems: int,
+                serve_axes: tuple[str, ...] = (),
+                serve_act_elems: int = 0) -> str | None:
+    """Why a floating-point inter-tier collective is allowed, or None.
+
+    ``serve_axes`` marks a SERVING module (DESIGN.md §12): the residency
+    axes the decode re-gathers weights over. The INT8 wire re-gather itself
+    classifies int (its f32 scales ride the quant-scales sibling rule); the
+    extra serving classes cover what training never emits — dense-fallback
+    leaf gathers (norms/embeds, bounded by ``plain_max_elems``) and the
+    per-token activation psums of the decode shard_map (bounded by
+    ``serve_act_elems`` = batch x d_model)."""
     if c.fp_elems <= SMALL_ELEMS:
         return "small-metric"
     # block-quant scales riding next to an int payload over the same group
@@ -179,6 +189,14 @@ def _justify_fp(c: Classified, cfg, int_sibling_elems: dict[str, int],
         return "quant-scales"
     spans = set(c.spans)
     axes = cfg.axes
+    if serve_axes and spans <= set(serve_axes):
+        if c.rec.opcode == "all-gather" and c.fp_elems <= plain_max_elems:
+            return "serve-dense-leaf"   # never-quantized leaves stay dense
+        if c.rec.opcode == "all-gather" and not cfg.quantize_weights:
+            return "serve-gather-unquantized"   # the fp-materialized backend
+        if c.rec.opcode in ("all-reduce", "reduce-scatter") \
+                and c.fp_elems <= serve_act_elems:
+            return "serve-activation-psum"  # single-token rows, per layer
     if c.rec.opcode in ("all-reduce", "reduce-scatter") \
             and spans <= set(axes.replica):
         return "cross-replica-sync"     # fp32 by design (paper §V-C)
@@ -201,7 +219,9 @@ def _justify_fp(c: Classified, cfg, int_sibling_elems: dict[str, int],
 
 def check_hlo(text: str, cfg, mesh, *, n_microbatch: int = 1,
               psi: float | None = None, plain_max_elems: int = 0,
-              cost_factor: float = 2.5, label: str = "hlo") -> Report:
+              cost_factor: float = 2.5, label: str = "hlo",
+              serve_axes: tuple[str, ...] = (),
+              serve_act_elems: int = 0) -> Report:
     """Run the Layer-2 contracts on one compiled HLO module.
 
     ``plain_max_elems`` is the largest padded PLAIN (never-quantized) leaf,
@@ -209,6 +229,8 @@ def check_hlo(text: str, cfg, mesh, *, n_microbatch: int = 1,
     rule; ``psi`` (the padded parameter count) enables the cost-model
     crosscheck against ``topo/cost.phase_volumes``, which must agree with
     the measured wire bytes within a factor of ``cost_factor``.
+    ``serve_axes``/``serve_act_elems`` mark a serving module and enable the
+    serving gather/psum classes (see ``_justify_fp``).
     """
     report = Report()
     analysis = hlo.analyze(text)
@@ -229,7 +251,8 @@ def check_hlo(text: str, cfg, mesh, *, n_microbatch: int = 1,
         report.census[key] = report.census.get(key, 0) + round(c.rec.mult)
         if c.tier != "inter" or c.dclass != "fp":
             continue
-        why = _justify_fp(c, cfg, int_sibling, plain_max_elems)
+        why = _justify_fp(c, cfg, int_sibling, plain_max_elems,
+                          serve_axes, serve_act_elems)
         if why is None:
             report.add(
                 "dtype-tier", where,

@@ -313,3 +313,51 @@ def gather_secondary(sec_q, sec_s, axes: AxisTuple, cfg: ZeroConfig,
     """Backward weight all-gather from the INT8 secondary partition (intra tier)."""
     qf, sf = gather_secondary_q(sec_q, sec_s, axes, cfg)
     return gather_wait_int8(qf, sf, cfg, out_dtype)
+
+
+# -- serving residency (DESIGN.md §12) ---------------------------------------
+#
+# The serving weight residency IS the secondary-partition wire format: at
+# server start each leaf is quantized + gathered once (``gather_issue_int8``)
+# and every device keeps only its ``residency_slice``; the decode hot path
+# re-gathers the INT8 payload + scales per layer (``gather_residency_q``)
+# and feeds them straight to the fused dequant-matmul. slice-then-regather
+# is a bitwise identity (tests/_scenarios.py::collectives), which is what
+# makes the resident forward bitwise-equal to the training engine's.
+
+def gather_issue_int8_rows(rows, axes: AxisTuple, cfg: ZeroConfig):
+    """Row-batched ``gather_issue_int8`` for stacked (layers, shard) leaves.
+
+    Every row's shard length is a whole number of quant blocks (the
+    ``os_degree * block`` padding guarantees it), so quantizing the
+    flattened stack produces exactly the per-row blocks — no block straddles
+    a row boundary — and the tiled last-axis gather concatenates shards in
+    axis-index order. Row ``r`` of the result is therefore bitwise
+    ``gather_issue_int8(rows[r], ...)``.
+    """
+    stack, shard = rows.shape
+    q, s = ops.quantize_int8(rows.reshape(-1), cfg.quant_block, impl=cfg.impl)
+    q = q.reshape(stack, shard)
+    s = s.reshape(stack, shard // cfg.quant_block)
+    if axes:
+        q = lax.all_gather(q, tuple(axes), tiled=True, axis=1)
+        s = lax.all_gather(s, tuple(axes), tiled=True, axis=1)
+    return _tag((q, s), role="issue", machine="gather")
+
+
+def residency_slice(qf, sf, axes: AxisTuple, cfg: ZeroConfig):
+    """Slice the serving residency partition out of gathered (q, scales).
+
+    Same block-aligned last-axis slice as ``secondary_slice``; the
+    empty-axes guard makes replicated residency (1-device meshes) a no-op.
+    """
+    if not axes:
+        return qf, sf
+    return secondary_slice(qf, sf, axes, cfg)
+
+
+def gather_residency_q(res_q, res_s, axes: AxisTuple, cfg: ZeroConfig):
+    """Decode-path wire re-gather: residency shards -> full (q, scales)."""
+    if not axes:
+        return _tag((res_q, res_s), role="issue", machine="regather")
+    return gather_secondary_q(res_q, res_s, axes, cfg)

@@ -283,3 +283,17 @@ def prefetch_buffer_bytes(cfg: ZeroConfig, layer_bytes: int) -> int:
 def optimizer_memory_bytes(cfg: ZeroConfig, psi: int) -> int:
     """fp32 master + adam m + v, sharded over all devices (K=12)."""
     return 12 * psi // cfg.os_degree
+
+
+def resident_memory_bytes(cfg: ZeroConfig, psi: int, *,
+                          res_degree: int) -> int:
+    """Per-device bytes of the serving wire residency (DESIGN.md §12).
+
+    INT8 payload + fp32 per-block scales of the quantized leaves, sharded
+    over the residency axes — the secondary partition's footprint applied to
+    serving. One formula for ``serve.resident.ResidentLayout.memory_report``
+    and the serving cost model (``topo.cost.serve_memory_bytes``) so the two
+    can never drift."""
+    deg = max(res_degree, 1)
+    scales = 4 * psi // max(cfg.quant_block, 1)
+    return (psi + scales) // deg

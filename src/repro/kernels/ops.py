@@ -297,6 +297,7 @@ def dequant_matmul(x2, q_flat, scales, w_shape: tuple[int, int],
     fusion-isolation note at the top of this module for why that matters).
     """
     impl = impl or _DEFAULT_IMPL
+    record_dispatch("dequant_matmul", impl)
     k, n = w_shape
     assert n % block == 0, (w_shape, block)
     q2 = q_flat.reshape(-1)[: k * n].reshape(k, n)

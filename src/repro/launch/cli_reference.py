@@ -24,6 +24,7 @@ from pathlib import Path
 TOOLS = (
     "repro.launch.train",
     "repro.launch.dryrun",
+    "repro.launch.serve",
     "repro.topo.planner",
     "repro.analysis.check",
     "repro.obs.calibrate",

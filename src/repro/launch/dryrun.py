@@ -138,6 +138,53 @@ def compare_phases(eng, arch, shape, mesh, metrics_path, topology: str = ""):
     return rows, "\n".join(lines)
 
 
+def compare_serve_phases(eng, arch, shape, mesh, metrics_path,
+                         topology: str = "", resident: bool = True):
+    """Predicted-vs-measured for one serving decode step (DESIGN.md §12).
+
+    Predicted: ``topo.cost.serve_step_cost`` for this combo's residency
+    layout on ``--topology`` (overlay semantics as ``compare_phases``).
+    Measured: the last serve ``phase_ms`` record from a continuous-batching
+    run's ``--metrics-jsonl`` stream (repro.launch.serve) — the scheduler's
+    ``serve_decode`` span is the decode step, ``serve_admit`` the admission
+    work; the per-layer comm phases are predicted-only (they live inside
+    the compiled step and are not separately spanned)."""
+    from ..obs import metrics as obs_metrics
+    from ..topo import cost as tcost
+    from ..topo.model import Topology, calibrated, load_topology
+    from ..topo.planner import serve_workload_for_model
+    topo = Topology.from_mesh(mesh)
+    if topology:
+        src = load_topology(topology)
+        known = {l.name: l.bandwidth for l in src.links}
+        topo = calibrated(
+            topo, {l.name: known[l.name] for l in topo.links
+                   if l.name in known},
+            name=f"{topo.name}<-{src.name}")
+    wl = serve_workload_for_model(
+        arch.name, n_slots=shape.global_batch, context=shape.seq_len,
+        max_len=shape.seq_len, quant_block=eng.cfg.quant_block)
+    res_axes = tuple(eng.cfg.axes.secondary or ())
+    pred = tcost.serve_step_cost(topo, wl, res_axes, resident=resident)
+    measured = obs_metrics.last_phase_ms(
+        obs_metrics.read_lanes(metrics_path))
+    rows = {}
+    lines = [f"{'phase':<16}{'predicted_ms':>14}{'measured_ms':>14}"]
+    preds = dict(pred.comm_s)
+    preds["serve_decode"] = pred.step_s()
+    preds["serve_admit"] = None
+    for ph in tcost.SERVE_PHASES + ("serve_decode", "serve_admit"):
+        p = preds[ph]
+        m = measured.get(ph)
+        rows[ph] = dict(
+            predicted_ms=None if p is None else p * 1e3, measured_ms=m)
+        lines.append(
+            f"{ph:<16}" +
+            (f"{p * 1e3:>14.3f}" if p is not None else f"{'--':>14}") +
+            (f"{m:>14.2f}" if m is not None else f"{'--':>14}"))
+    return rows, "\n".join(lines)
+
+
 def run_combo(arch_name, shape_name, mesh_name, scheme, outdir: Path,
               quant_block: int = 2048, save_hlo: bool = False,
               serve_mode: str = "zero", engine_opts: dict | None = None,
@@ -184,6 +231,12 @@ def run_combo(arch_name, shape_name, mesh_name, scheme, outdir: Path,
     if compare and shape.kind == "train":
         rows, table = compare_phases(eng, arch, shape, mesh, compare,
                                      topology)
+        rec["phase_compare"] = rows
+        print(table, flush=True)
+    elif compare and shape.kind == "decode":
+        rows, table = compare_serve_phases(
+            eng, arch, shape, mesh, compare, topology,
+            resident="resident" in serve_mode)
         rec["phase_compare"] = rows
         print(table, flush=True)
     outdir.mkdir(parents=True, exist_ok=True)
@@ -233,7 +286,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--compare", default="",
                     help="metrics JSONL from a traced run (--metrics-jsonl): "
                          "print a predicted-vs-measured per-phase column for "
-                         "each train combo (DESIGN.md §10)")
+                         "each train combo (DESIGN.md §10); serve JSONL from "
+                         "repro.launch.serve does the same for decode "
+                         "combos (DESIGN.md §12)")
     ap.add_argument("--topology", default="",
                     help="topology preset or JSON (e.g. obs.calibrate "
                          "output) pricing --compare's predicted column; "

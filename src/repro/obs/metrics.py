@@ -21,6 +21,21 @@ REQUIRED_FIELDS = (
     "memory_hw_bytes", "memory_pred_bytes",
 )
 
+# serving runs (serve/scheduler.py) write the same JSONL transport with a
+# serving schema: throughput + queue/SLO state per scheduler step. Readers
+# auto-detect by the presence of "loss" (train) vs "queue_depth" (serve);
+# the CI serve leg gates this field list in BENCH_serve.json
+SERVE_REQUIRED_FIELDS = (
+    "step", "rank", "tokens", "dt_s", "tokens_per_s",
+    "queue_depth", "active_slots",
+    "admitted", "rejected", "preempted", "retired", "free_pages",
+    "p50_ms", "p99_ms", "phase_ms",
+)
+
+
+def _fields_for(rec: dict) -> tuple[str, ...]:
+    return REQUIRED_FIELDS if "loss" in rec else SERVE_REQUIRED_FIELDS
+
 
 def model_flops_per_token(param_count: int) -> float:
     """Dense-transformer step FLOPs per token: 6·N (fwd 2·N + bwd 4·N) —
@@ -48,10 +63,16 @@ def lane_path(path, rank: int, n_ranks: int) -> Path:
 
 
 class MetricsWriter:
-    """Append-mode JSONL writer; one instance per process/lane."""
+    """Append-mode JSONL writer; one instance per process/lane.
 
-    def __init__(self, path, rank: int = 0, n_ranks: int = 1):
+    ``fields`` selects the schema contract each record must satisfy:
+    ``REQUIRED_FIELDS`` (train, the default) or ``SERVE_REQUIRED_FIELDS``
+    (the continuous batcher's per-step stream)."""
+
+    def __init__(self, path, rank: int = 0, n_ranks: int = 1,
+                 fields: tuple[str, ...] = REQUIRED_FIELDS):
         self.rank = rank
+        self.fields = fields
         self.path = lane_path(path, rank, n_ranks)
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._fh = open(self.path, "w")
@@ -59,7 +80,7 @@ class MetricsWriter:
     def write(self, record: dict) -> dict:
         rec = dict(record)
         rec.setdefault("rank", self.rank)
-        missing = [k for k in REQUIRED_FIELDS if k not in rec]
+        missing = [k for k in self.fields if k not in rec]
         if missing:
             raise ValueError(f"metrics record missing fields: {missing}")
         self._fh.write(json.dumps(rec, sort_keys=True) + "\n")
@@ -70,29 +91,33 @@ class MetricsWriter:
         self._fh.close()
 
 
-def read_jsonl(path) -> list[dict]:
-    """Read one metrics lane, validating the schema per line."""
+def read_jsonl(path, fields: tuple[str, ...] | None = None) -> list[dict]:
+    """Read one metrics lane, validating the schema per line.
+
+    ``fields=None`` auto-detects train vs serve records per line, so mixed
+    tooling (``dryrun --compare``, the calibration loop) reads both."""
     records = []
     for line in Path(path).read_text().splitlines():
         if not line.strip():
             continue
         rec = json.loads(line)
-        missing = [k for k in REQUIRED_FIELDS if k not in rec]
+        want = fields if fields is not None else _fields_for(rec)
+        missing = [k for k in want if k not in rec]
         if missing:
             raise ValueError(f"{path}: record missing fields: {missing}")
         records.append(rec)
     return records
 
 
-def read_lanes(path) -> list[dict]:
+def read_lanes(path, fields: tuple[str, ...] | None = None) -> list[dict]:
     """Read a metrics stem plus any ``.rank<k>`` lanes, merged and sorted
     by (step, rank)."""
     p = Path(path)
     records = []
     if p.exists():
-        records += read_jsonl(p)
+        records += read_jsonl(p, fields)
     for lane in sorted(p.parent.glob(f"{p.stem}.rank*{p.suffix}")):
-        records += read_jsonl(lane)
+        records += read_jsonl(lane, fields)
     return sorted(records, key=lambda r: (r["step"], r["rank"]))
 
 
@@ -114,6 +139,28 @@ def aggregates(records: list[dict]) -> dict:
         dt_s_mean=mean(post, "dt_s"),
         tokens_per_s_mean=mean(post, "tokens_per_s"),
         tflops_per_gpu_mean=mean(post, "tflops_per_gpu"),
+    )
+
+
+def serve_aggregates(records: list[dict]) -> dict:
+    """Run-level serving summary from a serve-schema lane: totals from the
+    final record's monotone counters, rates excluding the compile step
+    (first record), latency percentiles from the last record that saw a
+    completion."""
+    if not records:
+        return {}
+    last = records[-1]
+    post = records[1:] or records
+    tok = sum(r["tokens"] for r in post)
+    dt = sum(r["dt_s"] for r in post)
+    return dict(
+        n_steps=len(records),
+        tokens=sum(r["tokens"] for r in records),
+        tokens_per_s=(tok / dt if dt > 0 else 0.0),
+        admitted=last["admitted"], rejected=last["rejected"],
+        preempted=last["preempted"], retired=last["retired"],
+        queue_depth_max=max(r["queue_depth"] for r in records),
+        p50_ms=last["p50_ms"], p99_ms=last["p99_ms"],
     )
 
 

@@ -1,0 +1,232 @@
+"""Paged KV cache: fixed-size pages, slot -> page table, no reallocation.
+
+The seed ``ContinuousBatcher`` kept one dense ``(L, B, max_len, ...)`` cache
+per sequence-indexed entry and spliced every admitted request in with a
+host-side per-leaf loop (``_grow_seq`` + ``_splice``). This module replaces
+that with the vLLM-style layout at miniature scale:
+
+* Sequence-indexed cache entries (full-attention k/v, MLA latents) live in a
+  **page pool** ``(L, n_pages + 1, page_size, *tail)``; a slot owns pages
+  through a host-side page table ``(n_slots, blocks_per_slot)`` and pages
+  are allocated lazily as positions advance, so provisioning
+  ``n_pages < n_slots * blocks_per_slot`` oversubscribes KV memory the way
+  real serving does (the batcher preempts when the free list runs dry).
+  Page index ``n_pages`` is a write sink: inactive slots and unallocated
+  table entries point at it, and nothing ever reads it un-masked —
+  flash-decode masks ``kpos <= pos`` per row, so garbage beyond a row's
+  position is arithmetic-neutral (exp(-inf) == 0 exactly).
+
+* O(1)-per-slot entries (sliding-window rings, SSM states, cross k/v) stay
+  dense ``(L, n_slots, ...)`` — paging them buys nothing.
+
+* Admission is a **single jitted, donated scatter**: the B=1 prefill cache
+  is reshaped into whole pages and written to the slot's pages + per-slot
+  rows in one compiled call (no per-leaf host round-trip).
+
+The dense decode view is assembled per step by one gather
+(``pool.take(table)``) and the decode step's single written position is
+scattered back, both inside the same jit as the decode shard_map — the
+decode math itself is unchanged, which is why paged serving stays bitwise
+with the dense engines (tests/test_paged.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ShapeConfig
+
+
+def seq_entry_keys(model, shape: ShapeConfig) -> set[tuple[str, str]]:
+    """(kind, name) pairs whose caches are sequence-indexed (pageable)."""
+    shapes = model.cache_shapes(shape)
+    return {(kind, name)
+            for kind, entry in shapes.items()
+            for name, (_, _, seq_shard) in entry.items() if seq_shard}
+
+
+@dataclass
+class PagedKV:
+    """Page-pool layout + host-side page table for one decode shape.
+
+    ``shape`` is the decode ShapeConfig: ``global_batch`` = n_slots,
+    ``seq_len`` = max_len. The device-side state is a pytree shaped like the
+    dense cache dict except that pageable entries are page pools; the page
+    table and free list live on the host (numpy) and are re-uploaded per
+    step (n_slots * blocks_per_slot int32 — trivia next to the pool).
+    """
+    model: object
+    shape: ShapeConfig
+    page_size: int
+    n_pages: int = 0          # 0 = fully provisioned (no oversubscription)
+    seq_keys: set = field(init=False)
+    blocks_per_slot: int = field(init=False)
+    table: np.ndarray = field(init=False)
+    free: list = field(init=False)
+    owner: np.ndarray = field(init=False)   # page -> slot (-1 free)
+
+    def __post_init__(self):
+        n_slots, max_len = self.shape.global_batch, self.shape.seq_len
+        assert max_len % self.page_size == 0, (max_len, self.page_size)
+        self.blocks_per_slot = max_len // self.page_size
+        if not self.n_pages:
+            self.n_pages = n_slots * self.blocks_per_slot
+        self.seq_keys = seq_entry_keys(self.model, self.shape)
+        self.table = np.full((n_slots, self.blocks_per_slot), -1, np.int32)
+        self.free = list(range(self.n_pages))
+        self.owner = np.full((self.n_pages,), -1, np.int32)
+
+    # -- host-side page accounting ------------------------------------------
+
+    def pages_needed(self, length: int) -> int:
+        return -(-length // self.page_size)
+
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def alloc(self, slot: int, block: int) -> bool:
+        """Allocate page for ``table[slot, block]``; False if none free."""
+        if self.table[slot, block] >= 0:
+            return True
+        if not self.free:
+            return False
+        page = self.free.pop(0)
+        self.table[slot, block] = page
+        self.owner[page] = slot
+        return True
+
+    def alloc_prefix(self, slot: int, length: int) -> bool:
+        """Allocate the first ``pages_needed(length)`` pages of a slot."""
+        need = self.pages_needed(length)
+        if len([b for b in range(need) if self.table[slot, b] < 0]) \
+                > len(self.free):
+            return False
+        return all(self.alloc(slot, b) for b in range(need))
+
+    def release(self, slot: int):
+        """Return a finished/preempted slot's pages to the free list."""
+        for b in range(self.blocks_per_slot):
+            page = self.table[slot, b]
+            if page >= 0:
+                self.owner[page] = -1
+                self.free.append(int(page))
+                self.table[slot, b] = -1
+
+    def device_table(self) -> jnp.ndarray:
+        """Page table with unallocated entries redirected to the sink."""
+        return jnp.asarray(np.where(self.table < 0, self.n_pages,
+                                    self.table).astype(np.int32))
+
+    # -- device-side layout --------------------------------------------------
+
+    def _pool_sds(self, dense_sds):
+        """Dense cache ShapeDtypeStructs -> pool-state ShapeDtypeStructs."""
+        out = {}
+        for kind, entry in dense_sds.items():
+            if kind == "pos":
+                out[kind] = entry
+                continue
+            out[kind] = {}
+            for name, s in entry.items():
+                if (kind, name) in self.seq_keys:
+                    tail = s.shape[3:]
+                    out[kind][name] = jax.ShapeDtypeStruct(
+                        (s.shape[0], self.n_pages + 1, self.page_size)
+                        + tail, s.dtype)
+                else:
+                    out[kind][name] = jax.ShapeDtypeStruct(s.shape, s.dtype)
+        return out
+
+    def init_pool(self, dense_sds):
+        """Zero-initialized pool state matching the dense cache sds tree."""
+        sds = self._pool_sds(dense_sds)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+    def assemble(self, pool, table):
+        """Pool state -> dense decode view: one gather per pageable entry.
+
+        ``table`` (n_slots, blocks_per_slot) int32 with sink redirection
+        (``device_table``); the dense view's row r is its pages in order,
+        i.e. exactly the seed contiguous layout for every written position.
+        """
+        out = {}
+        for kind, entry in pool.items():
+            if kind == "pos":
+                out[kind] = entry
+                continue
+            out[kind] = {}
+            for name, v in entry.items():
+                if (kind, name) in self.seq_keys:
+                    d = jnp.take(v, table, axis=1)
+                    # (L, B, blocks, page, *tail) -> (L, B, S, *tail)
+                    out[kind][name] = d.reshape(
+                        d.shape[:2] + (d.shape[2] * d.shape[3],)
+                        + d.shape[4:])
+                else:
+                    out[kind][name] = v
+        return out
+
+    def writeback(self, pool, dense_new, table, row_pos, active):
+        """Scatter the decode step's written position back into the pool.
+
+        Each active row wrote exactly one new position (``row_pos``); its
+        page-local address is ``(table[r, pos // page], pos % page)``.
+        Inactive rows are redirected to the sink page. Non-pageable entries
+        were updated in place by the decode and replace the pool's copy.
+        """
+        b = row_pos.shape[0]
+        page_i = jnp.where(active,
+                           table[jnp.arange(b), row_pos // self.page_size],
+                           self.n_pages)
+        off = row_pos % self.page_size
+        out = {}
+        for kind, entry in dense_new.items():
+            if kind == "pos":
+                out[kind] = entry
+                continue
+            out[kind] = {}
+            for name, d in entry.items():
+                if (kind, name) in self.seq_keys:
+                    idx = row_pos.reshape((1, -1) + (1,) * (d.ndim - 2))
+                    row = jnp.take_along_axis(d, idx, axis=2)[:, :, 0]
+                    out[kind][name] = \
+                        pool[kind][name].at[:, page_i, off].set(row)
+                else:
+                    out[kind][name] = d
+        return out
+
+    def admit_scatter(self, pool, c1, slot, slot_pages):
+        """One donated scatter: B=1 prefill cache -> slot's pages + rows.
+
+        ``slot_pages`` (pages_needed(prompt_len),) int32 — the slot's
+        allocated prompt pages; pageable entries are cut into whole pages
+        (zero-padded to a page boundary) and written with one scatter each,
+        per-slot entries take the prefill row at batch index ``slot``.
+        """
+        n_pp = slot_pages.shape[0]
+        out = {}
+        for kind, entry in pool.items():
+            if kind == "pos":
+                out[kind] = jnp.maximum(entry, c1["pos"])
+                continue
+            out[kind] = {}
+            for name, dst in entry.items():
+                src = c1[kind][name].astype(dst.dtype)
+                if (kind, name) in self.seq_keys:
+                    row = src[:, 0]                       # (L, P, *tail)
+                    pad = n_pp * self.page_size - row.shape[1]
+                    if pad:
+                        width = [(0, 0)] * row.ndim
+                        width[1] = (0, pad)
+                        row = jnp.pad(row, width)
+                    row = row.reshape((row.shape[0], n_pp, self.page_size)
+                                      + row.shape[2:])
+                    out[kind][name] = dst.at[:, slot_pages].set(row)
+                else:
+                    r = jax.lax.dynamic_slice_in_dim(src, 0, 1, axis=1)
+                    out[kind][name] = jax.lax.dynamic_update_slice_in_dim(
+                        dst, r, slot, axis=1)
+        return out

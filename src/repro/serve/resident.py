@@ -1,26 +1,38 @@
-"""Resident tensor-parallel serving (beyond-paper optimization; EXPERIMENTS.md
-§Perf pair 2).
+"""Quantized-resident serving: the INT8 wire format as the weight residency.
 
-The paper-faithful serving path reuses ZeRO's per-layer weight all-gather —
-every decoded token re-gathers the full parameter set over the model axes.
-For jamba-52B decode_32k that is ~1 GB of collective traffic **per token**
-(the most collective-bound pair in the baseline roofline).
+The paper-faithful serving path (``ServeEngine``) reuses ZeRO's per-layer
+weight all-gather: every decoded token re-quantizes the primary shards and
+re-gathers the full parameter set over the weight axes. This module removes
+both per-token costs without leaving the wire format:
 
-The fix is the classic inference trade: make weights *resident* and move the
-collectives onto activations. Each matmul leaf is column-sharded over the TP
-axes and its output all-gathered (embedding rows are row-sharded with a psum;
-MoE experts use the Megatron pairing: gate/up column-sharded, down
-row-sharded, one psum per expert block). Per-token traffic drops from
-O(params) to O(activations) — a ~1000x cut at jamba scale — for a resident
-memory cost of 2*psi/|TP| bytes per device (jamba: 6.5 GB/chip, fits v5e).
+* **Residency = the secondary partition.** At server start, one jitted
+  shard_map quantizes + gathers each MATMUL/GATHER_Q leaf exactly the way
+  the training forward does (``col.gather_issue_int8`` under the per-leaf
+  config) and keeps only this device's ``col.residency_slice`` — by default
+  over ``cfg.axes.secondary``, i.e. the resident shards ARE the training
+  engine's secondary partition. No fp re-materialization: the build reads
+  ``state["primaries"]`` and never touches the fp32 master.
 
-``build_resident`` reshapes the ZeRO primary shards into the resident layout
-once at server start (one-time cost, amortized over the serving lifetime).
+* **Decode consumes the wire format.** ``ResidentView.mm`` re-gathers the
+  INT8 payload + scales per layer (``col.gather_residency_q``) and routes
+  them through the same fused ``dequant_matmul_flat`` path as training
+  (``linear._mm_apply_q``, ``ops`` dispatch: jnp | pallas |
+  pallas_interpret). slice-then-regather is a bitwise identity and the
+  matmul epilogues are shared code, so prefill logits and greedy decode
+  tokens are bitwise identical to the training engine's forward at matching
+  quant config (tests/_scenarios.py::serve_resident_quant_equivalence).
+
+Per-token wire traffic drops from ``quantize + all-gather(psi)`` over the
+weight axes to ``all-gather(psi/|R|)`` of pre-quantized shards over the
+residency axes, for a resident cost of ``psi/|R| + 4*psi/(block*|R|)`` bytes
+per device (``partition.resident_memory_bytes``). Leaves outside the wire
+format (PLAIN leaves; every leaf when the scheme doesn't quantize weights)
+are materialized once through the same gather code path as training and kept
+dense + replicated, so equivalence holds config-by-config.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any
 
 import jax
@@ -30,183 +42,195 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..core import collectives as col
+from ..core import linear
 from ..core.engine import ParamView, ZeroEngine
-from ..core.partition import GATHER_Q, MATMUL, LeafSpec
+from ..core.partition import GATHER_Q, MATMUL, resident_memory_bytes
 from ..models.config import ShapeConfig
-from ..models.registry import ModelDef, batch_axes, data_axes, model_axes
+from ..models.registry import ModelDef, model_axes
 from .engine import ServeConfig, make_serve_config
 
+WIRE = "wire"     # INT8 payload + per-block scales, sharded over res axes
+DENSE = "dense"   # compute-dtype dense tensor, replicated
 
-def _pad_to(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
 
-
-def _policy(name: str, spec: LeafSpec) -> str:
-    """How each leaf is laid out in resident form."""
-    if name == "embed":
-        return "row"                       # (V, d): shard V; lookup via psum
-    if spec.kind == MATMUL and name.endswith("lm_head"):
-        return "row"
-    if spec.kind == GATHER_Q and len(spec.shape) == 3 \
-            and name.split(".")[-1] in ("w_gate", "w_up"):
-        return "expert_col"                # (E, d, ff): shard ff
-    if spec.kind == GATHER_Q and len(spec.shape) == 3 \
-            and name.split(".")[-1] == "w_down":
-        return "expert_row"                # (E, ff, d): shard ff (contraction)
-    if spec.kind == MATMUL:
-        return "col"                       # (in.., out): shard out
-    return "replicated"                    # norms, biases, scan params
+def default_res_axes(cfg, mesh: Mesh) -> tuple[str, ...]:
+    """Residency axes: the training secondary partition when the scheme has
+    one, else the mesh's model tier (intra-node bandwidth for the per-token
+    re-gather)."""
+    if cfg.axes.secondary:
+        return tuple(cfg.axes.secondary)
+    return tuple(model_axes(mesh))
 
 
 @dataclass
 class ResidentLayout:
+    """Shapes/specs of the wire-format residency for one engine + axes."""
     engine: ZeroEngine
-    tp_axes: tuple[str, ...]
-    tp: int
+    res_axes: tuple[str, ...]
+    res_degree: int = field(init=False)
 
-    def leaf_shape(self, name: str) -> tuple[tuple[int, ...], str]:
-        """(global resident shape, policy); sharded dim padded to tp."""
+    def __post_init__(self):
+        self.res_axes = tuple(self.res_axes)
+        self.res_degree = self.engine.cfg.size(self.res_axes)
+
+    def mode(self, name: str) -> str:
         spec = self.engine.specs[name]
-        pol = _policy(name, spec)
-        shape = list(spec.shape)
-        if pol in ("col", "expert_col"):
-            shape[-1] = _pad_to(shape[-1], self.tp)
-        elif pol == "row":
-            shape[0] = _pad_to(shape[0], self.tp)
-        elif pol == "expert_row":
-            shape[1] = _pad_to(shape[1], self.tp)
-        if spec.stack:
-            shape = [spec.stack] + shape
-        return tuple(shape), pol
+        lcfg = self.engine.leaf_cfg[name]
+        if spec.kind in (MATMUL, GATHER_Q) and lcfg.quantize_weights:
+            return WIRE
+        return DENSE
 
-    def pspec(self, name: str) -> P:
+    def wire_lens(self, name: str) -> tuple[int, int]:
+        """Per-device (q, scales) residency lengths for a WIRE leaf."""
+        pad = self.engine._pad[name]
+        lcfg = self.engine.leaf_cfg[name]
+        return (pad // self.res_degree,
+                pad // lcfg.quant_block // self.res_degree)
+
+    def pspec(self, name: str):
         spec = self.engine.specs[name]
-        shape, pol = self.leaf_shape(name)
-        dims = [None] * len(shape)
-        off = 1 if spec.stack else 0
-        if pol in ("col", "expert_col"):
-            dims[-1] = self.tp_axes
-        elif pol == "row":
-            dims[off] = self.tp_axes
-        elif pol == "expert_row":
-            dims[off + 1] = self.tp_axes
-        return P(*dims)
-
-    def abstract(self, mesh: Mesh, dtype=jnp.bfloat16):
-        out = {}
-        for name in self.engine.specs:
-            shape, pol = self.leaf_shape(name)
-            dt = jnp.float32 if pol == "replicated" else dtype
-            out[name] = jax.ShapeDtypeStruct(
-                shape, dt, sharding=NamedSharding(mesh, self.pspec(name)))
-        return out
+        if self.mode(name) == WIRE:
+            ax = self.res_axes if self.res_axes else None
+            p = P(None, ax) if spec.stack else P(ax)
+            return {"q": p, "s": p}
+        return P()
 
     def in_specs(self):
         return {n: self.pspec(n) for n in self.engine.specs}
 
-
-def build_resident(engine: ZeroEngine, state, mesh: Mesh,
-                   tp_axes: tuple[str, ...], dtype=jnp.bfloat16):
-    """One-time reshape: ZeRO master shards -> resident TP layout."""
-    tp = math.prod(mesh.shape[a] for a in tp_axes)
-    layout = ResidentLayout(engine, tp_axes, tp)
-
-    def convert():
+    def abstract(self, mesh: Mesh):
+        """ShapeDtypeStructs (global shapes + shardings) of the residency."""
         out = {}
-        for name, spec in engine.specs.items():
-            flat = state["master"][name]
-            n = spec.logical_size
-            if spec.stack:
-                dense = flat[:, :n].reshape((spec.stack,) + spec.shape)
+        cdt = linear._dtype(self.engine.cfg)
+        for name, spec in self.engine.specs.items():
+            if self.mode(name) == WIRE:
+                qlen, slen = self.wire_lens(name)
+                qlen *= self.res_degree
+                slen *= self.res_degree
+                qshape = (spec.stack, qlen) if spec.stack else (qlen,)
+                sshape = (spec.stack, slen) if spec.stack else (slen,)
+                sh = NamedSharding(mesh, self.pspec(name)["q"])
+                out[name] = {
+                    "q": jax.ShapeDtypeStruct(qshape, jnp.int8, sharding=sh),
+                    "s": jax.ShapeDtypeStruct(sshape, jnp.float32,
+                                              sharding=sh)}
             else:
-                dense = flat[:n].reshape(spec.shape)
-            shape, pol = layout.leaf_shape(name)
-            pad = [(0, t - s) for t, s in zip(shape, dense.shape)]
-            dense = jnp.pad(dense, pad)
-            dt = jnp.float32 if pol == "replicated" else dtype
-            out[name] = dense.astype(dt)
+                shape = ((spec.stack,) + spec.shape) if spec.stack \
+                    else spec.shape
+                out[name] = jax.ShapeDtypeStruct(
+                    shape, cdt, sharding=NamedSharding(mesh, P()))
         return out
 
-    sh = {n: NamedSharding(mesh, layout.pspec(n)) for n in engine.specs}
-    return layout, jax.jit(convert, out_shardings=sh)()
+    def memory_report(self) -> dict[str, Any]:
+        """Per-device resident bytes, wire vs dense, plus the formula view."""
+        cdt = linear._dtype(self.engine.cfg)
+        wire = dense = 0
+        for name, spec in self.engine.specs.items():
+            reps = spec.stack or 1
+            if self.mode(name) == WIRE:
+                qlen, slen = self.wire_lens(name)
+                wire += reps * (qlen + 4 * slen)
+            else:
+                dense += reps * spec.logical_size * cdt.itemsize
+        psi = sum(s.logical_size * (s.stack or 1)
+                  for n, s in self.engine.specs.items()
+                  if self.mode(n) == WIRE)
+        return dict(
+            res_axes=list(self.res_axes), res_degree=self.res_degree,
+            wire_bytes=int(wire), dense_bytes=int(dense),
+            total_bytes=int(wire + dense),
+            formula_bytes=int(resident_memory_bytes(
+                self.engine.cfg, psi, res_degree=self.res_degree)))
+
+
+def build_resident(engine: ZeroEngine, state, mesh: Mesh,
+                   res_axes: tuple[str, ...] | None = None):
+    """One jitted shard_map: training primary shards -> wire residency.
+
+    Reads ``state["primaries"]`` only (never the fp32 master): each WIRE
+    leaf runs the training forward's own quantize + weight-axes gather and
+    keeps this device's residency slice; DENSE leaves run the training
+    gather and stay replicated in compute dtype. Returns (layout, residency).
+    """
+    cfg = engine.cfg
+    if res_axes is None:
+        res_axes = default_res_axes(cfg, mesh)
+    layout = ResidentLayout(engine, tuple(res_axes))
+    prim_specs = engine.state_in_specs()["primaries"]
+
+    def convert(primaries):
+        out = {}
+        for name, spec in engine.specs.items():
+            lcfg = engine.leaf_cfg[name]
+            prim = primaries[name]
+            if layout.mode(name) == WIRE:
+                if spec.stack:
+                    qf, sf = col.gather_issue_int8_rows(
+                        prim, cfg.axes.weight, lcfg)
+                else:
+                    qf, sf = col.gather_issue_int8(prim, cfg.axes.weight,
+                                                   lcfg)
+                q, s = col.residency_slice(qf, sf, layout.res_axes, lcfg)
+                out[name] = {"q": q, "s": s}
+            else:
+                full = col.all_gather_flat(prim, cfg.axes.weight)
+                n = spec.logical_size
+                if spec.stack:
+                    dense = full[:, :n].reshape((spec.stack,) + spec.shape)
+                else:
+                    dense = full[:n].reshape(spec.shape)
+                out[name] = dense.astype(linear._dtype(lcfg))
+        return out
+
+    sm = shard_map(convert, mesh=mesh, in_specs=(prim_specs,),
+                   out_specs=layout.in_specs(), check_vma=False)
+    return layout, jax.jit(sm)(state["primaries"])
 
 
 class ResidentView(ParamView):
-    """ParamView over resident TP shards (runs inside shard_map)."""
+    """ParamView over the wire-format residency (runs inside shard_map).
+
+    ``mm`` on a fusable leaf re-gathers (q, scales) over the residency axes
+    and calls the shared ``linear._mm_apply_q`` — the same fused
+    dequant-matmul epilogue as the training forward, so serving math cannot
+    drift from training math. Non-fusable / dense leaves mirror the
+    training ``_gather_full`` + ``_mm_apply`` pair op for op.
+    ``embed_lookup`` / ``expert_ffn`` inherit the ParamView defaults on top
+    of ``get``, which keeps them bitwise too.
+    """
 
     def __init__(self, layout: ResidentLayout, params: dict[str, Any]):
         self._layout = layout
         self._p = params
-        self._tp_axes = layout.tp_axes
+
+    def _wire(self, name: str):
+        entry = self._p[name]
+        lcfg = self._layout.engine.leaf_cfg[name]
+        return col.gather_residency_q(entry["q"], entry["s"],
+                                      self._layout.res_axes, lcfg)
 
     def mm(self, name: str, x, transpose: bool = False):
-        spec = self._layout.engine.specs[name]
-        w = self._p[name]
-        pol = _policy(name, spec)
-        n_out = spec.shape[0] if transpose else spec.shape[-1]
-        if pol == "replicated":
-            w2 = w.reshape(-1, w.shape[-1])
-            return jnp.matmul(x, w2.T if transpose else w2)
-        if pol == "col":
-            assert not transpose
-            w2 = w.reshape(-1, w.shape[-1])          # (in, out_pad/tp) local
-            y = jnp.matmul(x.astype(w2.dtype), w2).astype(x.dtype)
-            y = lax.all_gather(y, self._tp_axes, axis=y.ndim - 1, tiled=True)
-            return y[..., :n_out]
-        if pol == "row":
-            # (V_pad/tp, d) local rows
-            assert transpose, f"{name}: row-resident leaves serve the head"
-            y = jnp.matmul(x.astype(w.dtype), w.T).astype(x.dtype)
-            y = lax.all_gather(y, self._tp_axes, axis=y.ndim - 1, tiled=True)
-            return y[..., :n_out]
-        raise ValueError((name, pol))
+        eng = self._layout.engine
+        spec = eng.specs[name]
+        lcfg = eng.leaf_cfg[name]
+        if self._layout.mode(name) == WIRE:
+            qf, sf = self._wire(name)
+            if linear._fusable(spec, lcfg):
+                return linear._mm_apply_q(x, qf, sf, transpose, spec, lcfg)
+            full = col.gather_wait_int8(qf, sf, lcfg, linear._dtype(lcfg))
+            w = lax.slice(full, (0,), (spec.logical_size,)).reshape(spec.shape)
+            return linear._mm_apply(x, w, transpose, lcfg)
+        return linear._mm_apply(x, self._p[name], transpose, lcfg)
 
     def get(self, name: str):
-        """Materialize a dense leaf. Sharded leaves are gathered — intended
-        for small tensors only (MLA up-projections, norms); the big paths go
-        through mm/embed_lookup/expert_ffn and never materialize."""
-        spec = self._layout.engine.specs[name]
-        pol = _policy(name, spec)
-        w = self._p[name]
-        if pol == "replicated":
-            return w.reshape(-1)[: spec.logical_size].reshape(spec.shape)
-        if pol in ("col", "expert_col"):
-            full = lax.all_gather(w, self._tp_axes, axis=w.ndim - 1,
-                                  tiled=True)
-            sl = [slice(None)] * full.ndim
-            sl[-1] = slice(0, spec.shape[-1])
-            return full[tuple(sl)]
-        if pol == "row":
-            full = lax.all_gather(w, self._tp_axes, axis=0, tiled=True)
-            return full[: spec.shape[0]]
-        full = lax.all_gather(w, self._tp_axes, axis=1, tiled=True)
-        return full[:, : spec.shape[1]]
-
-    def embed_lookup(self, name: str, ids):
-        """Row-sharded lookup: mask out-of-range rows, psum over TP."""
-        w = self._p[name]                           # (V_pad/tp, d)
-        rows = w.shape[0]
-        idx = lax.axis_index(self._tp_axes)
-        local = ids - idx * rows
-        inb = (local >= 0) & (local < rows)
-        safe = jnp.clip(local, 0, rows - 1)
-        emb = jnp.take(w, safe, axis=0)
-        emb = jnp.where(inb[..., None], emb, 0)
-        return col.activation_psum(emb, self._tp_axes, out_dtype=w.dtype)
-
-    def expert_ffn(self, prefix: str, e_in):
-        """Megatron pairing: gate/up column-sharded (ff), down row-sharded."""
-        wg = self._p_leaf(prefix + "w_gate")        # (E, d, ff_pad/tp)
-        wu = self._p_leaf(prefix + "w_up")
-        wd = self._p_leaf(prefix + "w_down")        # (E, ff_pad/tp, d)
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", e_in, wg)) \
-            * jnp.einsum("ecd,edf->ecf", e_in, wu)
-        # local ff slice contracts against the matching w_down rows; the
-        # ff padding rows of w_down are zero so they contribute nothing
-        out = jnp.einsum("ecf,efd->ecd", h, wd)
-        return col.activation_psum(out, self._tp_axes)
-
-    def _p_leaf(self, name):
+        eng = self._layout.engine
+        spec = eng.specs[name]
+        lcfg = eng.leaf_cfg[name]
+        if self._layout.mode(name) == WIRE:
+            qf, sf = self._wire(name)
+            full = col.gather_wait_int8(qf, sf, lcfg, linear._dtype(lcfg))
+            return lax.slice(full, (0,), (spec.logical_size,)
+                             ).reshape(spec.shape)
         return self._p[name]
 
     def sub(self, params):
@@ -214,33 +238,37 @@ class ResidentView(ParamView):
 
 
 class ResidentServeEngine:
-    """ServeEngine twin that serves from resident TP weights."""
+    """ServeEngine twin that serves from the INT8 wire residency."""
 
     def __init__(self, model: ModelDef, engine: ZeroEngine, mesh: Mesh,
-                 shape: ShapeConfig, sc: ServeConfig | None = None):
+                 shape: ShapeConfig, sc: ServeConfig | None = None,
+                 res_axes: tuple[str, ...] | None = None):
         self.model = model
         self.engine = engine
         self.mesh = mesh
         self.shape = shape
         self.sc = sc or make_serve_config(mesh, shape.global_batch)
-        self.layout = ResidentLayout(
-            engine, model_axes(mesh),
-            math.prod(mesh.shape[a] for a in model_axes(mesh)))
+        if res_axes is None:
+            res_axes = default_res_axes(engine.cfg, mesh)
+        self.layout = ResidentLayout(engine, tuple(res_axes))
         self.axis_sizes = dict(mesh.shape)
 
     def abstract_params(self):
         return self.layout.abstract(self.mesh)
 
-    def _wrap(self, fn, extra_in, extra_out):
+    def _wrap(self, fn, extra_in, extra_out, donate=None):
         specs = self.layout.in_specs()
 
         def local(params, *args):
             view = ResidentView(self.layout, params)
             return fn(view, *args)
 
-        return jax.jit(shard_map(
-            local, mesh=self.mesh, in_specs=(specs,) + tuple(extra_in),
-            out_specs=extra_out, check_vma=False))
+        sm = shard_map(local, mesh=self.mesh,
+                       in_specs=(specs,) + tuple(extra_in),
+                       out_specs=extra_out, check_vma=False)
+        if donate:
+            return jax.jit(sm, donate_argnums=donate)
+        return jax.jit(sm)
 
     def make_prefill(self, seq_parallel: bool = False):
         m, sc = self.model, self.sc
@@ -251,14 +279,16 @@ class ResidentServeEngine:
         ba = sc.batch_axes_ if sc.batch_axes_ else None
         return self._wrap(fn, (bspecs,), (P(ba), cspecs))
 
-    def make_decode(self):
+    def make_decode(self, per_row_pos: bool = False):
         m, sc = self.model, self.sc
         shapes = m.decode_batch_shapes(self.shape)
+        if per_row_pos:
+            shapes["row_pos"] = ((self.shape.global_batch,), jnp.int32)
         bspecs = m.batch_pspecs(shapes, sc.batch_axes_)
         cspecs = m.cache_pspecs(self.shape, sc.batch_axes_, sc.seq_axes)
         fn = m.decode_fn(sc.seq_axes, self.axis_sizes)
         ba = sc.batch_axes_ if sc.batch_axes_ else None
-        return self._wrap(fn, (cspecs, bspecs), (P(ba), cspecs))
+        return self._wrap(fn, (cspecs, bspecs), (P(ba), cspecs), donate=(1,))
 
     def decode_inputs_sds(self):
         m, sc = self.model, self.sc
@@ -272,13 +302,13 @@ class ResidentServeEngine:
         shapes = self.model.prefill_batch_shapes(self.shape)
         return self.model.batch_sds(shapes, self.mesh, self.sc.batch_axes_)
 
-    def generate(self, resident_params, prompt_batch, n_tokens: int):
+    def generate(self, residency, prompt_batch, n_tokens: int):
+        """Greedy generation driver (CPU-testable): prefill then decode."""
         prefill = self.make_prefill()
         decode = self.make_decode()
-        logits, caches = prefill(resident_params, prompt_batch)
+        logits, caches = prefill(residency, prompt_batch)
         toks = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]
         for _ in range(n_tokens - 1):
-            logits, caches = decode(resident_params, caches,
-                                    {"token": toks[-1]})
+            logits, caches = decode(residency, caches, {"token": toks[-1]})
             toks.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
         return jnp.stack(toks, axis=1)

@@ -1,23 +1,34 @@
-"""Continuous batching: a slot-based request scheduler over the decode step.
+"""Continuous batching: an SLO-driven slot scheduler over the paged decode.
 
-vLLM-style serving shape at miniature scale: the server owns a fixed-B KV
-cache; incoming requests are prefilled into free slots (single-row prefill,
-cache row spliced in with one donated update), all active slots decode in
-lock-step, and finished rows (EOS or max-length) free their slot for the
-next queued request — no global pipeline flush when one request ends.
+vLLM-style serving shape at miniature scale: the server owns a paged KV
+pool (serve/paged.py); incoming requests are admitted into free slots under
+a latency SLO (queue-wait bound + KV-page headroom), prefilled with a
+single-row prefill on the model-tier axes, scattered into their pages with
+one donated jit call, and all active slots decode in lock-step — no global
+pipeline flush when one request ends, no cache reallocation ever
+(``_grow_seq`` survives only as the sequential reference's helper).
 
-Per-row positions: the engine-level cache keeps one scalar `pos`, which a
+Per-row positions: the engine-level cache keeps one scalar ``pos``, which a
 mixed-age batch can't share, so the scheduler tracks per-slot positions and
-(a) left-pads nothing — each prefill writes absolute positions 0..p-1 into
-its row, and (b) passes decode steps the *maximum* position while masking
-logits of inactive slots. Rows decode with their own causal masks because
-cache validity is position-based (flash_decode masks `kpos <= pos` per row
-via per-row `pos` — see `row_pos` plumbed through `batch`).
+passes decode steps per-row positions (``row_pos``); rows decode with their
+own causal masks because cache validity is position-based (flash_decode
+masks ``kpos <= pos`` per row).
 
-This module is CPU-runnable end-to-end (examples/continuous_batching.py).
+Prefill/decode disaggregation across the mesh tiers: prefill runs a B=1
+engine whose sequence dimension shards over the model-tier axes (optionally
+sequence-parallel), while decode batches slots over the data-tier axes —
+the same tier split the training schemes use for weight vs replica traffic.
+
+Two weight backends share the scheduler: ``"gathered"`` (the seed
+fp-materialized per-token weight gather, ``ServeEngine``) and
+``"resident"`` (the INT8 wire residency, ``ResidentServeEngine``) —
+``run(params, ...)`` takes the training primaries or the residency
+respectively. This module is CPU-runnable end-to-end
+(examples/continuous_batching.py).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -27,6 +38,8 @@ import numpy as np
 
 from ..models.config import ShapeConfig
 from .engine import ServeEngine
+from .paged import PagedKV
+from .resident import ResidentServeEngine
 
 
 @dataclass
@@ -36,98 +49,213 @@ class Request:
     max_new: int
     out: list[int] = field(default_factory=list)
     done: bool = False
+    rejected: bool = False             # dropped by the SLO queue-wait bound
+    submit_step: int = -1
+    t_submit: float = 0.0
+    t_first: float = 0.0               # first token emitted (admission)
+    t_done: float = 0.0
 
 
-def _splice(caches_dst, caches_src, slot: int):
-    """Copy batch row 0 of caches_src into row `slot` of caches_dst."""
-    def one(dst, src):
-        if dst.ndim == 0:
-            return dst
-        # batch dim is axis 1 for (L, B, ...) entries
-        row = jax.lax.dynamic_slice_in_dim(src, 0, 1, axis=1)
-        return jax.lax.dynamic_update_slice_in_dim(dst, row.astype(dst.dtype),
-                                                   slot, axis=1)
+@dataclass
+class ServeSLO:
+    """Deterministic admission policy + latency targets.
 
-    out = {}
-    for kind, entry in caches_dst.items():
-        if kind == "pos":
-            out[kind] = jnp.maximum(caches_dst["pos"], caches_src["pos"])
-            continue
-        out[kind] = jax.tree.map(one, entry, caches_src[kind])
-    return out
+    ``max_queue_steps``/``reserve_pages`` drive *step-count* decisions, so
+    admission/rejection/preemption counts are reproducible and baseline-
+    gateable; ``target_p99_ms`` is reporting-only (wall-clock is never
+    gated)."""
+    max_queue_steps: int = 0           # reject after N scheduler steps (0=off)
+    reserve_pages: int = 0             # keep N pages free when admitting
+    target_p99_ms: float = 0.0
+
+
+def _default_page(max_len: int) -> int:
+    return next(d for d in (16, 8, 4, 2, 1) if max_len % d == 0)
 
 
 class ContinuousBatcher:
-    """Fixed-slot continuous batching over ServeEngine steps."""
+    """SLO-driven continuous batching over the paged pool."""
 
     def __init__(self, model, engine, mesh, *, n_slots: int, max_len: int,
-                 prompt_len: int, eos_token: int = -1):
+                 prompt_len: int, eos_token: int = -1,
+                 page_size: int | None = None, n_pages: int = 0,
+                 slo: ServeSLO | None = None, backend: str = "gathered",
+                 res_axes: tuple[str, ...] | None = None,
+                 prefill_seq_parallel: bool = False, metrics=None):
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
         self.prompt_len = prompt_len
         self.eos = eos_token
-        self.serve = ServeEngine(model, engine, mesh,
-                                 ShapeConfig("cb", max_len, n_slots, "decode"))
-        self.serve1 = ServeEngine(model, engine, mesh,
-                                  ShapeConfig("cb1", prompt_len, 1, "decode"))
-        self._prefill1 = self.serve1.make_prefill()
+        self.slo = slo or ServeSLO()
+        self.backend = backend
+        self.metrics = metrics
+        shape = ShapeConfig("cb", max_len, n_slots, "decode")
+        shape1 = ShapeConfig("cb1", prompt_len, 1, "decode")
+        if backend == "resident":
+            self.serve = ResidentServeEngine(model, engine, mesh, shape,
+                                             res_axes=res_axes)
+            self.serve1 = ResidentServeEngine(model, engine, mesh, shape1,
+                                              res_axes=res_axes)
+        else:
+            assert backend == "gathered", backend
+            self.serve = ServeEngine(model, engine, mesh, shape)
+            self.serve1 = ServeEngine(model, engine, mesh, shape1)
+        self._prefill1 = self.serve1.make_prefill(
+            seq_parallel=prefill_seq_parallel)
         self._decode = self.serve.make_decode(per_row_pos=True)
+        self.paged = PagedKV(model, shape,
+                             page_size=page_size or _default_page(max_len),
+                             n_pages=n_pages)
+        self._paged_step = self._make_paged_step()
+        self._admit_scatter = jax.jit(self.paged.admit_scatter,
+                                      donate_argnums=(0,))
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: list[Request] = []
-        self.caches = None
+        self.pool = None
         self.last_tok = np.zeros((n_slots,), np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
+        self.admit_order = np.full((n_slots,), -1, np.int64)
+        self.step_count = 0
+        self.counters = dict(admitted=0, rejected=0, preempted=0, retired=0)
+        self._latencies_ms: list[float] = []
 
     # -- api -----------------------------------------------------------------
 
     def submit(self, req: Request):
+        req.submit_step = self.step_count
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
-    def _init_caches(self, primaries):
-        import jax.numpy as jnp
+    def _init_pool(self):
         sds = self.serve.decode_inputs_sds()[0]
+        self.pool = self.paged.init_pool(sds)
 
-        def zero(s):
-            return jnp.zeros(s.shape, s.dtype)
+    def _make_paged_step(self):
+        decode, paged = self._decode, self.paged
 
-        self.caches = jax.tree.map(zero, sds)
+        def step_fn(params, pool, table, token, row_pos, active):
+            dense = paged.assemble(pool, table)
+            logits, new_dense = decode(params, dense,
+                                       {"token": token, "row_pos": row_pos})
+            new_pool = paged.writeback(pool, new_dense, table, row_pos,
+                                       active)
+            return logits, new_pool
 
-    def _admit(self, primaries):
+        return jax.jit(step_fn, donate_argnums=(1,))
+
+    # -- admission / eviction -------------------------------------------------
+
+    def _reject_stale(self):
+        if not self.slo.max_queue_steps:
+            return
+        keep = []
+        for req in self.queue:
+            if self.step_count - req.submit_step > self.slo.max_queue_steps:
+                req.rejected = True
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.counters["rejected"] += 1
+            else:
+                keep.append(req)
+        self.queue = keep
+
+    def _can_admit(self) -> bool:
+        need = self.paged.pages_needed(self.prompt_len)
+        return self.paged.free_pages() - self.slo.reserve_pages >= need
+
+    def _admit(self, params):
+        n_pp = self.paged.pages_needed(self.prompt_len)
         for slot in range(self.n_slots):
             if self.slots[slot] is not None or not self.queue:
                 continue
+            if not self._can_admit():
+                break
             req = self.queue.pop(0)
             prompt = np.asarray(req.prompt, np.int32)[: self.prompt_len]
             if len(prompt) < self.prompt_len:   # bucket-pad short prompts
                 prompt = np.pad(prompt, (self.prompt_len - len(prompt),),
                                 mode="edge")
-            logits, c1 = self._prefill1(primaries,
+            logits, c1 = self._prefill1(params,
                                         {"tokens": jnp.asarray(prompt[None])})
-            # grow the single-row cache to the slot layout and splice
-            c1 = _grow_seq(c1, self.model, self.max_len)
-            self.caches = _splice(self.caches, c1, slot)
+            ok = self.paged.alloc_prefix(slot, self.prompt_len)
+            assert ok, "free-page check raced the allocator"
+            pages = jnp.asarray(self.paged.table[slot, :n_pp])
+            self.pool = self._admit_scatter(self.pool, c1,
+                                            jnp.int32(slot), pages)
             tok = int(jnp.argmax(logits[0]))
             req.out.append(tok)
+            req.t_first = time.perf_counter()
             self.slots[slot] = req
             self.last_tok[slot] = tok
             self.pos[slot] = self.prompt_len
+            self.admit_order[slot] = self.counters["admitted"]
+            self.counters["admitted"] += 1
 
-    def step(self, primaries) -> int:
-        """Admit + one decode step for all active slots. Returns #active."""
-        if self.caches is None:
-            self._init_caches(primaries)
-        self._admit(primaries)
+    def _preempt_youngest(self) -> int | None:
+        """Evict the most recently admitted slot back to the queue front."""
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
+            return None
+        victim = max(active, key=lambda i: self.admit_order[i])
+        req = self.slots[victim]
+        req.out.clear()                 # restarts from its prompt
+        req.submit_step = self.step_count   # wait clock restarts on requeue
+        self.queue.insert(0, req)
+        self.slots[victim] = None
+        self.paged.release(victim)
+        self.admit_order[victim] = -1
+        self.counters["preempted"] += 1
+        return victim
+
+    def _grow_pages(self):
+        """Lazily allocate the page each active slot is about to write."""
+        for slot in range(self.n_slots):
+            if self.slots[slot] is None:
+                continue
+            block = int(self.pos[slot]) // self.paged.page_size
+            while not self.paged.alloc(slot, block):
+                victim = self._preempt_youngest()
+                if victim is None or victim == slot:
+                    break
+            # a preempted slot (victim == slot) simply skips this step
+
+    def _retire(self, slot: int):
+        req = self.slots[slot]
+        req.done = True
+        req.t_done = time.perf_counter()
+        self._latencies_ms.append((req.t_done - req.t_submit) * 1e3)
+        self.counters["retired"] += 1
+        self.slots[slot] = None
+        self.admit_order[slot] = -1
+        self.paged.release(slot)
+
+    # -- stepping -------------------------------------------------------------
+
+    def step(self, params) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        t0 = time.perf_counter()
+        if self.pool is None:
+            self._init_pool()
+        self._reject_stale()
+        t_admit0 = time.perf_counter()
+        self._admit(params)
+        self._grow_pages()
+        t_admit = time.perf_counter() - t_admit0
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        self.step_count += 1
+        if not active:
+            self._emit_metrics(0, time.perf_counter() - t0, t_admit, 0.0)
             return 0
-        # every row decodes at its own position (per-row rope, masks and
-        # cache writes); inactive rows write harmlessly at their stale pos
-        logits, self.caches = self._decode(
-            primaries, self.caches,
-            {"token": jnp.asarray(self.last_tok),
-             "row_pos": jnp.asarray(self.pos)})
+        mask = np.zeros((self.n_slots,), bool)
+        mask[active] = True
+        t_dec0 = time.perf_counter()
+        logits, self.pool = self._paged_step(
+            params, self.pool, self.paged.device_table(),
+            jnp.asarray(self.last_tok), jnp.asarray(self.pos),
+            jnp.asarray(mask))
         toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        t_dec = time.perf_counter() - t_dec0
         for i in active:
             req = self.slots[i]
             tok = int(toks[i])
@@ -136,22 +264,55 @@ class ContinuousBatcher:
             self.pos[i] += 1
             if tok == self.eos or len(req.out) >= req.max_new \
                     or int(self.pos[i]) >= self.max_len - 1:
-                req.done = True
-                self.slots[i] = None
+                self._retire(i)
+        self._emit_metrics(len(active), time.perf_counter() - t0,
+                           t_admit, t_dec)
         return len(active)
 
-    def run(self, primaries, requests: list[Request], max_steps: int = 10_000):
+    def _emit_metrics(self, n_active: int, dt_s: float, t_admit: float,
+                      t_dec: float):
+        if self.metrics is None:
+            return
+        lat = np.asarray(self._latencies_ms) if self._latencies_ms else None
+        self.metrics.write(dict(
+            step=self.step_count, tokens=n_active, dt_s=dt_s,
+            tokens_per_s=(n_active / dt_s if dt_s > 0 else 0.0),
+            queue_depth=len(self.queue), active_slots=n_active,
+            admitted=self.counters["admitted"],
+            rejected=self.counters["rejected"],
+            preempted=self.counters["preempted"],
+            retired=self.counters["retired"],
+            free_pages=self.paged.free_pages(),
+            p50_ms=(float(np.percentile(lat, 50)) if lat is not None
+                    else 0.0),
+            p99_ms=(float(np.percentile(lat, 99)) if lat is not None
+                    else 0.0),
+            phase_ms={"serve_admit": t_admit * 1e3,
+                      "serve_decode": t_dec * 1e3}))
+
+    def run(self, params, requests: list[Request], max_steps: int = 10_000):
         for r in requests:
             self.submit(r)
         steps = 0
         while (any(self.slots) or self.queue) and steps < max_steps:
-            self.step(primaries)
+            self.step(params)
             steps += 1
         return requests
 
+    def latency_percentiles(self) -> dict[str, float]:
+        if not self._latencies_ms:
+            return {"p50_ms": 0.0, "p99_ms": 0.0}
+        lat = np.asarray(self._latencies_ms)
+        return {"p50_ms": float(np.percentile(lat, 50)),
+                "p99_ms": float(np.percentile(lat, 99))}
+
 
 def _grow_seq(caches, model, new_len: int):
-    """Zero-pad position-indexed cache seq dims to the server's max_len."""
+    """Zero-pad position-indexed cache seq dims to a larger max_len.
+
+    The paged pool made this obsolete in the serving path; it survives as
+    the sequential reference's helper (tests/test_scheduler.py) and for
+    one-off cache surgery."""
     from ..models.transformer import kind_meta
     arch = model.arch
     out = {}

@@ -285,3 +285,153 @@ def tflops_per_device(cfg: ZeroConfig, topo: Topology, wl: Workload) -> float:
     c = step_cost(cfg, topo, wl)
     tokens_per_device = wl.n_microbatch * wl.tokens_per_device_mb
     return 6.0 * wl.psi * tokens_per_device / c.step_s(wl.hidden_fraction) / 1e12
+
+
+# ---------------------------------------------------------------------------
+# serving cost model (DESIGN.md §12)
+#
+# One continuous-batching decode step prices three traffic classes:
+#
+#   res_gather — per-token re-materialization of the weights from the
+#                residency partition: the INT8 wire shards (1 + 4/Q B/param)
+#                all-gathered over the residency axes per layer
+#                (collectives.gather_residency_q -> the fused dequant matmul),
+#                or the fp-materialized gather (compute-dtype B/param) for the
+#                seed "gathered" backend;
+#   act_psum   — per-layer activation allreduce of each slot's single-token
+#                row over the residency/model axes (collectives.
+#                activation_psum in the decode shard_map);
+#   kv_pages   — HBM traffic of the paged pool: the page-table gather reads
+#                every live context position once per step and the writeback
+#                scatters one new position per active slot (serve/paged.py).
+#
+# Weights are read from HBM once per step regardless of batch, so arithmetic
+# intensity (2*psi*slots flops over weight+KV bytes) grows with the live
+# batch — the knob the SLO admission controls. Residency memory reuses the
+# partition.resident_memory_bytes accounting: wire bytes shrink with the
+# residency degree while res_gather traffic grows with it — the serving
+# analog of the training weight-axes trade the planner already ranks.
+
+SERVE_PHASES = ("res_gather", "act_psum")
+
+
+@dataclass(frozen=True)
+class ServeWorkload:
+    """What one continuous-batching decode step does, per device."""
+    psi: float                         # total model parameters
+    n_layers: int = 44                 # decode layer-loop trip count
+    d_model: int = 6144                # activation width (act_psum volume)
+    n_slots: int = 8                   # live decode rows (the batch)
+    context: int = 1024                # mean live context per slot, tokens
+    max_len: int = 2048                # pool provisioning length per slot
+    kv_bytes_per_token: float = 0.0    # all-layer KV bytes per token;
+    # 0 estimates a GQA-quarter-width cache (serve_workload_for_model fills
+    # the exact figure from model.cache_shapes)
+    page_size: int = 16
+    quant_block: int = 64
+
+    def kv_token_bytes(self) -> float:
+        if self.kv_bytes_per_token:
+            return self.kv_bytes_per_token
+        return 2 * (self.d_model / 4) * 2 * self.n_layers
+
+
+def serve_wire_bytes(psi: float, quant_block: int, res_degree: int, *,
+                     resident: bool = True) -> float:
+    """Per-device weight bytes held by the serving path.
+
+    Resident: the INT8 wire shard, 1 B/param + 4/Q B/param of f32 scales,
+    over the residency degree (matches partition.resident_memory_bytes).
+    Gathered: the seed fp-materialized path keeps bf16 primaries."""
+    per_param = (1 + 4 / max(quant_block, 1)) if resident else 2
+    return psi * per_param / max(res_degree, 1)
+
+
+def serve_phase_volumes(wl: ServeWorkload, res_degree: int, *,
+                        resident: bool = True) -> dict[str, float]:
+    """Network bytes per device per decode step, plus the KV HBM traffic."""
+    deg = max(res_degree, 1)
+    shard = serve_wire_bytes(wl.psi, wl.quant_block, deg, resident=resident)
+    gather = shard * (deg - 1)
+    # per-layer single-token-row allreduce (2x the RS volume), bf16 rows
+    psum = 2 * (2 * wl.d_model * wl.n_slots) * wl.n_layers \
+        * (deg - 1) / deg if deg > 1 else 0.0
+    kv_read = wl.kv_token_bytes() * wl.context * wl.n_slots
+    kv_write = wl.kv_token_bytes() * wl.n_slots
+    return dict(res_gather=gather, act_psum=psum,
+                kv_pages=kv_read + kv_write,
+                total=gather + psum + kv_read + kv_write)
+
+
+def serve_memory_bytes(wl: ServeWorkload, res_degree: int, *,
+                       resident: bool = True) -> dict[str, float]:
+    """Per-device serving-state bytes: wire residency + the paged pool."""
+    weights = serve_wire_bytes(wl.psi, wl.quant_block, res_degree,
+                               resident=resident)
+    kv = wl.kv_token_bytes() * wl.max_len * wl.n_slots
+    return dict(weights=weights, kv_pool=kv, total=weights + kv)
+
+
+@dataclass(frozen=True)
+class ServeStepCost:
+    """Predicted cost of one continuous-batching decode step."""
+    comm_s: dict[str, float]
+    volumes: dict[str, float]
+    hbm_s: float                       # weight + KV-page HBM traffic
+    compute_s: float
+    memory: dict[str, float]
+    fits: bool
+    n_slots: int
+
+    @property
+    def comm_total_s(self) -> float:
+        return sum(self.comm_s.values())
+
+    @property
+    def memory_total(self) -> float:
+        return self.memory["total"]
+
+    def step_s(self) -> float:
+        # decode is bandwidth-bound: HBM streaming and compute overlap,
+        # the per-layer collectives are latency-dominated and exposed
+        return max(self.compute_s, self.hbm_s) + self.comm_total_s
+
+    def tokens_per_s(self) -> float:
+        return self.n_slots / self.step_s()
+
+    def arithmetic_intensity(self) -> float:
+        """flops per HBM byte — grows with the live batch (weights are read
+        once per step regardless of how many slots decode)."""
+        bytes_touched = self.memory["weights"] + self.volumes["kv_pages"]
+        return 2.0 * self._psi * self.n_slots / max(bytes_touched, 1.0)
+
+    _psi: float = 0.0
+
+
+def serve_step_cost(topo: Topology, wl: ServeWorkload,
+                    res_axes: tuple[str, ...], *, resident: bool = True,
+                    memory_budget: float | None = None) -> ServeStepCost:
+    """Price one decode step with the wire residency sharded over
+    ``res_axes`` (empty = fully replicated wire, no per-token gather)."""
+    deg = 1
+    sizes = dict(topo.axis_sizes)
+    for a in res_axes:
+        deg *= sizes[a]
+    vols = serve_phase_volumes(wl, deg, resident=resident)
+    comm = {}
+    for phase in SERVE_PHASES:
+        if not res_axes or deg <= 1:
+            comm[phase] = 0.0
+            continue
+        wire = vols[phase] / topo.bandwidth(res_axes)
+        hops = (deg - 1) * topo.latency(res_axes)
+        # both phases run once per layer inside the decode loop
+        comm[phase] = wire + wl.n_layers * hops
+    mem = serve_memory_bytes(wl, deg, resident=resident)
+    hbm = (mem["weights"] + vols["kv_pages"]) / topo.hbm_bw
+    compute = 2.0 * wl.psi * wl.n_slots / topo.flops_per_device
+    budget = topo.hbm_bytes if memory_budget is None else memory_budget
+    return ServeStepCost(comm_s=comm, volumes=vols, hbm_s=hbm,
+                         compute_s=compute, memory=mem,
+                         fits=mem["total"] <= budget, n_slots=wl.n_slots,
+                         _psi=wl.psi)

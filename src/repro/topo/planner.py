@@ -30,7 +30,8 @@ import math
 from dataclasses import dataclass
 
 from ..core.partition import ZeroAxes, ZeroConfig, preset
-from .cost import StepCost, Workload, step_cost
+from .cost import (ServeStepCost, ServeWorkload, StepCost, Workload,
+                   serve_step_cost, step_cost)
 from .model import Topology, load_topology
 
 
@@ -206,6 +207,84 @@ def replan_from_checkpoint(ckpt: str, topo: Topology, *,
                           top_k=top_k)
 
 
+@dataclass(frozen=True)
+class ServePlan:
+    """One serving layout: residency axes x backend (DESIGN.md §12)."""
+    res_axes: tuple[str, ...]
+    resident: bool
+    cost: ServeStepCost
+    tok_s: float
+
+    @property
+    def label(self) -> str:
+        ax = "+".join(self.res_axes) if self.res_axes else "-"
+        return f"res={ax} {'int8-wire' if self.resident else 'fp-gathered'}"
+
+
+def serve_workload_for_model(model_name: str, *, n_slots: int = 8,
+                             context: int = 1024, max_len: int = 2048,
+                             page_size: int = 16,
+                             quant_block: int = 64) -> ServeWorkload:
+    """Serving workload from a registered architecture, with the exact
+    all-layer KV bytes/token taken from ``model.cache_shapes`` (the same
+    source of truth the paged pool provisions from)."""
+    from ..models.config import ShapeConfig
+    from ..models.registry import build_model, get_arch, list_archs
+    names = {n.replace("-", "_").replace(".", "_"): n for n in list_archs()}
+    canon = model_name.replace("-", "_").replace(".", "_")
+    if canon not in names and model_name not in list_archs():
+        raise SystemExit(f"unknown model {model_name!r}; "
+                         f"known: {', '.join(list_archs())}")
+    arch = get_arch(names.get(canon, model_name))
+    model = build_model(arch)
+    import numpy as np
+    shape = ShapeConfig("plan", max_len, n_slots, "decode")
+    kv_per_tok = 0.0
+    for entry in model.cache_shapes(shape).values():
+        for (shp, dtype, seq_shard) in entry.values():
+            if seq_shard:   # (count, b, s, *tail): bytes/token = count * tail
+                kv_per_tok += shp[0] * math.prod(shp[3:]) \
+                    * np.dtype(dtype).itemsize
+    return ServeWorkload(psi=float(model.param_count()),
+                         n_layers=arch.n_layers, d_model=arch.d_model,
+                         n_slots=n_slots, context=context, max_len=max_len,
+                         kv_bytes_per_token=kv_per_tok, page_size=page_size,
+                         quant_block=quant_block)
+
+
+def plan_serve(topo: Topology, wl: ServeWorkload, *,
+               memory_budget: float | None = None,
+               top_k: int | None = None) -> list[ServePlan]:
+    """Rank serving layouts: every residency axis-prefix x backend.
+
+    The trade is the serving analog of the training weight axes: a larger
+    residency degree shrinks per-device wire bytes but pays the per-layer
+    re-gather on every decoded token. Fitting layouts rank first, then by
+    predicted tokens/s (descending), then by memory."""
+    axes = topo.axis_names
+    out = []
+    for i in range(len(axes) + 1):
+        for resident in (True, False):
+            c = serve_step_cost(topo, wl, axes[:i], resident=resident,
+                                memory_budget=memory_budget)
+            out.append(ServePlan(axes[:i], resident, c, c.tokens_per_s()))
+    out.sort(key=lambda p: (not p.cost.fits, -p.tok_s, p.cost.memory_total))
+    return out[:top_k] if top_k else out
+
+
+def format_serve_plans(plans: list[ServePlan], top_k: int = 8) -> str:
+    rows = [f"{'#':>3s} {'tok/s':>10s} {'step(ms)':>9s} {'comm(ms)':>9s} "
+            f"{'mem/dev':>9s} {'AI':>7s} {'fits':>4s}  layout"]
+    for r, p in enumerate(plans[:top_k], 1):
+        rows.append(
+            f"{r:3d} {p.tok_s:10.1f} {p.cost.step_s() * 1e3:9.3f} "
+            f"{p.cost.comm_total_s * 1e3:9.3f} "
+            f"{p.cost.memory_total / 1e9:8.2f}G "
+            f"{p.cost.arithmetic_intensity():7.1f} "
+            f"{'y' if p.cost.fits else 'N':>4s}  {p.label}")
+    return "\n".join(rows)
+
+
 def format_plans(plans: list[Plan], presets: dict[str, Plan] | None = None,
                  top_k: int = 8) -> str:
     rows = [f"{'#':>3s} {'step(s)':>9s} {'comm(s)':>9s} {'mem/dev':>9s} "
@@ -252,6 +331,20 @@ def build_parser():
                          "grad memory at os-shard layout")
     ap.add_argument("--save-topology", default="",
                     help="write the resolved topology JSON here and exit")
+    ap.add_argument("--serve", action="store_true",
+                    help="rank SERVING layouts instead of training schemes: "
+                         "residency axis-prefixes x {int8-wire, fp-gathered} "
+                         "priced by per-token gather/dequant volume, KV-page "
+                         "traffic, and batch-dependent arithmetic intensity "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="live decode slots (serve workload batch)")
+    ap.add_argument("--context", type=int, default=1024,
+                    help="mean live context per slot, tokens (serve)")
+    ap.add_argument("--max-len", type=int, default=2048,
+                    help="paged-pool provisioning length per slot (serve)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size in tokens (serve)")
     return ap
 
 
@@ -264,6 +357,27 @@ def main(argv=None):
         print(topo.save(args.save_topology))
         return 0
     budget = args.budget_gb * 1e9 if args.budget_gb else None
+    if args.serve:
+        swl = serve_workload_for_model(
+            args.model, n_slots=args.slots, context=args.context,
+            max_len=args.max_len, page_size=args.page_size)
+        plans_s = plan_serve(topo, swl, memory_budget=budget)
+        print(f"topology {topo.name}: " + ", ".join(
+            f"{l.name}({l.size}) {l.bandwidth / 1e9:.0f}GB/s {l.tier}"
+            for l in topo.links) + f"  [{topo.n_devices} devices]")
+        print(f"serve workload: psi={swl.psi / 1e9:.1f}B params, "
+              f"{swl.n_layers} layers, {swl.n_slots} slots x "
+              f"{swl.context} ctx (max {swl.max_len}), "
+              f"{swl.kv_token_bytes() / 1e3:.1f}KB KV/token, "
+              f"page={swl.page_size}")
+        print(format_serve_plans(plans_s, top_k=args.top))
+        best = plans_s[0]
+        print(f"serve: residency over {best.label} — adopt with "
+              f"`repro.launch.serve --backend "
+              f"{'resident' if best.resident else 'gathered'}"
+              + (f" --res-axes {','.join(best.res_axes)}`"
+                 if best.res_axes else "`"))
+        return 0
     if args.replan_from:
         meta, wl, plans = replan_from_checkpoint(
             args.replan_from, topo, memory_budget=budget,

@@ -673,8 +673,9 @@ def multipod_mesh():
 
 
 def resident_and_sp():
-    """8-device: resident TP serving and sequence-parallel prefill both
-    reproduce the replicated ZeRO-serving results."""
+    """8-device: the dense-fallback residency (unquantized engine) and
+    sequence-parallel prefill both reproduce the ZeRO-serving results
+    BITWISE — the residency stores exactly the training gather's output."""
     from repro.core.engine import TrainHparams, ZeroEngine
     from repro.launch.mesh import scheme_config
     from repro.models.config import ShapeConfig
@@ -688,8 +689,10 @@ def resident_and_sp():
         model = build_model(arch)
         cfg = scheme_config("zero_topo", mesh, quant_block=64,
                             compute_dtype="float32")
-        cfg = dataclasses.replace(cfg, quantize_weights=False,
-                                  quantize_grads=False)
+        cfg = dataclasses.replace(
+            cfg, quantize_weights=False, quantize_grads=False,
+            axes=dataclasses.replace(cfg.axes, secondary=None))
+        cfg.validate_dependency_rule()
         eng = ZeroEngine(model.leaf_specs(), cfg, mesh, TrainHparams())
         state = eng.init_state(jax.random.key(0))
         rng = np.random.default_rng(0)
@@ -698,21 +701,17 @@ def resident_and_sp():
                                        jnp.int32)}
         shape = ShapeConfig("t", 32, b, "decode")
         se = ServeEngine(model, eng, mesh, shape)
-        layout, resident = build_resident(eng, state, mesh, ("node", "gcd"),
-                                          dtype=jnp.float32)
-        rse = ResidentServeEngine(model, eng, mesh, shape)
-        # tolerance floor: the MoE dispatch einsums run in bf16, so 8-way
-        # psum/gather reordering shows up at ~1e-3
+        layout, resident = build_resident(eng, state, mesh)
+        rse = ResidentServeEngine(model, eng, mesh, shape,
+                                  res_axes=layout.res_axes)
         l0, c0 = se.make_prefill()(state["primaries"], batch)
         l1, c1 = rse.make_prefill()(resident, batch)
-        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
-                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
         d0, d1 = se.make_decode(), rse.make_decode()
         for t in rng.integers(0, arch.vocab, (3, b)).astype(np.int32):
             l0, c0 = d0(state["primaries"], c0, {"token": jnp.asarray(t)})
             l1, c1 = d1(resident, c1, {"token": jnp.asarray(t)})
-            np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
-                                       rtol=2e-3, atol=2e-3)
+            np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
 
         # SP prefill (attention-family only)
         if model.lm.sp_eligible():
@@ -723,6 +722,71 @@ def resident_and_sp():
             np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
                                        rtol=2e-4, atol=2e-4)
     print("SCENARIO_OK resident_and_sp")
+
+
+def serve_resident_quant_equivalence():
+    """THE serving acceptance scenario (DESIGN.md §12), 8 devices: the INT8
+    wire-resident path — residency built from the training engine's shards,
+    decode through the fused ``dequant_matmul`` — produces prefill logits
+    and greedy decode tokens BITWISE identical to the fp training forward
+    at matching quant config, under BOTH kernel impls; and the two impls
+    agree bitwise with each other (the §5 contract, end to end through
+    prefill + decode)."""
+    from repro.core.engine import TrainHparams, ZeroEngine
+    from repro.kernels import ops
+    from repro.models.config import ShapeConfig
+    from repro.models.registry import build_model, get_arch
+    from repro.serve.engine import ServeEngine
+    from repro.serve.resident import ResidentServeEngine, build_resident
+
+    mesh = _mesh()
+    rng = np.random.default_rng(2)
+    prev_impl = ops.get_default_impl()
+    out = {}
+    try:
+        for name in ("qwen2-0.5b", "mixtral-8x7b"):
+            arch = get_arch(name).reduced(n_layers=2, d_model=128, vocab=256)
+            model = build_model(arch)
+            prompt = rng.integers(0, arch.vocab, (4, 24), dtype=np.int32)
+            shape = ShapeConfig("t", 32, 4, "decode")
+            for impl in ("jnp", "pallas_interpret"):
+                ops.set_default_impl(impl)
+                ops.reset_dispatch_counters()
+                cfg = _cfg("zero_topo", mesh, compute_dtype="float32",
+                           impl=impl)
+                assert cfg.quantize_weights
+                eng = ZeroEngine(model.leaf_specs(), cfg, mesh,
+                                 TrainHparams())
+                state = eng.init_state(jax.random.key(0))
+                se = ServeEngine(model, eng, mesh, shape)
+                l_ref, _ = se.make_prefill()(state["primaries"],
+                                             {"tokens": jnp.asarray(prompt)})
+                t_ref = se.generate(state, {"tokens": jnp.asarray(prompt)}, 6)
+                layout, resident = build_resident(eng, state, mesh)
+                assert layout.res_degree > 1, layout.res_axes
+                rse = ResidentServeEngine(model, eng, mesh, shape,
+                                          res_axes=layout.res_axes)
+                l_res, _ = rse.make_prefill()(resident,
+                                              {"tokens": jnp.asarray(prompt)})
+                t_res = rse.generate(resident, {"tokens": jnp.asarray(prompt)},
+                                     6)
+                np.testing.assert_array_equal(np.asarray(l_ref),
+                                              np.asarray(l_res),
+                                              err_msg=f"{name}/{impl}")
+                np.testing.assert_array_equal(np.asarray(t_ref),
+                                              np.asarray(t_res),
+                                              err_msg=f"{name}/{impl}")
+                counts = ops.dispatch_counters()
+                assert counts.get(f"dequant_matmul/{impl}", 0) > 0, \
+                    (name, impl, counts)
+                out[(name, impl)] = (np.asarray(l_res), np.asarray(t_res))
+            lj, tj = out[(name, "jnp")]
+            lp, tp = out[(name, "pallas_interpret")]
+            np.testing.assert_array_equal(lj, lp, err_msg=name)
+            np.testing.assert_array_equal(tj, tp, err_msg=name)
+    finally:
+        ops.set_default_impl(prev_impl)
+    print("SCENARIO_OK serve_resident_quant_equivalence")
 
 
 def obs_trace_equivalence():
@@ -932,7 +996,9 @@ SCENARIOS = dict(collectives=collectives,
                  serve_sharded=serve_sharded,
                  hlo_census_real=hlo_census_real,
                  multipod_mesh=multipod_mesh,
-                 resident_and_sp=resident_and_sp)
+                 resident_and_sp=resident_and_sp,
+                 serve_resident_quant_equivalence=(
+                     serve_resident_quant_equivalence))
 
 if __name__ == "__main__":
     SCENARIOS[sys.argv[1]]()

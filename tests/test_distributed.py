@@ -14,6 +14,7 @@ SCENARIOS = ["collectives", "reshard_roundtrip",
              "stream_grads_equivalence",
              "dp_vs_single", "serve_sharded",
              "hlo_census_real", "multipod_mesh", "resident_and_sp",
+             "serve_resident_quant_equivalence",
              "obs_trace_equivalence"]
 
 

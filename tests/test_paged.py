@@ -1,0 +1,146 @@
+"""Paged KV pool: page-table admission/eviction invariants, SLO rejection,
+and preemption under oversubscription (the deterministic step-count census
+the serve benchmark gates; full request-storm run in benchmarks/serve_load)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import TrainHparams, ZeroEngine
+from repro.launch.mesh import make_test_mesh, scheme_config
+from repro.models.config import ShapeConfig
+from repro.models.registry import build_model, get_arch
+from repro.serve.paged import PagedKV, seq_entry_keys
+from repro.serve.scheduler import ContinuousBatcher, Request, ServeSLO
+
+AX = ("data", "node", "gcd")
+
+
+def _setup(name="qwen2-0.5b"):
+    mesh = make_test_mesh(shape=(1, 1, 1), axes=AX)
+    arch = get_arch(name).reduced()
+    model = build_model(arch)
+    cfg = scheme_config("zero_topo", mesh, quant_block=64,
+                        compute_dtype="float32")
+    eng = ZeroEngine(model.leaf_specs(), cfg, mesh, TrainHparams())
+    state = eng.init_state(jax.random.key(0))
+    return mesh, arch, model, eng, state
+
+
+def _paged(model, n_slots=3, max_len=16, page=4, n_pages=0):
+    return PagedKV(model, ShapeConfig("p", max_len, n_slots, "decode"),
+                   page_size=page, n_pages=n_pages)
+
+
+def test_page_accounting():
+    """alloc / alloc_prefix / release keep table, owner, and free list
+    consistent, fail cleanly on exhaustion, and never leak pages."""
+    _, _, model, _, _ = _setup()
+    pk = _paged(model, n_slots=3, max_len=16, page=4, n_pages=5)
+    assert pk.blocks_per_slot == 4
+    assert pk.pages_needed(1) == 1 and pk.pages_needed(4) == 1 \
+        and pk.pages_needed(5) == 2
+    assert pk.free_pages() == 5
+
+    assert pk.alloc_prefix(0, 8)          # two pages for slot 0
+    assert (pk.table[0, :2] >= 0).all() and (pk.table[0, 2:] < 0).all()
+    assert pk.free_pages() == 3
+    assert pk.alloc(0, 1)                 # idempotent: already allocated
+    assert pk.free_pages() == 3
+    assert all(pk.owner[pk.table[0, b]] == 0 for b in range(2))
+
+    # slot 1 wants 4 pages but only 3 are free: refuse without side effects
+    assert not pk.alloc_prefix(1, 16)
+    assert (pk.table[1] < 0).all() and pk.free_pages() == 3
+
+    assert pk.alloc_prefix(1, 12)         # exactly the remaining 3
+    assert pk.free_pages() == 0
+    assert not pk.alloc(2, 0)             # exhausted
+
+    # unallocated / inactive entries redirect to the sink page
+    dt = np.asarray(pk.device_table())
+    assert (dt[2] == pk.n_pages).all() and (dt[0, 2:] == pk.n_pages).all()
+    assert (dt[0, :2] < pk.n_pages).all()
+
+    pk.release(0)
+    assert pk.free_pages() == 2 and (pk.table[0] < 0).all()
+    assert (pk.owner >= 0).sum() == 3     # slot 1 still holds its pages
+    pk.release(1)
+    assert pk.free_pages() == 5 and (pk.owner < 0).all()
+
+
+def test_pageable_entries():
+    """Sequence-indexed entries page; O(1)-per-slot entries stay dense."""
+    _, _, model, _, _ = _setup("falcon-mamba-7b")
+    shape = ShapeConfig("p", 16, 2, "decode")
+    # mamba caches are all O(1) per slot: nothing to page
+    assert not seq_entry_keys(model, shape)
+    _, _, model, _, _ = _setup("qwen2-0.5b")
+    keys = seq_entry_keys(model, shape)
+    assert keys and all(k in ("k", "v", "lat") for _, k in keys)
+
+
+def test_slo_rejection():
+    """Queue-wait bound: with one slot and long decodes, late requests are
+    deterministically rejected, and every request ends exactly once."""
+    mesh, arch, model, eng, state = _setup()
+    rng = np.random.default_rng(2)
+    slo = ServeSLO(max_queue_steps=3)
+    cb = ContinuousBatcher(model, eng, mesh, n_slots=1, max_len=32,
+                           prompt_len=8, slo=slo)
+    reqs = [Request(rid=i, prompt=rng.integers(0, arch.vocab, 8)
+                    .astype(np.int32), max_new=8) for i in range(6)]
+    cb.run(state["primaries"], reqs)
+    c = cb.counters
+    assert all(r.done for r in reqs)
+    assert c["rejected"] > 0
+    assert c["rejected"] + c["retired"] == len(reqs)
+    assert c["admitted"] == c["retired"] + c["preempted"]
+    assert all(r.out == [] for r in reqs if r.rejected)
+    assert not cb.queue
+
+
+def test_preemption_oversubscription():
+    """n_pages < slots * blocks_per_slot: lazy growth runs the free list dry
+    mid-decode, the youngest slot is evicted (pages released, output reset,
+    requeued at the front) and later finishes; the pool never leaks."""
+    mesh, arch, model, eng, state = _setup()
+    rng = np.random.default_rng(3)
+    cb = ContinuousBatcher(model, eng, mesh, n_slots=3, max_len=16,
+                           prompt_len=4, page_size=4,
+                           # 3 slots admit on 1 page each; each then needs a
+                           # 2nd page mid-decode -> 4 pages can't hold 3x2
+                           n_pages=4,
+                           slo=ServeSLO(max_queue_steps=50))
+    reqs = [Request(rid=i, prompt=rng.integers(0, arch.vocab, 4)
+                    .astype(np.int32), max_new=8) for i in range(4)]
+    cb.run(state["primaries"], reqs)
+    c = cb.counters
+    assert all(r.done for r in reqs)
+    assert c["preempted"] > 0
+    assert c["rejected"] + c["retired"] == len(reqs)
+    assert c["admitted"] == c["retired"] + c["preempted"]
+    # drained: every page back on the free list, no owners, sink table
+    assert cb.paged.free_pages() == cb.paged.n_pages
+    assert (cb.paged.owner < 0).all() and (cb.paged.table < 0).all()
+    retired = [r for r in reqs if not r.rejected]
+    assert all(1 <= len(r.out) <= r.max_new for r in retired)
+
+
+def test_paged_matches_unpaged_batcher():
+    """Fully-provisioned paged pool == oversubscribed pool that never
+    actually preempts: the page layout cannot change the tokens."""
+    mesh, arch, model, eng, state = _setup()
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, arch.vocab, 8).astype(np.int32)
+               for _ in range(3)]
+
+    def run(n_pages):
+        cb = ContinuousBatcher(model, eng, mesh, n_slots=2, max_len=24,
+                               prompt_len=8, page_size=4, n_pages=n_pages)
+        reqs = [Request(rid=i, prompt=p, max_new=5)
+                for i, p in enumerate(prompts)]
+        cb.run(state["primaries"], reqs)
+        assert cb.counters["preempted"] == 0
+        return [list(r.out) for r in reqs]
+
+    assert run(0) == run(12)   # 0 = fully provisioned; 12 = exactly enough
